@@ -1,0 +1,80 @@
+"""Checkpoint save/restore bandwidth — the paper's workload embedded in the
+framework: a real (reduced) model state round-trips through every
+interface x object-class x layout combination, measuring modeled GiB/s and
+verifying bit-exact restore + checksums.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch, smoke_variant       # noqa: E402
+from repro.core import Pool, Topology, bandwidth        # noqa: E402
+from repro.core.interfaces import DFS                   # noqa: E402
+from repro.ckpt import Checkpointer                     # noqa: E402
+from repro.models import init_model, param_count        # noqa: E402
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+
+
+def bench_one(params, interface: str, oclass: str, layout: str,
+              n_writers: int = 16) -> dict:
+    pool = Pool(Topology(), materialize=True)
+    cont = pool.create_container("ck", oclass=oclass)
+    dfs = DFS(cont)
+    ck = Checkpointer(dfs, interface=interface, oclass=oclass,
+                      layout=layout, n_writers=n_writers)
+    nbytes = tree_bytes(params)
+    with pool.sim.phase() as wph:
+        ck.save(0, params)
+    with pool.sim.phase() as rph:
+        back = ck.restore(0, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    return {"interface": interface, "oclass": oclass, "layout": layout,
+            "mib": round(nbytes / 2**20, 1),
+            "save_gib_s": round(bandwidth(nbytes, wph.elapsed), 2),
+            "restore_gib_s": round(bandwidth(nbytes, rph.elapsed), 2)}
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--interfaces", nargs="+",
+                    default=["dfs", "posix", "hdf5", "daos-array"])
+    ap.add_argument("--classes", nargs="+", default=["S2", "SX", "EC_4P1"])
+    ap.add_argument("--layouts", nargs="+", default=["sharded", "shared"])
+    ap.add_argument("--out", default=str(ARTIFACTS / "ckpt_bench.json"))
+    args = ap.parse_args(argv)
+
+    cfg = smoke_variant(get_arch(args.arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    print(f"model: {args.arch} (smoke, {param_count(params):,} params)")
+    rows = []
+    for layout in args.layouts:
+        for oclass in args.classes:
+            for iface in args.interfaces:
+                r = bench_one(params, iface, oclass, layout)
+                rows.append(r)
+                print(f"{layout:8s} {oclass:8s} {iface:12s} "
+                      f"save {r['save_gib_s']:7.2f} GiB/s  "
+                      f"restore {r['restore_gib_s']:7.2f} GiB/s")
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Metadata-rate benchmark (mdtest-style; the IO-500 md workload the paper
+cites as DAOS's strength).
+
+Creates/stats/unlinks N small files per process through each interface.
+DAOS's advantage is structural — directory entries are KV records on the
+*data-path engines* (scaling with engine count), vs a single-MDS model —
+so we also print the single-MDS Lustre-model rate for contrast.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import Pool, Topology                   # noqa: E402
+from repro.core.baselines import LustreModel            # noqa: E402
+from repro.core.interfaces import DFS, make_interface   # noqa: E402
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def bench(interface: str, clients: int, ppn: int, files_pp: int) -> dict:
+    topo = Topology(n_client_nodes=clients, procs_per_client_node=ppn)
+    pool = Pool(topo, materialize=True)
+    cont = pool.create_container("md", oclass="S1")
+    dfs = DFS(cont, dir_oclass="S1")
+    iface = make_interface(interface, dfs)
+    n = clients * ppn * files_pp
+
+    with pool.sim.phase() as cph:
+        for node in range(clients):
+            for p in range(ppn):
+                rank = node * ppn + p
+                dfs.mkdir(f"/md{rank}")
+                for i in range(files_pp):
+                    iface.create(f"/md{rank}/f{i}", client_node=node,
+                                 process=rank)
+    with pool.sim.phase() as sph:
+        for node in range(clients):
+            for p in range(ppn):
+                rank = node * ppn + p
+                for i in range(files_pp):
+                    iface.stat(f"/md{rank}/f{i}", client_node=node,
+                               process=rank)
+    with pool.sim.phase() as uph:
+        for node in range(clients):
+            for p in range(ppn):
+                rank = node * ppn + p
+                for i in range(files_pp):
+                    iface.unlink(f"/md{rank}/f{i}", client_node=node,
+                                 process=rank)
+    return {"interface": interface, "clients": clients, "ppn": ppn,
+            "create_s-1": round(n / cph.elapsed),
+            "stat_s-1": round(n / sph.elapsed),
+            "unlink_s-1": round(n / uph.elapsed)}
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interfaces", nargs="+", default=["dfs", "posix"])
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--ppn", type=int, default=4)
+    ap.add_argument("--files-pp", type=int, default=100)
+    ap.add_argument("--out", default=str(ARTIFACTS / "mdtest.json"))
+    args = ap.parse_args(argv)
+    rows = []
+    for iface in args.interfaces:
+        r = bench(iface, args.clients, args.ppn, args.files_pp)
+        rows.append(r)
+        print(f"{iface:10s} create {r['create_s-1']:>9,}/s  "
+              f"stat {r['stat_s-1']:>9,}/s  unlink {r['unlink_s-1']:>9,}/s")
+    lm = LustreModel()
+    mds_rate = round(1.0 / lm.mds_op_time)
+    print(f"{'lustre-mds':10s} create {mds_rate:>9,}/s  (single-MDS ceiling)")
+    rows.append({"interface": "lustre-mds", "create_s-1": mds_rate})
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

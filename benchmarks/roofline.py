@@ -1,0 +1,81 @@
+"""Roofline table: reads the dry-run artifacts (launch/dryrun.py output) and
+prints per-(arch x shape x mesh) the three terms, the dominant bottleneck,
+and MODEL_FLOPS/HLO_FLOPs.  The perf log in EXPERIMENTS.md §Perf is built
+from the same JSONs (tag != baseline rows are hillclimb iterations).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(tag: str | None = None, mesh: str | None = None) -> list[dict]:
+    rows = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if tag and r.get("tag") != tag:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    t = r["roofline"]
+    dom = t["dominant"].replace("_s", "")
+    return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:10.4f}  {dom:10s} "
+            f"{t['model_flops_ratio']:8.3f}  {r.get('tag', '')}")
+
+
+def print_table(rows: list[dict]) -> None:
+    print(f"{'arch':24s} {'shape':12s} {'mesh':8s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s}  "
+          f"{'dominant':10s} {'mf_ratio':>8s}  tag")
+    for r in rows:
+        print(fmt_row(r))
+
+
+def summarize(rows: list[dict]) -> dict:
+    doms: dict[str, int] = {}
+    for r in rows:
+        d = r["roofline"]["dominant"]
+        doms[d] = doms.get(d, 0) + 1
+    worst = sorted(
+        (r for r in rows if r["kind"] == "train"),
+        key=lambda r: r["roofline"]["model_flops_ratio"])[:3]
+    most_coll = sorted(
+        rows, key=lambda r: -(r["roofline"]["collective_s"]
+                              / max(1e-12, sum(
+                                  r["roofline"][k] for k in
+                                  ("compute_s", "memory_s",
+                                   "collective_s")))))[:3]
+    return {"dominant_histogram": doms,
+            "worst_mf_ratio": [(r["arch"], r["shape"]) for r in worst],
+            "most_collective_bound": [(r["arch"], r["shape"])
+                                      for r in most_coll]}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--all-tags", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(None if args.all_tags else args.tag, args.mesh)
+    if not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print_table(rows)
+    print("\nsummary:", json.dumps(summarize(rows), indent=1))
+
+
+if __name__ == "__main__":
+    main()

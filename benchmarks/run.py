@@ -1,0 +1,79 @@
+"""Benchmark driver: one section per paper table/figure + framework perf.
+
+  ior       — Fig. 1 / Fig. 2 reproduction (+ Lustre baseline + C1..C5)
+  mdtest    — metadata rates (IO-500 md reference)
+  ckpt      — checkpoint save/restore bandwidth across interfaces/classes
+  kernels   — Pallas kernel micro-bench (us/call, interpret mode)
+  roofline  — dry-run roofline table (requires launch/dryrun.py artifacts)
+
+Prints ``name,us_per_call,derived`` CSV lines for the micro-benches and the
+full tables for the paper figures.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def _section(title: str) -> None:
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+
+
+def bench_kernels() -> None:
+    import numpy as np
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, 1 << 20, dtype=np.uint8)
+    x = rng.normal(size=(1024, 1024)).astype(np.float32)
+    for name, fn, derived in [
+        ("checksum_1MiB", lambda: ops.checksum_array(data), "MiB/s"),
+        ("quantize_1M_f32", lambda: ops.quantize(x), "elems/s"),
+        ("shard_pack_1MiB_w16",
+         lambda: ops.shard_pack(data, width=16, cell_bytes=65536), "MiB/s"),
+    ]:
+        fn()  # warm up / compile
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            fn()
+        us = (time.perf_counter() - t0) / n * 1e6
+        print(f"{name},{us:.1f},{derived}")
+    print("# note: interpret-mode timings (CPU executes the kernel body); "
+          "TPU perf comes from the roofline analysis")
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+
+    if only in (None, "ior"):
+        _section("IOR easy/hard (paper Fig. 1 & 2) + Lustre baseline")
+        from benchmarks import ior
+        ior.main(["--clients", "1", "2", "4", "8", "16"])
+
+    if only in (None, "mdtest"):
+        _section("mdtest metadata rates")
+        from benchmarks import mdtest
+        mdtest.main([])
+
+    if only in (None, "ckpt"):
+        _section("checkpoint save/restore bandwidth")
+        from benchmarks import ckpt_bench
+        ckpt_bench.main([])
+
+    if only in (None, "kernels"):
+        _section("Pallas kernel micro-bench")
+        bench_kernels()
+
+    if only in (None, "roofline"):
+        _section("dry-run roofline table (16x16 baseline)")
+        from benchmarks import roofline
+        roofline.main(["--mesh", "16x16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""The paper's experiment, runnable: IOR easy/hard across interfaces and
+object classes, with the Lustre-model contrast and the §IV claims check.
+
+    PYTHONPATH=src python examples/ior_study.py            # full matrix
+    PYTHONPATH=src python examples/ior_study.py --quick    # 3 client counts
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import ior
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    clients = ["1", "4", "16"] if quick else ["1", "2", "4", "8", "16"]
+    rows = ior.main(["--clients", *clients])
+    checks = ior.check_claims(rows)
+    bad = [n for n, ok, _ in checks if not ok]
+    if bad:
+        raise SystemExit(f"paper claims FAILED: {bad}")
+    print("\nall paper claims (C1..C5) reproduced.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Serving demo: batched prefill+decode, with the model weights pulled from
+an object-store checkpoint and the KV cache offloaded/restored through the
+DAOS-model array API between "sessions" (the paper's fine-grained-I/O use
+case).
+
+    PYTHONPATH=src python examples/serve_kvcache.py
+"""
+import dataclasses
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.core import Pool, Topology, bandwidth
+from repro.core.interfaces import DFS, make_interface
+from repro.ckpt import Checkpointer
+from repro.models import init_model
+from repro.serve import make_decode_step, make_prefill_step
+
+
+def tree_bytes(t):
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(t))
+
+
+def main() -> None:
+    cfg = dataclasses.replace(smoke_variant(get_arch("chatglm3-6b")),
+                              vocab_size=256)
+    key = jax.random.PRNGKey(0)
+
+    pool = Pool(Topology())
+    dfs = DFS(pool.create_container("serve", oclass="S2"))
+
+    # publish weights to the store; the serving fleet restores from there
+    trained = init_model(key, cfg)
+    ck = Checkpointer(dfs, interface="dfs", oclass="RP_2GX", n_writers=8)
+    ck.save(0, trained)
+    params = jax.tree.map(jnp.asarray, ck.restore(0, trained))
+    print(f"weights via object store: {tree_bytes(params) / 2**20:.1f} MiB")
+
+    # batched requests: prefill a prompt batch, decode greedily
+    B, S = 4, 24
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    prefill = jax.jit(make_prefill_step(cfg, pad_to=S + 16))
+    decode = jax.jit(make_decode_step(cfg))
+    logits, cache = prefill(params, {"tokens": prompts})
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for t in range(8):
+        tok, lg, cache = decode(params, cache, tok,
+                                jnp.asarray(S + t, jnp.int32))
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    print("generated tokens:\n", np.asarray(gen))
+
+    # offload the KV cache between sessions through the array API
+    iface = make_interface("daos-array", dfs)
+    flat, tree = jax.tree.flatten(cache)
+    with pool.sim.phase() as ph:
+        for i, leaf in enumerate(flat):
+            h = iface.create(f"/kvcache/sess0/leaf{i}", client_node=i % 8,
+                             process=i)
+            h.write_at(0, np.asarray(leaf))
+    nbytes = sum(np.asarray(x).nbytes for x in flat)
+    print(f"kv cache offload: {nbytes / 2**20:.1f} MiB at "
+          f"{bandwidth(nbytes, ph.elapsed):.1f} GiB/s (modeled)")
+
+    restored = []
+    for i, leaf in enumerate(flat):
+        h = iface.open(f"/kvcache/sess0/leaf{i}")
+        raw = np.asarray(h.read_at(0, np.asarray(leaf).nbytes))
+        arr = raw.view(np.asarray(leaf).dtype).reshape(leaf.shape)
+        restored.append(jnp.asarray(arr))
+    cache2 = jax.tree.unflatten(tree, restored)
+
+    # decoding from the restored cache must continue identically
+    t1, _, _ = decode(params, cache, tok, jnp.asarray(S + 8, jnp.int32))
+    t2, _, _ = decode(params, cache2, tok, jnp.asarray(S + 8, jnp.int32))
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+    print("restored KV cache decodes identically — session resumed.")
+
+
+if __name__ == "__main__":
+    main()

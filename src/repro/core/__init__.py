@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: a DAOS-model distributed object
+store (pools / containers / objects, object classes S1..SX, RAFT-lite
+metadata, epoch transactions, event queues, end-to-end integrity,
+replication + erasure coding) with a calibrated performance model standing in
+for the Optane/fabric hardware the paper benchmarks."""
+from .engine import Engine, EngineFailedError, NoSpaceError, NotFoundError
+from .events import Event, EventQueue
+from .integrity import ChecksumError, checksum, verify
+from .layout import (ObjectClass, StripeLayout, get_class, jump_hash,
+                     oid_for, place_object)
+from .object import ArrayObject, IOCtx, KVObject
+from .pool import Pool
+from .container import Container
+from .raft import NoQuorumError, NotLeaderError, RaftGroup
+from .redundancy import DataLossError
+from .simnet import HWProfile, IOSim, PROFILES, Topology, bandwidth
+from .transactions import Transaction, TxStateError
+
+__all__ = [
+    "ArrayObject", "ChecksumError", "Container", "DataLossError", "Engine",
+    "EngineFailedError", "Event", "EventQueue", "HWProfile", "IOCtx", "IOSim",
+    "KVObject", "NoQuorumError", "NoSpaceError", "NotFoundError",
+    "NotLeaderError", "ObjectClass", "PROFILES", "Pool", "RaftGroup",
+    "StripeLayout", "Topology", "Transaction", "TxStateError", "bandwidth",
+    "checksum", "get_class", "jump_hash", "oid_for", "place_object", "verify",
+]

@@ -1,0 +1,3 @@
+from .lustre import LustreModel
+
+__all__ = ["LustreModel"]

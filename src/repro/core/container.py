@@ -1,0 +1,124 @@
+"""Containers: the transaction/epoch domain inside a pool.
+
+A container owns an object namespace, the committed-epoch watermark that makes
+transactions atomic, snapshots, and the per-object metadata (class, size,
+rebuild overrides).  Durable metadata mutations (create, snapshot, tx commit,
+layout overrides) go through the pool's RAFT group; the epoch allocator and
+size cache are client-side state, as in DAOS.
+"""
+from __future__ import annotations
+
+import itertools
+
+from . import layout as _layout
+from .object import ArrayObject, KVObject
+from .transactions import Transaction
+
+
+class Container:
+    def __init__(self, pool, label: str, default_oclass: str = "SX",
+                 stripe_cell: int = 1 << 20) -> None:
+        self.pool = pool
+        self.label = label
+        self.default_oclass = default_oclass
+        self.stripe_cell = stripe_cell
+        self._epoch_alloc = itertools.count(1)
+        self._committed = 0
+        self._sizes: dict[int, int] = {}
+        self._oclasses: dict[int, str] = {}
+        self._overrides: dict[int, dict[int, int]] = {}  # oid -> {dead: new}
+        self.snapshots: list[int] = []
+
+    # ------------- epochs / transactions -------------
+    @property
+    def committed_epoch(self) -> int:
+        return self._committed
+
+    def alloc_epoch(self) -> int:
+        return next(self._epoch_alloc)
+
+    def auto_epoch(self) -> int:
+        """Independent (non-tx) updates are immediately visible."""
+        e = self.alloc_epoch()
+        self._committed = max(self._committed, e)
+        return e
+
+    def tx_begin(self) -> Transaction:
+        return Transaction(self)
+
+    def commit_tx(self, tx: Transaction) -> None:
+        self._committed = max(self._committed, tx.epoch)
+        self.pool.raft.set(("cont_epoch", self.label), self._committed)
+
+    def abort_tx(self, tx: Transaction) -> int:
+        dropped = 0
+        for eid in tx.touched_engines:
+            eng = self.pool.engines[eid]
+            if eng.alive:
+                dropped += eng.punch_epoch(tx.epoch)
+        return dropped
+
+    def snapshot(self) -> int:
+        """Persist the current committed epoch as a named snapshot."""
+        snap = self._committed
+        self.snapshots.append(snap)
+        self.pool.raft.set(("cont_snap", self.label, len(self.snapshots)), snap)
+        return snap
+
+    # ------------- objects -------------
+    def _resolve_class(self, oclass: str | _layout.ObjectClass | None
+                       ) -> _layout.ObjectClass:
+        if oclass is None:
+            oclass = self.default_oclass
+        if isinstance(oclass, str):
+            oclass = _layout.get_class(oclass)
+        return oclass
+
+    def open_array(self, name: str, oclass=None,
+                   stripe_cell: int | None = None) -> ArrayObject:
+        oc = self._resolve_class(oclass)
+        oid = _layout.oid_for(name)
+        self._oclasses.setdefault(oid, oc.name)
+        return ArrayObject(self, name, oid, oc,
+                           stripe_cell or self.stripe_cell)
+
+    def open_kv(self, name: str, oclass=None) -> KVObject:
+        oc = self._resolve_class(oclass)
+        oid = _layout.oid_for(name)
+        self._oclasses.setdefault(oid, oc.name)
+        return KVObject(self, name, oid, oc, self.stripe_cell)
+
+    # ------------- placement (incl. rebuild overrides) -------------
+    def layout_for(self, oid: int, oclass: _layout.ObjectClass,
+                   stripe_cell: int) -> _layout.StripeLayout:
+        base = _layout.place_object(
+            oid, oclass, self.pool.all_engine_ids(),
+            map_version=self.pool.base_map_version,
+            stripe_cell=stripe_cell,
+            node_of={e: self.pool.engines[e].node_id
+                     for e in self.pool.all_engine_ids()})
+        over = self._overrides.get(oid)
+        if not over:
+            return base
+        targets = tuple(over.get(t, t) for t in base.targets)
+        return _layout.StripeLayout(oid=base.oid, oclass=base.oclass,
+                                    targets=targets,
+                                    stripe_cell=base.stripe_cell)
+
+    def set_override(self, oid: int, dead: int, replacement: int) -> None:
+        self._overrides.setdefault(oid, {})[dead] = replacement
+        self.pool.raft.set(("cont_override", self.label, oid, dead),
+                           replacement)
+
+    # ------------- object metadata -------------
+    def object_size(self, oid: int) -> int:
+        return self._sizes.get(oid, 0)
+
+    def set_object_size(self, oid: int, size: int) -> None:
+        self._sizes[oid] = size
+
+    def object_class_of(self, oid: int) -> str | None:
+        return self._oclasses.get(oid)
+
+    def known_oids(self) -> list[int]:
+        return list(self._oclasses)

@@ -1,0 +1,74 @@
+"""Event queues — DAOS-style non-blocking I/O.
+
+Every DAOS API call can run asynchronously against an event queue
+(daos_eq_create / daos_event_test / daos_eq_poll).  The checkpointer uses this
+to overlap checkpoint serialisation + store writes with the next training
+steps.  Implementation: a thread pool per queue; an Event is a future with
+DAOS test/poll semantics.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+from typing import Any, Callable
+
+
+class Event:
+    def __init__(self, future: _fut.Future) -> None:
+        self._future = future
+
+    def test(self) -> bool:
+        """Non-blocking completion probe (daos_event_test)."""
+        return self._future.done()
+
+    def wait(self, timeout: float | None = None) -> Any:
+        return self._future.result(timeout)
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._future.exception() if self._future.done() else None
+
+
+class EventQueue:
+    """daos_eq_*: submit async ops, poll for completions."""
+
+    def __init__(self, depth: int = 8) -> None:
+        self._pool = _fut.ThreadPoolExecutor(max_workers=depth,
+                                             thread_name_prefix="repro-eq")
+        self._inflight: list[Event] = []
+
+    def submit(self, fn: Callable, /, *args, **kwargs) -> Event:
+        ev = Event(self._pool.submit(fn, *args, **kwargs))
+        self._inflight.append(ev)
+        return ev
+
+    def poll(self) -> list[Event]:
+        """Return (and retire) completed events."""
+        done = [e for e in self._inflight if e.test()]
+        self._inflight = [e for e in self._inflight if not e.test()]
+        return done
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Wait for everything in flight; re-raise the first error."""
+        errs = []
+        for e in list(self._inflight):
+            try:
+                e.wait(timeout)
+            except BaseException as exc:  # noqa: BLE001 — surfaced below
+                errs.append(exc)
+        self._inflight.clear()
+        if errs:
+            raise errs[0]
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    def close(self) -> None:
+        self.drain()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "EventQueue":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,92 @@
+"""Common surface for the paper's access mechanisms.
+
+Every interface exposes file create/open/read/write and manufactures the
+``IOCtx`` that encodes *what using it costs* (fuse crossings, sync chains,
+fragmentation, metadata chatter).  The IOR harness drives all of them through
+this one surface, exactly like IOR's ``-a DFS|POSIX|MPIIO|HDF5`` backends.
+"""
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+from ..object import ArrayObject, IOCtx
+
+
+class FileHandle:
+    """An open file: thin view over an ArrayObject with interface costs."""
+
+    def __init__(self, iface: "AccessInterface", obj: ArrayObject,
+                 ctx: IOCtx) -> None:
+        self.iface = iface
+        self.obj = obj
+        self.ctx = ctx
+        self.offset = 0
+        self.closed = False
+
+    # -- explicit-offset ops (what IOR uses) --------------------------------
+    def write_at(self, offset: int, data) -> int:
+        return self.obj.write(offset, data, ctx=self.ctx)
+
+    def read_at(self, offset: int, size: int) -> np.ndarray:
+        return self.obj.read(offset, size, ctx=self.ctx)
+
+    def write_sized_at(self, offset: int, nbytes: int) -> int:
+        return self.obj.write_sized(offset, nbytes, ctx=self.ctx)
+
+    def read_sized_at(self, offset: int, nbytes: int) -> int:
+        return self.obj.read_sized(offset, nbytes, ctx=self.ctx)
+
+    # -- streaming ops (POSIX style) -----------------------------------------
+    def seek(self, offset: int) -> None:
+        self.offset = offset
+
+    def write(self, data) -> int:
+        n = self.write_at(self.offset, data)
+        self.offset += n
+        return n
+
+    def read(self, size: int) -> np.ndarray:
+        out = self.read_at(self.offset, size)
+        self.offset += len(out)
+        return out
+
+    @property
+    def size(self) -> int:
+        return self.obj.size
+
+    def close(self) -> None:
+        self.closed = True
+
+
+class AccessInterface(abc.ABC):
+    """One of the paper's access mechanisms over a DFS namespace."""
+
+    name: str = "?"
+
+    def __init__(self, dfs) -> None:
+        self.dfs = dfs
+
+    @abc.abstractmethod
+    def make_ctx(self, client_node: int = 0, process: int = 0,
+                 transfer_bytes: int = 0) -> IOCtx:
+        """The cost profile of one I/O call through this interface."""
+
+    def create(self, path: str, oclass=None, client_node: int = 0,
+               process: int = 0) -> FileHandle:
+        ctx = self.make_ctx(client_node, process)
+        obj = self.dfs.create_file(path, oclass=oclass, ctx=ctx)
+        return FileHandle(self, obj, ctx)
+
+    def open(self, path: str, client_node: int = 0,
+             process: int = 0) -> FileHandle:
+        ctx = self.make_ctx(client_node, process)
+        obj = self.dfs.open_file(path, ctx=ctx)
+        return FileHandle(self, obj, ctx)
+
+    def unlink(self, path: str, client_node: int = 0, process: int = 0) -> None:
+        self.dfs.unlink(path, ctx=self.make_ctx(client_node, process))
+
+    def stat(self, path: str, client_node: int = 0, process: int = 0) -> dict:
+        return self.dfs.stat(path, ctx=self.make_ctx(client_node, process))

@@ -1,0 +1,45 @@
+"""DFuse — the POSIX mount of a DAOS container.
+
+DFuse runs one user-space daemon per client node; every POSIX call crosses
+the kernel (VFS -> FUSE -> daemon -> libdfs).  Costs modeled, calibrated
+against published DFuse measurements:
+
+* per-op kernel crossing + daemon dispatch latency (``lat_per_op``),
+* transfers fragmented to the FUSE max transfer size (1 MiB),
+* all traffic of a node shares the daemon's streaming capacity
+  (``HWProfile.fuse_bw``) and pays daemon CPU per op (``fuse_op_time``),
+* synchronous: a POSIX read/write blocks the caller (no queue depth).
+
+DAOS also supports an interception library (libioil / libpil4dfs) that
+bounces data-path calls back to user space — exposed here as
+``intercept=True``, which removes the fuse data path while keeping POSIX
+semantics (metadata still goes through the mount). That is the tuning DAOS
+docs recommend and a natural beyond-paper datapoint.
+"""
+from __future__ import annotations
+
+from ..object import IOCtx
+from .base import AccessInterface
+
+FUSE_MAX_TRANSFER = 1 << 20  # 1 MiB
+
+
+class POSIXInterface(AccessInterface):
+    name = "posix"
+
+    def __init__(self, dfs, intercept: bool = False) -> None:
+        super().__init__(dfs)
+        self.intercept = intercept
+        if intercept:
+            self.name = "posix-ioil"
+
+    def make_ctx(self, client_node: int = 0, process: int = 0,
+                 transfer_bytes: int = 0) -> IOCtx:
+        if self.intercept:
+            # data path intercepted to libdfs in user space: near-DFS cost
+            return IOCtx(client_node=client_node, process=process,
+                         lat_per_op=8e-6, sync=True)
+        return IOCtx(client_node=client_node, process=process,
+                     lat_per_op=55e-6,          # VFS+FUSE round trip
+                     via_fuse=True, sync=True,
+                     frag_bytes=FUSE_MAX_TRANSFER)

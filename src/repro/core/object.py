@@ -1,0 +1,429 @@
+"""DAOS objects: the byte-array API and the key-value API (libdaos level).
+
+An object is identified by a 64-bit oid and placed on engines by its object
+class (``layout.place_object``).  Two access models, mirroring libdaos:
+
+* ``ArrayObject`` — a sparse byte array striped over the object's targets in
+  ``stripe_cell``-sized cells (daos_array_*).  Supports replication (RP_k,
+  degraded reads) and XOR erasure coding (EC_kP1, reconstruction).
+* ``KVObject`` — dkey/akey records; dkeys hash onto shards (daos_kv_* /
+  daos_obj_update).
+
+Every data op records its flows into the pool's ``IOSim`` with the caller's
+``IOCtx`` (client node / process / interface overheads) — that is how the
+IOR harness measures "bandwidth" on a CPU-only container while still moving
+the real bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import layout as _layout
+from . import redundancy
+from .engine import Engine, EngineFailedError, NotFoundError
+
+
+@dataclasses.dataclass
+class IOCtx:
+    """Where an I/O call comes from + what the interface layer costs."""
+    client_node: int = 0
+    process: int = 0
+    lat_per_op: float = 0.0     # interface-added client latency per RPC
+    proc_bw_cap: float = 0.0    # per-process stream cap (DFuse), 0 = none
+    op_multiplier: float = 1.0  # extra RPC inflation (HDF5 metadata chatter)
+    via_fuse: bool = False      # routed through the client node's dfuse daemon
+    sync: bool = True           # synchronous per-op chain (POSIX-style)
+    frag_bytes: int = 0         # interface fragments transfers (fuse 1 MiB,
+                                # HDF5 chunk size); 0 = no fragmentation
+
+
+DEFAULT_CTX = IOCtx()
+
+
+class _ObjectBase:
+    def __init__(self, container, name: str, oid: int,
+                 oclass: _layout.ObjectClass, stripe_cell: int) -> None:
+        self.container = container
+        self.pool = container.pool
+        self.name = name
+        self.oid = oid
+        self.oclass = oclass
+        self.stripe_cell = stripe_cell
+
+    # placement with rebuild overrides applied
+    def _layout(self) -> _layout.StripeLayout:
+        return self.container.layout_for(self.oid, self.oclass,
+                                         self.stripe_cell)
+
+    def _engine(self, engine_id: int) -> Engine:
+        return self.pool.engines[engine_id]
+
+    def _key(self, dkey, akey) -> tuple:
+        return (self.container.label, self.oid, dkey, akey)
+
+    def _record_flows(self, per_engine: dict, direction: str,
+                      ctx: IOCtx) -> None:
+        for eid, (nbytes, nops, cell) in per_engine.items():
+            if ctx.frag_bytes:
+                nops = max(nops, -(-nbytes // ctx.frag_bytes))
+                cell = min(cell, ctx.frag_bytes)
+            self.pool.sim.record(
+                client_node=ctx.client_node, process=ctx.process,
+                engine=eid, direction=direction, nbytes=nbytes,
+                nops=max(1, int(round(nops * ctx.op_multiplier))),
+                cell_bytes=cell, client_lat_per_op=ctx.lat_per_op,
+                proc_bw_cap=ctx.proc_bw_cap, via_fuse=ctx.via_fuse,
+                sync=ctx.sync)
+
+
+class ArrayObject(_ObjectBase):
+    """daos_array_*: striped byte array with optional RP/EC protection."""
+
+    # ---------------- placement helpers ----------------
+    def _data_width(self, lay: _layout.StripeLayout) -> int:
+        if self.oclass.ec_data:
+            return max(1, lay.width - self.oclass.ec_parity)
+        return lay.width
+
+    def _cell_engines(self, lay: _layout.StripeLayout, cell_no: int):
+        """Engines holding this data cell (replicas) or (data, parity, lane)
+        info for EC."""
+        if self.oclass.ec_data:
+            k = self._data_width(lay)
+            group, lane = divmod(cell_no, k)
+            width = lay.width
+            data_eng = lay.targets[(group + lane) % width]
+            parity_eng = lay.targets[(group + k) % width]
+            return data_eng, parity_eng, group, lane, k
+        return lay.replicas_for_chunk(cell_no)
+
+    # ---------------- size metadata ----------------
+    @property
+    def size(self) -> int:
+        return self.container.object_size(self.oid)
+
+    def _grow(self, new_end: int) -> None:
+        self.container.set_object_size(self.oid,
+                                       max(self.size, new_end))
+
+    # ---------------- write ----------------
+    def write(self, offset: int, data, epoch: int | None = None,
+              ctx: IOCtx = DEFAULT_CTX) -> int:
+        """Write bytes at offset. Returns bytes written."""
+        buf = np.asarray(
+            np.frombuffer(data, np.uint8) if isinstance(data, (bytes, bytearray,
+                                                               memoryview))
+            else np.ascontiguousarray(data).view(np.uint8).reshape(-1))
+        if epoch is None:
+            epoch = self.container.auto_epoch()
+        lay = self._layout()
+        cell = self.stripe_cell
+        per_engine: dict[int, list] = {}
+        pos = 0
+        n = buf.size
+        while pos < n:
+            abs_off = offset + pos
+            cell_no, in_cell = divmod(abs_off, cell)
+            take = min(cell - in_cell, n - pos)
+            payload = buf[pos:pos + take]
+            full = self._rmw_cell(lay, cell_no, in_cell, payload, epoch)
+            if self.oclass.ec_data:
+                self._write_cell_ec(lay, cell_no, full, epoch, per_engine)
+            else:
+                wrote = 0
+                last_err: Exception | None = None
+                for eid in self._cell_engines(lay, cell_no):
+                    try:  # degraded write: skip dead replicas (rebuild
+                        # restores redundancy later)
+                        self._engine(eid).update(self._key("arr", cell_no),
+                                                 full, epoch)
+                    except EngineFailedError as e:
+                        last_err = e
+                        continue
+                    wrote += 1
+                    acc = per_engine.setdefault(eid, [0, 0, cell])
+                    acc[0] += take
+                    acc[1] += 1
+                if not wrote:
+                    raise redundancy.DataLossError(
+                        f"object {self.name}: no live replica for cell "
+                        f"{cell_no}") from last_err
+            pos += take
+        # one RPC per engine per call batches the cells (DAOS IOD semantics):
+        for eid, acc in per_engine.items():
+            acc[1] = max(1, acc[1] // 4)   # IOD batching of cell descriptors
+        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
+                           "write", ctx)
+        self._grow(offset + n)
+        return n
+
+    def _rmw_cell(self, lay, cell_no: int, in_cell: int, payload: np.ndarray,
+                  epoch: int) -> np.ndarray:
+        """Read-modify-write for partial cells (returns the full cell)."""
+        cell = self.stripe_cell
+        if in_cell == 0 and payload.size == cell:
+            return payload
+        try:
+            old = self._read_cell(lay, cell_no, float(epoch))
+        except (NotFoundError, KeyError):
+            old = b""
+        base = np.zeros(max(in_cell + payload.size, len(old)), np.uint8)
+        if old:
+            base[: len(old)] = np.frombuffer(old, np.uint8)
+        base[in_cell: in_cell + payload.size] = payload
+        return base
+
+    def _write_cell_ec(self, lay, cell_no: int, full: np.ndarray, epoch: int,
+                       per_engine: dict) -> None:
+        data_eng, parity_eng, group, lane, k = self._cell_engines(lay, cell_no)
+        self._engine(data_eng).update(self._key("arr", cell_no), full, epoch)
+        acc = per_engine.setdefault(data_eng, [0, 0, self.stripe_cell])
+        acc[0] += full.size
+        acc[1] += 1
+        # recompute group parity from the cells present at this epoch
+        cells = []
+        for ln in range(k):
+            cn = group * k + ln
+            try:
+                cells.append(self._fetch_raw(self._cell_engines(lay, cn)[0],
+                                             cn, float(epoch)))
+            except (NotFoundError, KeyError, EngineFailedError):
+                pass
+        parity = redundancy.xor_parity(cells, self.stripe_cell)
+        self._engine(parity_eng).update(self._key("par", group), parity, epoch)
+        pacc = per_engine.setdefault(parity_eng, [0, 0, self.stripe_cell])
+        pacc[0] += len(parity)
+        pacc[1] += 1
+
+    # ---------------- read ----------------
+    def _fetch_raw(self, eid: int, cell_no: int, max_epoch: float) -> bytes:
+        rec = self._engine(eid).fetch(self._key("arr", cell_no), max_epoch)
+        return rec.data if rec.data is not None else b"\0" * rec.length
+
+    def _read_cell(self, lay, cell_no: int, max_epoch: float) -> bytes:
+        if self.oclass.ec_data:
+            data_eng, parity_eng, group, lane, k = self._cell_engines(lay,
+                                                                      cell_no)
+            try:
+                return self._fetch_raw(data_eng, cell_no, max_epoch)
+            except EngineFailedError:
+                return self._reconstruct_ec(lay, cell_no, max_epoch)
+        last_err: Exception | None = None
+        for eid in self._cell_engines(lay, cell_no):
+            try:
+                return self._fetch_raw(eid, cell_no, max_epoch)
+            except EngineFailedError as e:
+                last_err = e  # degraded read: next replica
+        if last_err is not None:
+            raise redundancy.DataLossError(
+                f"object {self.name}: cell {cell_no} unrecoverable "
+                f"({self.oclass.name}, all replicas down)") from last_err
+        raise NotFoundError((self.oid, cell_no))
+
+    def _reconstruct_ec(self, lay, cell_no: int, max_epoch: float) -> bytes:
+        data_eng, parity_eng, group, lane, k = self._cell_engines(lay, cell_no)
+        survivors = []
+        lost_len = self.stripe_cell
+        for ln in range(k):
+            if ln == lane:
+                continue
+            cn = group * k + ln
+            eng = self._cell_engines(lay, cn)[0]
+            try:
+                survivors.append(self._fetch_raw(eng, cn, max_epoch))
+            except (NotFoundError, KeyError):
+                pass  # absent cell == zeros, XOR identity
+        try:
+            parity_rec = self._engine(parity_eng).fetch(
+                self._key("par", group), max_epoch)
+        except (EngineFailedError, NotFoundError) as e:
+            raise redundancy.DataLossError(
+                f"object {self.name}: cell {cell_no} and its parity are both "
+                "unavailable") from e
+        parity = (parity_rec.data if parity_rec.data is not None
+                  else b"\0" * parity_rec.length)
+        return redundancy.reconstruct(survivors, parity, self.stripe_cell,
+                                      lost_len)
+
+    def read(self, offset: int, size: int, epoch: float | None = None,
+             ctx: IOCtx = DEFAULT_CTX) -> np.ndarray:
+        """Read bytes [offset, offset+size) visible at the snapshot epoch."""
+        if epoch is None:
+            epoch = float(self.container.committed_epoch)
+        lay = self._layout()
+        cell = self.stripe_cell
+        out = np.zeros(size, np.uint8)
+        per_engine: dict[int, list] = {}
+        pos = 0
+        while pos < size:
+            abs_off = offset + pos
+            cell_no, in_cell = divmod(abs_off, cell)
+            take = min(cell - in_cell, size - pos)
+            try:
+                raw = self._read_cell(lay, cell_no, epoch)
+                chunk = np.frombuffer(raw, np.uint8)
+                avail = chunk[in_cell: in_cell + take]
+                out[pos: pos + avail.size] = avail
+            except (NotFoundError, KeyError):
+                pass  # sparse hole reads as zeros
+            eid = self._cell_engines(lay, cell_no)[0]
+            acc = per_engine.setdefault(eid, [0, 0, cell])
+            acc[0] += take
+            acc[1] += 1
+            pos += take
+        for eid, acc in per_engine.items():
+            acc[1] = max(1, acc[1] // 4)
+        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
+                           "read", ctx)
+        return out
+
+    # ---------------- sized (synthetic-payload) I/O ----------------
+    # The IOR sweeps move hundreds of GiB of *hypothetical* data; these paths
+    # perform full placement + flow accounting + hole-record bookkeeping
+    # without ever constructing the payload (Engine stores length-only
+    # records). Correctness paths (checkpoints, DFS tests) use write()/read().
+    def write_sized(self, offset: int, nbytes: int, epoch: int | None = None,
+                    ctx: IOCtx = DEFAULT_CTX) -> int:
+        if epoch is None:
+            epoch = self.container.auto_epoch()
+        lay = self._layout()
+        cell = self.stripe_cell
+        per_engine: dict[int, list] = {}
+        first = offset // cell
+        last = (offset + nbytes - 1) // cell if nbytes else first
+        for cell_no in range(first, last + 1):
+            lo = max(offset, cell_no * cell)
+            hi = min(offset + nbytes, (cell_no + 1) * cell)
+            take = hi - lo
+            if self.oclass.ec_data:
+                data_eng, parity_eng, group, lane, k = self._cell_engines(
+                    lay, cell_no)
+                homes = ((data_eng, take), (parity_eng, take // k + 1))
+            else:
+                homes = tuple((e, take)
+                              for e in self._cell_engines(lay, cell_no))
+            for eid, nb in homes:
+                self._engine(eid).update_hole(self._key("arr", cell_no),
+                                              cell, epoch)
+                acc = per_engine.setdefault(eid, [0, 0, cell])
+                acc[0] += nb
+                acc[1] += 1
+        for eid, acc in per_engine.items():
+            acc[1] = max(1, acc[1] // 4)
+        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
+                           "write", ctx)
+        self._grow(offset + nbytes)
+        return nbytes
+
+    def read_sized(self, offset: int, nbytes: int,
+                   epoch: float | None = None,
+                   ctx: IOCtx = DEFAULT_CTX) -> int:
+        if epoch is None:
+            epoch = float(self.container.committed_epoch)
+        lay = self._layout()
+        cell = self.stripe_cell
+        per_engine: dict[int, list] = {}
+        first = offset // cell
+        last = (offset + nbytes - 1) // cell if nbytes else first
+        for cell_no in range(first, last + 1):
+            lo = max(offset, cell_no * cell)
+            hi = min(offset + nbytes, (cell_no + 1) * cell)
+            take = hi - lo
+            eid = self._cell_engines(lay, cell_no)[0]
+            acc = per_engine.setdefault(eid, [0, 0, cell])
+            acc[0] += take
+            acc[1] += 1
+        for eid, acc in per_engine.items():
+            acc[1] = max(1, acc[1] // 4)
+        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
+                           "read", ctx)
+        return nbytes
+
+    def punch(self) -> None:
+        lay = self._layout()
+        for eid in set(lay.targets):
+            eng = self._engine(eid)
+            if not eng.alive:
+                continue
+            for key in list(eng.keys((self.container.label, self.oid))):
+                eng.punch(key)
+        self.container.set_object_size(self.oid, 0)
+
+
+class KVObject(_ObjectBase):
+    """daos_kv_*: dkey/akey records hashed across the object's shards."""
+
+    def _replicas_for(self, dkey) -> tuple[int, ...]:
+        lay = self._layout()
+        h = _layout.oid_for(str(dkey), container_seq=17)
+        return lay.replicas_for_chunk(h % lay.width)
+
+    def _shard_for(self, dkey) -> int:
+        return self._replicas_for(dkey)[0]
+
+    def put(self, dkey, akey, value, epoch: int | None = None,
+            ctx: IOCtx = DEFAULT_CTX) -> None:
+        if epoch is None:
+            epoch = self.container.auto_epoch()
+        raw = value if isinstance(value, (bytes, bytearray)) else bytes(value)
+        flows = {}
+        last_err: Exception | None = None
+        for eid in self._replicas_for(dkey):
+            try:  # degraded write: surviving replicas only
+                self._engine(eid).update(self._key(dkey, akey), raw, epoch)
+            except EngineFailedError as e:
+                last_err = e
+                continue
+            flows[eid] = (len(raw), 1, len(raw))
+        if not flows:
+            raise redundancy.DataLossError(
+                f"kv {self.name}: no live replica for dkey {dkey!r}") \
+                from last_err
+        self._record_flows(flows, "write", ctx)
+
+    def get(self, dkey, akey, epoch: float | None = None,
+            ctx: IOCtx = DEFAULT_CTX) -> bytes:
+        if epoch is None:
+            epoch = float(self.container.committed_epoch)
+        last_err: Exception | None = None
+        not_found = 0
+        for eid in self._replicas_for(dkey):  # degraded read: next replica
+            try:
+                rec = self._engine(eid).fetch(self._key(dkey, akey), epoch)
+            except EngineFailedError as e:
+                last_err = e
+                continue
+            except NotFoundError as e:
+                # post-rebuild override may point at a fresh engine before
+                # records land there; another replica still has the data
+                last_err = e
+                not_found += 1
+                continue
+            data = rec.data if rec.data is not None else b"\0" * rec.length
+            self._record_flows({eid: (rec.length, 1, rec.length)}, "read",
+                               ctx)
+            return data
+        if not_found == len(self._replicas_for(dkey)):
+            raise NotFoundError((self.oid, dkey, akey))
+        raise redundancy.DataLossError(
+            f"kv {self.name}: all replicas of dkey {dkey!r} down") \
+            from last_err
+
+    def remove(self, dkey, akey=None) -> None:
+        for eid in self._replicas_for(dkey):
+            eng = self._engine(eid)
+            if not eng.alive:
+                continue
+            if akey is None:
+                for key in list(eng.keys((self.container.label, self.oid,
+                                          dkey))):
+                    eng.punch(key)
+            else:
+                eng.punch(self._key(dkey, akey))
+
+    def list_akeys(self, dkey) -> list:
+        eid = self._shard_for(dkey)
+        return [k[3] for k in
+                self._engine(eid).keys((self.container.label, self.oid, dkey))]

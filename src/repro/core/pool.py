@@ -1,0 +1,212 @@
+"""Pools: a set of DAOS engines + the replicated control plane.
+
+The pool owns the engines (real byte stores), the IOSim timing model, and the
+RAFT metadata group.  Failure handling follows DAOS semantics:
+
+* ``fail_engine`` / ``fail_node`` bump the pool-map version through RAFT;
+* ``rebuild()`` restores redundancy for RP_*/EC_* objects by reconstructing
+  the shards that lived on dead engines onto live replacements (recorded as
+  per-object layout overrides so placement of surviving shards never moves);
+* unprotected (S*) data on a dead engine raises ``DataLossError`` on access —
+  the honest failure mode the paper's object classes trade against.
+"""
+from __future__ import annotations
+
+from . import layout as _layout
+from .container import Container
+from .engine import Engine, EngineFailedError, NotFoundError
+from .raft import RaftGroup
+from .simnet import IOSim, Topology, HWProfile
+
+
+class Pool:
+    def __init__(self, topo: Topology | None = None,
+                 hw: HWProfile | str | None = None,
+                 svc_replicas: int = 3, materialize: bool = True,
+                 stripe_cell: int = 1 << 20, label: str = "pool0") -> None:
+        self.label = label
+        self.topo = topo or Topology()
+        self.sim = IOSim(self.topo, hw)
+        self.stripe_cell = stripe_cell
+        self.engines: dict[int, Engine] = {
+            i: Engine(i, self.topo.node_of_engine(i), materialize=materialize)
+            for i in self.topo.engine_ids()}
+        self.raft = RaftGroup(svc_replicas)
+        self.raft.set(("pool", "map_version"), 1)
+        self.base_map_version = 1   # object placement seed (stable across fail)
+        self.containers: dict[str, Container] = {}
+
+    # ------------- control plane -------------
+    @property
+    def map_version(self) -> int:
+        return self.raft.get(("pool", "map_version"), 1)
+
+    def _bump_map(self) -> None:
+        self.raft.set(("pool", "map_version"), self.map_version + 1)
+
+    def create_container(self, label: str, oclass: str = "SX",
+                         stripe_cell: int | None = None) -> Container:
+        if label in self.containers:
+            raise ValueError(f"container {label!r} exists")
+        cont = Container(self, label, default_oclass=oclass,
+                         stripe_cell=stripe_cell or self.stripe_cell)
+        self.containers[label] = cont
+        self.raft.set(("cont", label), {"oclass": oclass})
+        return cont
+
+    def open_container(self, label: str) -> Container:
+        return self.containers[label]
+
+    # ------------- engines / failures -------------
+    def all_engine_ids(self) -> list[int]:
+        return sorted(self.engines)
+
+    def live_engine_ids(self) -> list[int]:
+        return [i for i, e in sorted(self.engines.items()) if e.alive]
+
+    def fail_engine(self, engine_id: int) -> None:
+        self.engines[engine_id].fail()
+        self._bump_map()
+
+    def fail_node(self, node_id: int) -> list[int]:
+        failed = [i for i, e in self.engines.items() if e.node_id == node_id]
+        for i in failed:
+            self.engines[i].fail()
+        self._bump_map()
+        return failed
+
+    def restore_engine(self, engine_id: int) -> None:
+        """Bring an engine back *empty* (fresh hardware); rebuild must have
+        moved its data already."""
+        eng = self.engines[engine_id]
+        eng.restore()
+        eng._store.clear()
+        eng.used = 0
+        self._bump_map()
+
+    # ------------- rebuild -------------
+    def _replacement_for(self, oid: int, dead: int, taken: set[int]) -> int:
+        live = [e for e in self.live_engine_ids() if e not in taken]
+        if not live:
+            # wide layouts (e.g. RP_2GX) already span every engine: reuse a
+            # live one — redundancy is restored even if placement overlaps.
+            live = self.live_engine_ids()
+        if not live:
+            raise EngineFailedError("no live engine available for rebuild")
+        idx = _layout.jump_hash(_layout.oid_for(oid ^ dead), len(live))
+        return live[idx]
+
+    def rebuild(self) -> dict:
+        """Restore redundancy after failures. Returns a summary dict."""
+        dead = [i for i, e in self.engines.items() if not e.alive]
+        moved_cells = 0
+        lost_objects = 0
+        for cont in self.containers.values():
+            for oid in cont.known_oids():
+                ocname = cont.object_class_of(oid)
+                oc = _layout.get_class(ocname)
+                lay = cont.layout_for(oid, oc, cont.stripe_cell)
+                dead_targets = [t for t in lay.targets if t in dead]
+                if not dead_targets:
+                    continue
+                if oc.replicas == 1 and not oc.ec_data:
+                    lost_objects += 1
+                    continue
+                from .object import ArrayObject
+                obj = ArrayObject(cont, f"oid:{oid:x}", oid, oc,
+                                  cont.stripe_cell)
+                taken = set(lay.targets)
+                for dt in set(dead_targets):
+                    repl = self._replacement_for(oid, dt, taken)
+                    taken.add(repl)
+                    moved_cells += self._copy_shard(cont, obj, lay, dt, repl)
+                    moved_cells += self._copy_kv_records(cont, obj, lay, dt,
+                                                         repl)
+                    cont.set_override(oid, dt, repl)
+        return {"dead_engines": dead, "moved_cells": moved_cells,
+                "lost_objects": lost_objects}
+
+    def _copy_shard(self, cont: Container, obj, lay, dead: int,
+                    replacement: int) -> int:
+        """Reconstruct every cell the dead engine held for this object, via
+        surviving replicas / EC parity, onto the replacement engine."""
+        moved = 0
+        size = cont.object_size(obj.oid)
+        if size == 0:
+            return 0
+        n_cells = -(-size // obj.stripe_cell)
+        epoch = float(cont.committed_epoch)
+        for cn in range(n_cells):
+            if obj.oclass.ec_data:
+                info = obj._cell_engines(lay, cn)
+                homes = (info[0],)
+                parity_home = info[1]
+            else:
+                homes = lay.replicas_for_chunk(cn)
+                parity_home = None
+            if dead not in homes and dead != parity_home:
+                continue
+            if dead in homes:
+                try:
+                    raw = obj._read_cell(lay, cn, epoch)  # degraded path
+                except (NotFoundError, KeyError):
+                    continue
+                self.engines[replacement].update(
+                    (cont.label, obj.oid, "arr", cn), raw,
+                    int(epoch))
+                moved += 1
+            elif parity_home == dead and obj.oclass.ec_data:
+                k = obj._data_width(lay)
+                group = cn // k
+                cells = []
+                for ln in range(k):
+                    try:
+                        cells.append(obj._fetch_raw(
+                            obj._cell_engines(lay, group * k + ln)[0],
+                            group * k + ln, epoch))
+                    except (NotFoundError, KeyError, EngineFailedError):
+                        pass
+                from . import redundancy
+                parity = redundancy.xor_parity(cells, obj.stripe_cell)
+                self.engines[replacement].update(
+                    (cont.label, obj.oid, "par", group), parity, int(epoch))
+                moved += 1
+        return moved
+
+    def _copy_kv_records(self, cont: Container, obj, lay, dead: int,
+                         replacement: int) -> int:
+        """Restore KV records (dir entries, manifests) whose replica set
+        included the dead engine, from any surviving replica."""
+        moved = 0
+        seen: set = set()
+        for eid in set(lay.targets):
+            eng = self.engines.get(eid)
+            if eng is None or not eng.alive:
+                continue
+            for key in list(eng.keys((cont.label, obj.oid))):
+                dkey = key[2]
+                if dkey in ("arr", "par") or key in seen:
+                    continue
+                h = _layout.oid_for(str(dkey), container_seq=17)
+                reps = lay.replicas_for_chunk(h % lay.width)
+                if dead not in reps:
+                    continue
+                seen.add(key)
+                for epoch, rec in eng.records(key).items():
+                    if rec.data is None:
+                        self.engines[replacement].update_hole(
+                            key, rec.length, epoch)
+                    else:
+                        self.engines[replacement].update(
+                            key, rec.data, epoch, csum=rec.csum)
+                moved += 1
+        return moved
+
+    # ------------- stats -------------
+    def stats(self) -> dict:
+        return {
+            "map_version": self.map_version,
+            "engines": [e.stats() for e in self.engines.values()],
+            "containers": sorted(self.containers),
+            "sim_time": self.sim.clock.now,
+        }

@@ -1,0 +1,307 @@
+"""Fabric + media performance model.
+
+The container is CPU-only; it cannot *measure* Optane-class storage bandwidth.
+What it can do — the same move the dry-run makes for TPU compute — is move the
+real bytes and charge them against a calibrated hardware model.  This module is
+that model: a bottleneck-flow solver over the NEXTGenIO-like topology the paper
+benchmarks (8 server nodes x 2 DAOS engines, Optane DCPMM media, ~100 Gb/s
+fabric).
+
+Semantics: an I/O *phase* (one IOR write pass, one checkpoint save, ...) is a
+set of concurrent flows client->engine (or engine->client).  All flows start
+together (IOR barrier semantics).  Completion time is
+
+    T = setup + max( max_r  bytes(r) / bw(r),          # every shared resource
+                     max_c  serial op chain of client c )
+
+where resources are: engine media (direction-dependent bw + per-op service
+time), engine RPC processors, server NICs, client NICs, and optional per-
+process stream caps (the DFuse kernel-crossing bottleneck).  This "concurrent
+saturation" approximation is monotone, deterministic and captures exactly the
+effects the paper measures: placement imbalance (S1/S2 hot spots), wide-stripe
+fan-out overhead (SX), interface per-op costs (FUSE, HDF5), and contention
+growth with client-node count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Iterator
+
+import contextlib
+
+
+@dataclasses.dataclass
+class HWProfile:
+    """Hardware constants. Default profile: NEXTGenIO (paper's testbed).
+
+    Engine media = one socket of 6x 256 GiB gen-1 Optane DCPMM, AppDirect
+    interleaved: ~40 GB/s read, ~13 GB/s write per engine.  Fabric =
+    100 Gb/s OmniPath per node (~12.5 GB/s).
+    """
+    name: str = "nextgenio-dcpmm"
+    engine_read_bw: float = 40e9        # B/s per engine, media read
+    engine_write_bw: float = 13e9       # B/s per engine, media write
+    engine_op_time: float = 8e-6        # s per RPC of engine service CPU
+    engine_rpc_threads: int = 16        # concurrent service streams per engine
+    media_eff_floor_bytes: float = 64e3 # cell size at which media eff = 50%
+    server_nic_bw: float = 12.5e9       # B/s per server node (each direction)
+    client_nic_bw: float = 12.5e9       # B/s per client node
+    fabric_lat: float = 3e-6            # one-way network latency
+    client_op_time: float = 6e-6        # client-side per-op CPU cost
+    queue_depth: int = 16               # async RPCs in flight per process
+    setup_time: float = 300e-6          # per-phase constant (connect/barrier)
+    # DFuse daemon: one user-space fuse process per client node; everything
+    # mounted through it pays a kernel crossing + daemon CPU per op and
+    # shares the daemon's streaming capacity.
+    fuse_bw: float = 12e9               # B/s per client-node dfuse daemon
+    fuse_op_time: float = 18e-6         # daemon CPU per fuse op
+    # Fan-in/fan-out (incast) efficiency: an endpoint streaming to/from k
+    # concurrent peers loses NIC efficiency to flow interleaving — the
+    # effect that makes wide striping (SX) *worse* than S2 for reads
+    # (paper claim C1) while barely hurting writes (C2: SX wins under
+    # write contention).  Server side counts client *processes* fanned in.
+    incast_alpha_read: float = 0.006
+    incast_alpha_write: float = 0.003
+    srv_incast_alpha_read: float = 0.006
+    srv_incast_alpha_write: float = 0.001
+
+    def incast_eff(self, peers: int, direction: str, server: bool = False
+                   ) -> float:
+        if server:
+            a = (self.srv_incast_alpha_read if direction == "read"
+                 else self.srv_incast_alpha_write)
+        else:
+            a = (self.incast_alpha_read if direction == "read"
+                 else self.incast_alpha_write)
+        return 1.0 / (1.0 + a * max(0, peers - 1))
+
+    def media_eff(self, cell_bytes: float) -> float:
+        """Per-access media efficiency: small stripe cells waste DCPMM/NVMe
+        bandwidth (256 B XPLine granularity, prefetcher depth)."""
+        if cell_bytes <= 0:
+            return 1.0
+        return cell_bytes / (cell_bytes + self.media_eff_floor_bytes)
+
+
+# Alternate profiles for the hardware-adaptation study.
+PROFILES = {
+    "nextgenio-dcpmm": HWProfile(),
+    "nvme-gen4": HWProfile(name="nvme-gen4", engine_read_bw=28e9,
+                           engine_write_bw=18e9, media_eff_floor_bytes=128e3,
+                           engine_op_time=12e-6),
+    "tmpfs": HWProfile(name="tmpfs", engine_read_bw=80e9, engine_write_bw=60e9,
+                       media_eff_floor_bytes=8e3, engine_op_time=2e-6),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    n_server_nodes: int = 8
+    engines_per_node: int = 2
+    n_client_nodes: int = 8
+    procs_per_client_node: int = 8
+
+    @property
+    def n_engines(self) -> int:
+        return self.n_server_nodes * self.engines_per_node
+
+    def node_of_engine(self, engine_id: int) -> int:
+        return engine_id // self.engines_per_node
+
+    def engine_ids(self) -> list[int]:
+        return list(range(self.n_engines))
+
+
+class SimClock:
+    """Simulated wall clock, advanced by completed phases."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError("time cannot run backwards")
+        self.now += dt
+
+
+@dataclasses.dataclass
+class _Flow:
+    client_node: int
+    process: int            # global process rank (client-side)
+    engine: int
+    direction: str          # 'read' | 'write'
+    nbytes: int             # payload through the network & media
+    nops: int               # RPC count
+    cell_bytes: float       # per-access granularity at the media
+    client_lat_per_op: float   # interface-added client latency per op
+    proc_bw_cap: float      # per-process stream cap (0 = uncapped)
+    via_fuse: bool = False  # passes through the client node's dfuse daemon
+    sync: bool = True       # False => async qd; True => serialized per-op
+
+
+class PhaseRecorder:
+    """Accumulates flows for one concurrent I/O phase and solves its time."""
+
+    def __init__(self, sim: "IOSim") -> None:
+        self.sim = sim
+        self.flows: list[_Flow] = []
+        self.md_ops: int = 0         # metadata service round-trips (serial-ish)
+        self.elapsed: float | None = None
+
+    def record(self, *, client_node: int, process: int, engine: int,
+               direction: str, nbytes: int, nops: int = 1,
+               cell_bytes: float | None = None,
+               client_lat_per_op: float = 0.0,
+               proc_bw_cap: float = 0.0,
+               via_fuse: bool = False, sync: bool = True) -> None:
+        if direction not in ("read", "write"):
+            raise ValueError(direction)
+        self.flows.append(_Flow(client_node, process, engine, direction,
+                                int(nbytes), int(nops),
+                                float(cell_bytes if cell_bytes else
+                                      (nbytes / max(1, nops))),
+                                client_lat_per_op, proc_bw_cap,
+                                via_fuse, sync))
+
+    def record_md(self, nops: int) -> None:
+        self.md_ops += int(nops)
+
+    # -- solver ------------------------------------------------------------
+    def solve(self) -> float:
+        hw = self.sim.hw
+        topo = self.sim.topo
+        if not self.flows and not self.md_ops:
+            return 0.0
+
+        eng_media = defaultdict(float)      # engine -> media seconds
+        eng_rpc = defaultdict(float)        # engine -> rpc service seconds
+        srv_nic = defaultdict(float)        # server node -> bytes
+        cli_nic = defaultdict(float)        # client node -> bytes
+        cli_peers = defaultdict(set)        # client node -> engines touched
+        cli_dir = {}                        # client node -> dominant dir
+        proc_chain = defaultdict(float)     # process -> serial client seconds
+        proc_stream = defaultdict(lambda: [0.0, 0.0])  # process -> [bytes, cap]
+        fuse = defaultdict(lambda: [0.0, 0])  # client node -> [bytes, ops]
+
+        # server-side fan-in: reads interleave per requesting *process*
+        # (response streams), writes land per client *node* (the NIC-level
+        # aggregation point) — this asymmetry is why wide striping hurts
+        # reads (C1) but wins contended writes (C2).
+        srv_peers = defaultdict(set)        # server node -> peer endpoints
+        for f in self.flows:
+            cli_peers[f.client_node].add(f.engine)
+            cli_dir[f.client_node] = f.direction
+            peer = f.process if f.direction == "read" else f.client_node
+            srv_peers[topo.node_of_engine(f.engine)].add(peer)
+            bw = hw.engine_read_bw if f.direction == "read" else hw.engine_write_bw
+            eff = hw.media_eff(f.cell_bytes)
+            eng_media[f.engine] += f.nbytes / (bw * eff)
+            eng_rpc[f.engine] += f.nops * hw.engine_op_time / hw.engine_rpc_threads
+            srv_nic[topo.node_of_engine(f.engine)] += f.nbytes
+            cli_nic[f.client_node] += f.nbytes
+            per_op = (hw.client_op_time + 2 * hw.fabric_lat + f.client_lat_per_op)
+            qd = 1 if f.sync else hw.queue_depth
+            proc_chain[f.process] += f.nops * per_op / qd
+            if f.proc_bw_cap:
+                s = proc_stream[f.process]
+                s[0] += f.nbytes
+                s[1] = f.proc_bw_cap
+            if f.via_fuse:
+                fu = fuse[f.client_node]
+                fu[0] += f.nbytes
+                fu[1] += f.nops
+
+        t = 0.0
+        for e in eng_media:
+            t = max(t, eng_media[e] + eng_rpc[e])
+        any_dir = next(iter(cli_dir.values()), "read")
+        for n, b in srv_nic.items():
+            eff = hw.incast_eff(len(srv_peers[n]), any_dir, server=True)
+            t = max(t, b / (hw.server_nic_bw * eff))
+        for n, b in cli_nic.items():
+            eff = hw.incast_eff(len(cli_peers[n]), cli_dir.get(n, "read"))
+            t = max(t, b / (hw.client_nic_bw * eff))
+        for p, chain in proc_chain.items():
+            t = max(t, chain)
+        for p, (b, cap) in proc_stream.items():
+            if cap:
+                t = max(t, b / cap)
+        for n, (b, ops) in fuse.items():
+            t = max(t, b / hw.fuse_bw + ops * hw.fuse_op_time)
+        # metadata service: treated as a single serialised RPC pipeline
+        t = max(t, self.md_ops * self.sim.md_op_time)
+        return t + hw.setup_time
+
+    def finish(self) -> float:
+        if self.elapsed is None:
+            self.elapsed = self.solve()
+            self.sim.clock.advance(self.elapsed)
+        return self.elapsed
+
+    # -- introspection (used by tests & the bench report) -------------------
+    def total_bytes(self, direction: str | None = None) -> int:
+        return sum(f.nbytes for f in self.flows
+                   if direction is None or f.direction == direction)
+
+    def engine_bytes(self) -> dict[int, int]:
+        out: dict[int, int] = defaultdict(int)
+        for f in self.flows:
+            out[f.engine] += f.nbytes
+        return dict(out)
+
+    def imbalance(self) -> float:
+        """max/mean engine load — the S1/S2 hot-spot metric."""
+        eb = self.engine_bytes()
+        if not eb:
+            return 1.0
+        loads = [eb.get(e, 0) for e in self.sim.topo.engine_ids()]
+        mean = sum(loads) / len(loads)
+        return (max(loads) / mean) if mean else 1.0
+
+
+class IOSim:
+    """Owns the clock and produces phases."""
+
+    def __init__(self, topo: Topology | None = None,
+                 hw: HWProfile | str | None = None,
+                 md_op_time: float = 15e-6) -> None:
+        self.topo = topo or Topology()
+        if isinstance(hw, str):
+            hw = PROFILES[hw]
+        self.hw = hw or PROFILES["nextgenio-dcpmm"]
+        self.clock = SimClock()
+        self.md_op_time = md_op_time
+        self._active: PhaseRecorder | None = None
+
+    @contextlib.contextmanager
+    def phase(self) -> Iterator[PhaseRecorder]:
+        rec = PhaseRecorder(self)
+        prev, self._active = self._active, rec
+        try:
+            yield rec
+        finally:
+            self._active = prev
+            rec.finish()
+
+    @property
+    def active_phase(self) -> PhaseRecorder | None:
+        return self._active
+
+    def record(self, **kw) -> None:
+        """Record a flow into the active phase; no-op outside a phase (unit
+        tests exercising pure data movement don't care about time)."""
+        if self._active is not None:
+            self._active.record(**kw)
+
+    def record_md(self, nops: int) -> None:
+        if self._active is not None:
+            self._active.record_md(nops)
+
+
+def bandwidth(nbytes: int, seconds: float) -> float:
+    """GiB/s, the paper's reporting unit."""
+    if seconds <= 0:
+        return math.inf
+    return nbytes / seconds / 2**30

@@ -1,0 +1,60 @@
+"""Failure detection and elastic replanning.
+
+On a real pod the failure signal comes from the runtime (missing heartbeat,
+collective timeout); here the detector polls engine health in the storage
+pool and node liveness flags the driver sets.  The elastic policy mirrors
+what the checkpoint layer supports: any new data-parallel degree that keeps
+the per-replica batch integral can restart from the same checkpoint
+(Checkpointer.restore_slice reads whatever ranges the new topology needs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    kind: str          # "engine" | "node" | "worker"
+    ident: int
+    at_step: int
+
+
+class FailureDetector:
+    def __init__(self, pool=None, n_workers: int = 0) -> None:
+        self.pool = pool
+        self.worker_alive = [True] * n_workers
+        self.events: list[FailureEvent] = []
+
+    def fail_worker(self, worker: int, step: int) -> None:
+        self.worker_alive[worker] = False
+        self.events.append(FailureEvent("worker", worker, step))
+
+    def poll(self, step: int) -> list[FailureEvent]:
+        """Detect newly-dead storage engines + dead workers."""
+        out = []
+        if self.pool is not None:
+            for eid, eng in self.pool.engines.items():
+                if not eng.alive and not any(
+                        e.kind == "engine" and e.ident == eid
+                        for e in self.events):
+                    ev = FailureEvent("engine", eid, step)
+                    self.events.append(ev)
+                    out.append(ev)
+        out.extend(e for e in self.events
+                   if e.kind == "worker" and e.at_step == step)
+        return out
+
+    @property
+    def n_alive_workers(self) -> int:
+        return sum(self.worker_alive)
+
+
+def replan_data_parallel(global_batch: int, n_alive: int,
+                         model_parallel: int = 1) -> tuple[int, int]:
+    """Largest data-parallel degree <= n_alive/model_parallel that divides
+    global_batch. Returns (dp, per_replica_batch)."""
+    max_dp = max(1, n_alive // max(1, model_parallel))
+    for dp in range(max_dp, 0, -1):
+        if global_batch % dp == 0:
+            return dp, global_batch // dp
+    return 1, global_batch

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; the kernels must match them bit-for-bit (checksum,
+shard_pack) or to fp tolerance (quantize round-trip).  Tests sweep shapes and
+dtypes asserting kernel == oracle in interpret mode.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WEIGHT = np.uint32(2654435761)
+
+
+def weight_powers(n: int, start_power: int = 1) -> jnp.ndarray:
+    """W^(start), ..., W^(start+n-1) mod 2^32 as uint32 (host-computed)."""
+    out = np.empty(max(n, 0), np.uint32)
+    w = pow(int(WEIGHT), start_power, 1 << 32)
+    acc = np.uint32(w)
+    with np.errstate(over="ignore"):
+        for i in range(n):
+            out[i] = acc
+            acc = np.uint32(acc * WEIGHT)
+    return jnp.asarray(out)
+
+
+def bytes_to_words(u8: jnp.ndarray) -> jnp.ndarray:
+    """Little-endian uint8[4n] -> uint32[n] (zero-pads the tail)."""
+    flat = u8.reshape(-1).astype(jnp.uint32)
+    pad = (-flat.shape[0]) % 4
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, jnp.uint32)])
+    quads = flat.reshape(-1, 4)
+    shifts = jnp.asarray([0, 8, 16, 24], jnp.uint32)
+    return jnp.sum(quads << shifts, axis=1, dtype=jnp.uint32)
+
+
+def checksum_words(words: jnp.ndarray) -> jnp.ndarray:
+    """sum_i W^(i+1) * w_i  mod 2^32 — the device-side core of
+    ``repro.core.integrity.checksum`` (the length mix happens host-side)."""
+    w = weight_powers(int(words.shape[0]))
+    return jnp.sum(w * words.astype(jnp.uint32), dtype=jnp.uint32)
+
+
+def quantize_int8(x: jnp.ndarray, group: int = 1024):
+    """Group-wise symmetric int8 quantisation.
+
+    x is flattened and padded to a multiple of `group`; returns
+    (q int8 [n_groups, group], scales fp32 [n_groups, 1], orig_len).
+    """
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % group
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, jnp.float32)])
+    g = flat.reshape(-1, group)
+    absmax = jnp.max(jnp.abs(g), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, orig_len: int,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[:orig_len].astype(dtype)
+
+
+def shard_pack(cells: jnp.ndarray, width: int) -> jnp.ndarray:
+    """(n_cells, cell) -> (width, n_cells//width, cell): cell c goes to
+    target c % width, slot c // width — the round-robin stripe layout the
+    array API uses. n_cells must divide by width (ops.py pads)."""
+    n_cells, cell = cells.shape
+    assert n_cells % width == 0
+    return cells.reshape(n_cells // width, width, cell).transpose(1, 0, 2)
+
+
+def shard_unpack(packed: jnp.ndarray) -> jnp.ndarray:
+    width, cpt, cell = packed.shape
+    return packed.transpose(1, 0, 2).reshape(width * cpt, cell)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: stripe packing for the object-store data path.
+
+Before a checkpoint shard leaves the device it must be reordered from the
+model's contiguous layout into the object class's round-robin stripe layout
+(cell c -> target c % width, slot c // width) so each engine receives one
+contiguous buffer.  Doing this on-device turns a host-side gather into a
+single HBM->HBM permutation that overlaps with the DMA out.
+
+The permutation is expressed entirely in BlockSpec index maps — the kernel
+body is a copy.  Each grid step moves one cell; a cell is (cell_rows, 128)
+uint32 so the copy is VREG-aligned.  There is no compute: the kernel is a
+pure layout transform and its roofline is the HBM bandwidth term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CELL_COLS = 128
+
+
+def _pack_kernel(cells_ref, out_ref):
+    out_ref[...] = cells_ref[...].reshape(out_ref.shape)
+
+
+def shard_pack_pallas(cells: jnp.ndarray, width: int,
+                      interpret: bool = True) -> jnp.ndarray:
+    """cells: (n_cells, cell_rows, 128) -> (width, n_cells//width, cell_rows,
+    128). n_cells % width == 0 (ops.py pads)."""
+    n_cells, cell_rows, cols = cells.shape
+    assert cols == CELL_COLS and n_cells % width == 0
+    cpt = n_cells // width
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(width, cpt),
+        in_specs=[pl.BlockSpec((1, cell_rows, CELL_COLS),
+                               lambda t, c: (c * width + t, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, cell_rows, CELL_COLS),
+                               lambda t, c: (t, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((width, cpt, cell_rows, CELL_COLS),
+                                       cells.dtype),
+        interpret=interpret,
+    )(cells)
+
+
+def shard_unpack_pallas(packed: jnp.ndarray,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Inverse of shard_pack_pallas."""
+    width, cpt, cell_rows, cols = packed.shape
+    assert cols == CELL_COLS
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(cpt, width),
+        in_specs=[pl.BlockSpec((1, 1, cell_rows, CELL_COLS),
+                               lambda c, t: (t, c, 0, 0))],
+        out_specs=pl.BlockSpec((1, cell_rows, CELL_COLS),
+                               lambda c, t: (c * width + t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((width * cpt, cell_rows, CELL_COLS),
+                                       packed.dtype),
+        interpret=interpret,
+    )(packed)

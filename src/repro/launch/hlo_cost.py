@@ -1,0 +1,373 @@
+"""Structural cost analysis of partitioned HLO.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every computation ONCE —
+a `lax.scan` over 94 layers reports 1/94th of the FLOPs (verified in
+tests/test_hlo_cost.py).  Since every layer stack in this framework is
+scanned, we parse the HLO text structurally instead:
+
+  * computations are parsed into op lists; a per-computation symbol table
+    resolves operand names to types (HLO is SSA within a computation);
+  * `while` ops get trip counts from ``backend_config known_trip_count``
+    (fallback: the `compare(%iv, constant(N))` in the condition);
+  * an execution-count multiplier propagates through the call graph
+    (entry -> while bodies x trips, nested products; fusion internals get a
+    FLOP multiplier but not a bytes multiplier);
+  * FLOPs: dot/convolution ops, 2 x out_elems x contracted_elems;
+  * HBM bytes: per *materialisation boundary* — post-fusion top-level ops
+    read their operands and write their result; elementwise plumbing inside
+    fusions is free.  Parameters/constants/tuple plumbing and collectives
+    (ICI, counted separately) are excluded;
+  * collective bytes: ring-algorithm traffic factors over the parsed
+    replica group size.
+
+All numbers are per-device (the partitioned module is one participant's
+program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^=]*?\)|[a-z][a-z0-9]*\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s*([\w\-]+)\((.*)$")
+_TYPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_CALL_ATTR = re.compile(
+    r"(?:condition|body|calls|to_apply|branch_computations)="
+    r"\{?%?([\w\.\-]+(?:, ?%?[\w\.\-]+)*)\}?")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([0-9,\s]+?)\}[,}]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "reshape", "iota", "after-all", "partition-id",
+               "replica-id", "while", "conditional", "call", "custom-call",
+               "opt-barrier", "rng-bit-generator", "copy-start", "copy-done",
+               "send", "recv", "send-done", "recv-done"} \
+    | set(COLLECTIVES) \
+    | {c + "-start" for c in COLLECTIVES} \
+    | {c + "-done" for c in COLLECTIVES}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    args_text: str
+
+    def result_bytes(self) -> int:
+        return _type_bytes(self.result_type)
+
+    def operand_names(self) -> list[str]:
+        """Names referenced in the operand list (before attribute clutter)."""
+        depth = 1
+        end = len(self.args_text)
+        for i, ch in enumerate(self.args_text):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPERAND_RE.findall(self.args_text[:end])
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    is_entry: bool = False
+
+    def symbols(self) -> dict[str, str]:
+        return {op.name: op.result_type for op in self.ops}
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.endswith("{") and ("(" in stripped) and "=" not in \
+                stripped.split("(")[0]:
+            hdr = _COMP_HDR.match(stripped)
+            if hdr:
+                current = Computation(hdr.group(2), [],
+                                      is_entry=bool(hdr.group(1)))
+                comps[current.name] = current
+                continue
+        if stripped == "}":
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            current.ops.append(Op(m.group(1), m.group(3), m.group(2),
+                                  m.group(4)))
+    return comps
+
+
+def _trip_count(op: Op, comps: dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.args_text)
+    if m:
+        return max(1, int(m.group(1)))
+    cm = re.search(r"condition=%?([\w\.\-]+)", op.args_text)
+    if cm and cm.group(1) in comps:
+        cond = comps[cm.group(1)]
+        consts = {}
+        for o in cond.ops:
+            if o.kind == "constant":
+                mm = re.match(r"(\d+)\)", o.args_text)
+                if mm:
+                    consts[o.name] = int(mm.group(1))
+        for o in cond.ops:
+            if o.kind in ("compare", "fusion"):
+                for ref in o.operand_names():
+                    if ref in consts:
+                        return max(1, consts[ref])
+        if consts:
+            return max(1, max(consts.values()))
+    return 1
+
+
+def _callees(op: Op) -> list[str]:
+    out = []
+    for m in _CALL_ATTR.finditer(op.args_text):
+        for name in m.group(1).split(","):
+            out.append(name.strip().lstrip("%"))
+    return out
+
+
+def _multipliers(comps: dict[str, Computation]) -> tuple[dict, dict]:
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        entry = next(iter(comps.values()))
+    exec_mult: dict[str, float] = defaultdict(float)
+    flop_mult: dict[str, float] = defaultdict(float)
+
+    def visit(comp: Computation, factor: float, stack: tuple,
+              in_fusion: bool):
+        if comp.name in stack or factor <= 0:
+            return
+        if not in_fusion:
+            exec_mult[comp.name] += factor
+        flop_mult[comp.name] += factor
+        for op in comp.ops:
+            callees = _callees(op)
+            if not callees:
+                continue
+            if op.kind == "while":
+                trips = _trip_count(op, comps)
+                bm = re.search(r"body=%?([\w\.\-]+)", op.args_text)
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.args_text)
+                if bm and bm.group(1) in comps:
+                    visit(comps[bm.group(1)], factor * trips,
+                          stack + (comp.name,), in_fusion)
+                if cm and cm.group(1) in comps:
+                    visit(comps[cm.group(1)], factor * (trips + 1),
+                          stack + (comp.name,), in_fusion)
+            elif op.kind == "fusion":
+                for cal in callees:
+                    if cal in comps:
+                        visit(comps[cal], factor, stack + (comp.name,), True)
+            else:
+                for cal in callees:
+                    if cal in comps:
+                        visit(comps[cal], factor, stack + (comp.name,),
+                              in_fusion)
+
+    visit(entry, 1.0, (), False)
+    return dict(exec_mult), dict(flop_mult)
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    out_elems = _type_elems(op.result_type)
+    names = op.operand_names()
+    cm = _CONTRACT.search(op.args_text)
+    if not names or cm is None:
+        return 2.0 * out_elems
+    lhs_type = symbols.get(names[0], "")
+    tm = _TYPE_RE.search(lhs_type)
+    if not tm:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in tm.group(2).split(",") if d.strip()]
+    k = 1
+    for idx in cm.group(1).split(","):
+        if idx.strip():
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, symbols: dict[str, str]) -> float:
+    out_elems = _type_elems(op.result_type)
+    names = op.operand_names()
+    if len(names) >= 2:
+        k_elems = _type_elems(symbols.get(names[1], ""))
+        out_channels = 1
+        tm = _TYPE_RE.search(op.result_type)
+        if tm:
+            dims = [int(d) for d in tm.group(2).split(",") if d.strip()]
+            out_channels = dims[-1] if dims else 1
+        per_out = max(1, k_elems // max(1, out_channels))
+        return 2.0 * out_elems * per_out
+    return 2.0 * out_elems
+
+
+def _op_hbm_bytes(op: Op, symbols: dict[str, str]) -> float:
+    """Traffic of one materialisation boundary.
+
+    dynamic-update-slice executes in place: only the update region moves
+    (XLA aliases the buffer), so counting the full operand would charge a
+    1 GiB carrier for a 2 MiB write.  dynamic-slice reads only the slice.
+    XLA embeds root-op kinds in fusion names, which is how we detect
+    DUS/DS-rooted fusions.  Elementwise(-ish) fusions that slice a large
+    stacked operand internally (scan-saved activations) read only the
+    slice: operands are capped at 4x the result size unless the fusion is
+    a reduction (reduce fusions legitimately read >> they write)."""
+    tag = f"{op.kind}:{op.name}"
+    res = op.result_bytes()
+    sizes = [s for s in (_type_bytes(symbols.get(n, ""))
+                         for n in op.operand_names()) if s > 0]
+    if "dynamic-update-slice" in tag:
+        small = min(sizes) if sizes else res
+        return 2.0 * min(small, res)
+    if "dynamic-slice" in tag:
+        return 2.0 * res
+    if op.kind == "fusion" and "reduce" not in op.name:
+        sizes = [min(s, 4 * res) for s in sizes]
+    return res + sum(sizes)
+
+
+def _group_size(op: Op, default: int = 2) -> int:
+    m = _GROUPS_IOTA.search(op.args_text)
+    if m:
+        return max(2, int(m.group(2)))
+    m = _GROUPS_EXPL.search(op.args_text)
+    if m:
+        return max(2, len(m.group(1).split(",")))
+    return default
+
+
+def analyze(text: str, bucket_re: str | None = None) -> dict:
+    """bucket_re: ops whose text matches contribute additionally to
+    'bucket_bytes' (e.g. 'flashattn' to measure attention-internal HBM
+    traffic for the Pallas-kernel accounting)."""
+    comps = parse_module(text)
+    exec_mult, flop_mult = _multipliers(comps)
+    brex = re.compile(bucket_re) if bucket_re else None
+
+    # computation-granularity bucketing: loop bodies that exist only inside
+    # the bucketed scope (e.g. flash's q/kv scans) contain layout fusions
+    # whose metadata lost the scope — if >=20% of a computation's
+    # byte-counted ops carry the scope, the whole computation belongs to it.
+    comp_bucketed: dict[str, bool] = {}
+    if brex is not None:
+        for comp in comps.values():
+            ops = [o for o in comp.ops if o.kind not in _SKIP_BYTES]
+            if not ops:
+                comp_bucketed[comp.name] = False
+                continue
+            frac = sum(1 for o in ops if brex.search(o.args_text)) / len(ops)
+            comp_bucketed[comp.name] = frac >= 0.2
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    bucket_bytes = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, int] = defaultdict(int)
+
+    for comp in comps.values():
+        fm = flop_mult.get(comp.name, 0.0)
+        em = exec_mult.get(comp.name, 0.0)
+        if fm <= 0 and em <= 0:
+            continue
+        symbols = comp.symbols()
+        for op in comp.ops:
+            kind = op.kind
+            base = kind.removesuffix("-start").removesuffix("-done")
+            if kind == "dot" and fm > 0:
+                flops += fm * _dot_flops(op, symbols)
+            elif kind == "convolution" and fm > 0:
+                flops += fm * _conv_flops(op, symbols)
+            if em <= 0:
+                continue
+            if base in COLLECTIVES:
+                if kind.endswith("-done"):
+                    continue
+                g = _group_size(op)
+                nbytes = op.result_bytes()
+                if "promoted" in op.args_text:
+                    # XLA:CPU's AllReducePromotion upcasts bf16 reductions
+                    # to f32 — a host-backend artifact; TPUs reduce bf16
+                    # natively, so charge the unpromoted width.
+                    nbytes //= 2
+                factor = {"all-reduce": 2 * (g - 1) / g,
+                          "all-gather": (g - 1) / g,
+                          "reduce-scatter": float(g - 1),
+                          "all-to-all": (g - 1) / g,
+                          "ragged-all-to-all": (g - 1) / g,
+                          "collective-permute": 1.0}[base]
+                coll_bytes[base] += em * nbytes * factor
+                coll_counts[base] += int(em)
+                continue
+            if kind in _SKIP_BYTES:
+                continue
+            b = em * _op_hbm_bytes(op, symbols)
+            hbm_bytes += b
+            if brex is not None and (comp_bucketed.get(comp.name)
+                                     or brex.search(op.args_text)):
+                bucket_bytes += b
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "bucket_bytes": bucket_bytes,
+        "collective_bytes": sum(coll_bytes.values()),
+        "collective_by_type": dict(coll_bytes),
+        "collective_counts": dict(coll_counts),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,8 @@
+"""Model zoo: the 10 assigned architectures as pure-functional JAX."""
+from .model import (cache_spec, forward_decode, forward_prefill,
+                    forward_train, init_cache, init_model, input_specs,
+                    make_inputs, param_count, param_shapes, text_len)
+
+__all__ = ["cache_spec", "forward_decode", "forward_prefill",
+           "forward_train", "init_cache", "init_model", "input_specs",
+           "make_inputs", "param_count", "param_shapes", "text_len"]

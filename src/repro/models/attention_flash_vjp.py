@@ -1,0 +1,165 @@
+"""Flash attention with a custom VJP (hillclimb H1, EXPERIMENTS.md §Perf).
+
+The baseline `blockwise_attention` lets JAX autodiff the online-softmax
+scan: every (bq, bk) probability block becomes a saved residual, stacked
+across (kv-steps x q-blocks x layers) — the dominant HBM term in 30/33
+baseline cells, and a 10s-of-GB temp footprint.
+
+This variant implements the standard flash backward: forward saves only
+(q, k, v, out, LSE); backward recomputes each score block, so per-block
+traffic happens exactly twice (fwd + bwd) and nothing S^2-shaped ever
+reaches HBM.  bf16 block math, fp32 running stats/accumulators.
+
+Iteration is kv-outer/q-inner in both passes: dk/dv accumulate in the scan
+carry; dq accumulates across the kv scan (flash-2 style).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention_flash import _block_mask, NEG
+
+
+def _expand_q(q, n_kv):
+    B, S, Hq, D = q.shape
+    return q.reshape(B, S, n_kv, Hq // n_kv, D)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, n_kv: int, causal: bool = True,
+                    window: int = 0, prefix: int = 0, bq: int = 256,
+                    bk: int = 512):
+    out, _ = _flash_fwd_impl(q, k, v, n_kv, causal, window, prefix, bq, bk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, n_kv, causal, window, prefix, bq, bk):
+    with jax.named_scope("flashattn_fwd"):
+        return _flash_fwd_body(q, k, v, n_kv, causal, window, prefix, bq, bk)
+
+
+def _flash_fwd_body(q, k, v, n_kv, causal, window, prefix, bq, bk):
+    B, S, Hq, D = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, Sk)
+    if S % bq or Sk % bk:
+        bq, bk = S, Sk
+    G = Hq // n_kv
+    nq, nk = S // bq, Sk // bk
+
+    qb = _expand_q(q, n_kv).reshape(B, nq, bq, n_kv, G, D) \
+        .transpose(1, 0, 3, 4, 2, 5)                    # (nq,B,h,G,bq,D)
+    kb = k.reshape(B, nk, bk, n_kv, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, n_kv, D).transpose(1, 0, 3, 2, 4)
+
+    def q_block(qi, qblk):
+        m0 = jnp.full((B, n_kv, G, bq), NEG, jnp.float32)
+        l0 = jnp.zeros((B, n_kv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, n_kv, G, bq, D), jnp.float32)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki0, kblk, vblk = inp
+            mask = _block_mask(qi * bq, ki0, bq, bk, causal=causal,
+                               window=window, prefix=prefix)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) \
+                / np.sqrt(D) + mask
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            scale = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * scale + jnp.sum(p, axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk) * bk, kb, vb))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    outs, lses = jax.lax.map(lambda args: q_block(*args),
+                             (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Hq, D)
+    return out, (lses, bq, bk)  # lse stays blocked (nq,B,h,G,bq) for bwd
+
+
+def _flash_fwd(q, k, v, n_kv, causal, window, prefix, bq, bk):
+    out, (lse, rbq, rbk) = _flash_fwd_impl(q, k, v, n_kv, causal, window,
+                                           prefix, bq, bk)
+    return out, (q, k, v, out, lse, rbq, rbk)
+
+
+def _flash_bwd(n_kv, causal, window, prefix, bq_hint, bk_hint, res, dout):
+    with jax.named_scope("flashattn_bwd"):
+        return _flash_bwd_body(n_kv, causal, window, prefix, res, dout)
+
+
+def _flash_bwd_body(n_kv, causal, window, prefix, res, dout):
+    q, k, v, out, lse, bq, bk = res
+    B, S, Hq, D = q.shape
+    Sk = k.shape[1]
+    G = Hq // n_kv
+    nq, nk = S // bq, Sk // bk
+    scale = 1.0 / np.sqrt(D)
+
+    qb = _expand_q(q, n_kv).reshape(B, nq, bq, n_kv, G, D) \
+        .transpose(1, 0, 3, 4, 2, 5)
+    dob = _expand_q(dout, n_kv).reshape(B, nq, bq, n_kv, G, D) \
+        .transpose(1, 0, 3, 4, 2, 5)
+    ob = _expand_q(out, n_kv).reshape(B, nq, bq, n_kv, G, D) \
+        .transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nk, bk, n_kv, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, n_kv, D).transpose(1, 0, 3, 2, 4)
+    # D_i = rowsum(dO * O) per query (fp32)
+    delta = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32),
+                    axis=-1)                               # (nq,B,h,G,bq)
+
+    def q_pass(carry, inp):
+        dk_acc, dv_acc = carry                             # (nk,B,h,bk,D)
+        qi, qblk, doblk, lse_q, delta_q = inp
+
+        def kv_step(carry2, inp2):
+            dq_acc = carry2
+            ki, kblk, vblk = inp2
+            mask = _block_mask(qi * bq, ki * bk, bq, bk, causal=causal,
+                               window=window, prefix=prefix)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale + mask
+            p = jnp.exp(s - lse_q[..., None])              # (B,h,G,bq,bk)
+            pb = p.astype(v.dtype)
+            dv_blk = jnp.einsum("bhgqk,bhgqd->bhkd", pb, doblk)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doblk, vblk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - delta_q[..., None]) * scale
+            dsb = ds.astype(q.dtype)
+            dq_blk = jnp.einsum("bhgqk,bhkd->bhgqd", dsb, kblk)
+            dk_blk = jnp.einsum("bhgqk,bhgqd->bhkd", dsb, qblk)
+            return dq_acc + dq_blk.astype(jnp.float32), (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros((B, n_kv, G, bq, D), jnp.float32)
+        dq_q, (dk_all, dv_all) = jax.lax.scan(
+            kv_step, dq0, (jnp.arange(nk), kb, vb))
+        return (dk_acc + dk_all.astype(jnp.float32),
+                dv_acc + dv_all.astype(jnp.float32)), dq_q
+
+    dk0 = jnp.zeros((nk, B, n_kv, bk, D), jnp.float32)
+    dv0 = jnp.zeros((nk, B, n_kv, bk, D), jnp.float32)
+    (dk_b, dv_b), dq_b = jax.lax.scan(
+        q_pass, (dk0, dv0), (jnp.arange(nq), qb, dob, lse, delta))
+
+    dq = dq_b.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Hq, D) \
+        .astype(q.dtype)
+    dk = dk_b.transpose(1, 0, 3, 2, 4).reshape(B, Sk, n_kv, D).astype(k.dtype)
+    dv = dv_b.transpose(1, 0, 3, 2, 4).reshape(B, Sk, n_kv, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

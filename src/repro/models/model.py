@@ -1,0 +1,94 @@
+"""Public model API: build/init/shape-spec entry points used by the
+launcher, trainer, server, tests and benchmarks.
+
+``input_specs(cfg, shape)`` is the single source of truth for what every
+(arch x shape) cell feeds the lowered step — ShapeDtypeStructs only, no
+allocation, exactly the dry-run contract.  Modality frontends are STUBS per
+the brief: cells feed precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import decode as D
+from . import transformer as T
+
+Params = dict
+
+
+def init_model(key, cfg: ModelConfig, tp_pad: int = 1) -> Params:
+    return T.init_model(key, cfg, tp_pad)
+
+
+def param_shapes(cfg: ModelConfig, tp_pad: int = 1):
+    return T.param_shapes(cfg, tp_pad)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+
+
+def _act_dtype(cfg):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Token count fed to the LM trunk for a cell's seq_len budget."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.n_prefix_tokens
+    if cfg.family == "encdec":
+        return seq_len // 2
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sds = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    dt = _act_dtype(cfg)
+    St = text_len(cfg, S)
+
+    if shape.kind in ("train", "prefill"):
+        batch: dict = {"tokens": sds((B, St), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["prefix_emb"] = sds((B, cfg.n_prefix_tokens, cfg.d_model),
+                                      dt)
+        if cfg.family == "encdec":
+            batch["src_emb"] = sds((B, S - St, cfg.d_model), dt)
+        return batch
+
+    # decode: one token + cache of seq_len (brief: "one new token with a KV
+    # cache of seq_len")
+    return {
+        "tokens": sds((B, 1), jnp.int32),
+        "cache": D.cache_spec(cfg, S, B),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def make_inputs(key, cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Concrete random inputs matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape)
+
+    def materialize(path, s):
+        k = jax.random.fold_in(key, hash(path) % (2 ** 31))
+        if s.dtype == jnp.int32 and s.shape == ():
+            return jnp.asarray(shape.seq_len - 1, jnp.int32)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jax.random.randint(k, s.shape, 0, cfg.vocab_size,
+                                      s.dtype)
+        return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+    flat, tree = jax.tree.flatten_with_path(specs)
+    out = [materialize(str(p), s) for p, s in flat]
+    return jax.tree.unflatten(tree, out)
+
+
+# re-exports for callers
+forward_train = T.forward_train
+forward_prefill = D.forward_prefill
+forward_decode = D.forward_decode
+cache_spec = D.cache_spec
+init_cache = D.init_cache

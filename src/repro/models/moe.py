@@ -1,0 +1,185 @@
+"""Mixture-of-Experts blocks (arctic-480b, qwen3-moe).
+
+Dispatch strategy (TPU/GSPMD-native, see DESIGN.md §4): activations are
+sharded batch-over-data and *replicated* over the model axis; experts are
+sharded expert-over-model.  Tokens are grouped by data shard (`G` groups,
+group dim carries the 'data' sharding), and within each group we do an
+index-based (sort-free) dispatch:
+
+  top-k -> per-(group, expert) slot assignment via a one-hot-free cumsum
+  rank -> gather rows into an (G, E, C, d) buffer -> expert einsum
+  (E sharded) -> scatter-add back -> partial sums psum over 'model'.
+
+Because x is replicated across the model axis, the expert gather is LOCAL;
+the only collective is the combine all-reduce — the same volume as a
+Megatron TP FFN.  No (T, E, C) one-hot einsum: HLO FLOPs stay honest, which
+matters for the MODEL_FLOPS/HLO_FLOPs roofline ratio.
+
+Tokens overflowing an expert's capacity C = ceil(T_g * k / E * cf) are
+dropped (standard dropped-token semantics); tests verify equality with the
+dense mixture reference when cf is generous.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dtype, _init, apply_mlp, init_mlp
+
+
+def init_moe(key, cfg) -> dict:
+    keys = jax.random.split(key, 4)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    p = {
+        "router": _init(keys[0], (d, E), scale=0.02, dtype=jnp.float32),
+        "w_gate": _init(keys[1], (E, d, ff), dtype=dt),
+        "w_up": _init(keys[2], (E, d, ff), dtype=dt),
+        "w_down": _init(keys[3], (E, ff, d), dtype=dt),
+    }
+    if cfg.moe_dense_ff:
+        p["dense"] = init_mlp(jax.random.fold_in(key, 7), cfg,
+                              d_ff=cfg.moe_dense_ff)
+    return p
+
+
+@jax.custom_vjp
+def _expert_ffn(ei, wg, wu, wd):
+    out, _ = _expert_ffn_fwd(ei, wg, wu, wd)
+    return out
+
+
+def _expert_ffn_fwd(ei, wg, wu, wd):
+    from .layers import shard_expert
+    a = jnp.einsum("gecd,edf->gecf", ei, wg)
+    b = jnp.einsum("gecd,edf->gecf", ei, wu)
+    h = jax.nn.silu(a) * b
+    out = shard_expert(jnp.einsum("gecf,efd->gecd", h, wd))
+    return out, (ei, wg, wu, wd, a, b)
+
+
+def _expert_ffn_bwd(res, dout):
+    """Hand-written backward: every einsum keeps E as a batch dim on both
+    operands AND the output, with explicit sharding constraints, so no
+    all-gather of (E, C, d)-sized tensors can appear (H9)."""
+    from .layers import shard_expert
+    ei, wg, wu, wd, a, b = res
+    sig = jax.nn.sigmoid(a.astype(jnp.float32)).astype(a.dtype)
+    silu_a = a * sig
+    h = silu_a * b
+    dout = shard_expert(dout)
+    dh = shard_expert(jnp.einsum("gecd,efd->gecf", dout, wd))
+    dwd = jnp.einsum("gecf,gecd->efd", h, dout)
+    db = dh * silu_a
+    da = dh * b * (sig + a * sig * (1 - sig))
+    da = shard_expert(da)
+    db = shard_expert(db)
+    dei = shard_expert(jnp.einsum("gecf,edf->gecd", da, wg)
+                       + jnp.einsum("gecf,edf->gecd", db, wu))
+    dwg = jnp.einsum("gecd,gecf->edf", ei, da)
+    dwu = jnp.einsum("gecd,gecf->edf", ei, db)
+    return dei, dwg.astype(wg.dtype), dwu.astype(wu.dtype), \
+        dwd.astype(wd.dtype)
+
+
+_expert_ffn.defvjp(_expert_ffn_fwd, _expert_ffn_bwd)
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = int(np.ceil(tokens_per_group * cfg.experts_per_token
+                    / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg, n_groups: int = 1):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    n_groups should equal the data-axis size so the group dim can carry the
+    'data' sharding (launch/mesh.py sets it; smoke tests use 1).
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.experts_per_token
+    if T % n_groups:
+        n_groups = 1
+    G = n_groups
+    Tg = T // G
+    C = _capacity(Tg, cfg)
+
+    from .layers import shard_batch, shard_expert
+
+    xf = shard_batch(x.reshape(G, Tg, d))
+    logits = xf.astype(jnp.float32) @ params["router"]          # (G, Tg, E)
+    probs = shard_batch(jax.nn.softmax(logits, axis=-1))
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renormalise
+
+    # ---- slot assignment: rank of each (token, choice) within its expert ---
+    # Routing tensors are (G: data)-sharded and replicated over 'model' —
+    # every model shard computes identical cheap int math, no collectives
+    # (H8, EXPERIMENTS.md §Perf).  One-hot flattened choices-first so lower
+    # k wins under capacity pressure.
+    oh = shard_batch(jax.nn.one_hot(expert_idx, E, dtype=jnp.int32))
+    oh_flat = shard_batch(oh.transpose(0, 2, 1, 3).reshape(G, k * Tg, E))
+    ranks = shard_batch(jnp.cumsum(oh_flat, axis=1) - oh_flat)   # (G,kTg,E)
+    slot_flat = jnp.sum(ranks * oh_flat, axis=-1)                # (G, kTg)
+    slot = slot_flat.reshape(G, k, Tg).transpose(0, 2, 1)        # (G, Tg, k)
+    keep = slot < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # ---- dispatch into (G, E, C, d) expert buffers (local gather: xf is
+    # replicated across 'model', indices too) ----
+    flat_pos = shard_batch(jnp.where(keep, expert_idx * C + slot, E * C))
+    src_row = jnp.repeat(jnp.arange(Tg), k)                      # (Tg*k,)
+    buf = jnp.zeros((G, E * C + 1, d), x.dtype)
+    buf = jax.vmap(
+        lambda b, fp, xg: b.at[fp.reshape(-1)].set(xg[src_row])
+    )(buf, flat_pos, xf)
+    expert_in = shard_expert(buf[:, : E * C].reshape(G, E, C, d))
+
+    # ---- expert FFN (E sharded over 'model') ----
+    if getattr(cfg, "moe_expert_cvjp", False):
+        # H9 (refuted on qwen3 — kept for study, see EXPERIMENTS.md §Perf):
+        # hand-written backward with explicit constraints.
+        expert_out = _expert_ffn(expert_in, params["w_gate"],
+                                 params["w_up"], params["w_down"])
+    else:
+        a = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+        b = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+        expert_out = shard_expert(
+            jnp.einsum("gecf,efd->gecd", jax.nn.silu(a) * b,
+                       params["w_down"]))
+
+    # ---- combine: scatter-add slots back to tokens.  Each model shard
+    # scatters its local experts' slots into a (Tg+1, d) buffer; the
+    # partial results meet in ONE bf16 psum per layer — the same volume as
+    # a Megatron TP FFN, with no cross-shard gathers (H8). ----
+    tok_for_slot = jnp.full((G, E * C + 1), Tg, jnp.int32)
+    tok_for_slot = jax.vmap(
+        lambda t, fp: t.at[fp.reshape(-1)].set(src_row)
+    )(tok_for_slot, flat_pos)
+    gate_for_slot = jnp.zeros((G, E * C + 1), x.dtype)
+    gate_for_slot = jax.vmap(
+        lambda gg, fp, gv: gg.at[fp.reshape(-1)].set(
+            gv.reshape(-1).astype(x.dtype))
+    )(gate_for_slot, flat_pos, gate_vals)
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(G, E * C, d),
+         jnp.zeros((G, 1, d), expert_out.dtype)], axis=1)
+    y = jax.vmap(
+        lambda of, tf, gf: jnp.zeros((Tg + 1, d), x.dtype)
+        .at[tf].add(of * gf[:, None])
+    )(out_flat, tok_for_slot, gate_for_slot)[:, :Tg]
+    y = shard_batch(y)
+
+    # ---- aux load-balance loss (Switch-style) ----
+    density = jnp.mean(oh.astype(jnp.float32).sum(2), axis=1)     # (G, E)
+    router_prob = jnp.mean(probs, axis=1)                         # (G, E)
+    aux = jnp.mean(jnp.sum(density * router_prob, axis=-1)) * E
+
+    y = y.reshape(B, S, d)
+    if "dense" in params:  # arctic: parallel dense residual branch
+        y = y + apply_mlp(params["dense"], x, cfg)
+    return y, aux

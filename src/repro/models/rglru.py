@@ -1,0 +1,103 @@
+"""Griffin / RecurrentGemma recurrent blocks (RG-LRU).
+
+Block: x -> {branch A: linear -> causal conv1d -> RG-LRU} * {branch B:
+linear -> gelu} -> out-proj.  The RG-LRU recurrence per channel:
+
+    r_t = sigmoid(W_r x_t + b_r)          (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)          (input gate)
+    a_t = a ^ (c * r_t)                   (a = sigmoid(Lambda), c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` — O(S log S) depth, MXU/VPU friendly, the
+TPU-native replacement for the paper's fused CUDA scan.  Decode is the O(1)
+step.  The hybrid stack interleaves these with local (windowed) MQA
+attention 1:2 (see transformer.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dtype, _init
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    keys = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    return {
+        "w_branch": _init(keys[0], (d, w), dtype=dt),
+        "w_gate_branch": _init(keys[1], (d, w), dtype=dt),
+        "conv": _init(keys[2], (cfg.conv_width, w), scale=0.5, dtype=dt),
+        "w_r": _init(keys[3], (w, w), scale=0.02, dtype=dt),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": _init(keys[4], (w, w), scale=0.02, dtype=dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 2.0, jnp.float32),   # sigmoid(2) ~ .88 decay
+        "w_out": _init(keys[5], (w, d), dtype=dt),
+    }
+
+
+def _rglru_coeffs(params, x):
+    """x: (B, S, w) -> (a_t, b_t) of the recurrence h = a*h + b (fp32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_r"].astype(jnp.float32)
+                       + params["b_r"])
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32)
+                       + params["b_i"])
+    log_a_base = jax.nn.log_sigmoid(params["lam"])           # (w,)
+    log_a = _C * r * log_a_base                              # (B, S, w)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def _linear_scan_assoc(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t along axis 1 via associative_scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def rglru_block(params: dict, x: jnp.ndarray, cfg,
+                state: jnp.ndarray | None = None,
+                conv_state: jnp.ndarray | None = None):
+    """x: (B, S, d) -> (y (B, S, d), h_final, conv_state').
+    state: (B, w) recurrent carry (None = zeros)."""
+    from .ssm import _causal_conv  # same depthwise causal conv
+    raw = x @ params["w_branch"]
+    K = params["conv"].shape[0]
+    if conv_state is None:
+        branch = _causal_conv(raw, params["conv"])
+        # conv tail for prefill->decode handoff (pre-conv inputs)
+        pad = jnp.zeros((raw.shape[0], max(0, K - 1 - raw.shape[1]),
+                         raw.shape[2]), raw.dtype)
+        new_conv = jnp.concatenate([pad, raw[:, -(K - 1):]], axis=1)
+    else:
+        branch, new_conv = _causal_conv(raw, params["conv"], conv_state)
+    a, b = _rglru_coeffs(params, branch)
+    h = _linear_scan_assoc(a, b, h0=None if state is None
+                           else state.astype(jnp.float32))
+    h_final = h[:, -1]
+    gate = jax.nn.gelu((x @ params["w_gate_branch"]).astype(jnp.float32))
+    y = (h * gate).astype(x.dtype) @ params["w_out"]
+    return y, h_final, new_conv
+
+
+def rglru_decode_step(params: dict, x: jnp.ndarray, cfg,
+                      state: jnp.ndarray, conv_state: jnp.ndarray):
+    """One-token step. x: (B, 1, d); state: (B, w)."""
+    y, h_final, new_conv = rglru_block(params, x, cfg,
+                                       state=state, conv_state=conv_state)
+    return y, h_final, new_conv

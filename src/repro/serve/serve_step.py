@@ -1,0 +1,33 @@
+"""Serving step factories: prefill (prompt -> cache) and decode (one token).
+
+These are the functions the decode_* / long_* dry-run cells lower, and what
+the serving example drives with batched requests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward_decode, forward_prefill
+from ..models import layers as L
+
+
+def make_prefill_step(cfg, pad_to: int | None = None):
+    def prefill_step(params, batch):
+        hidden, cache = forward_prefill(params, cfg, batch, pad_to=pad_to)
+        logits = L.lm_logits(params["embed"], hidden[:, -1:])
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg, greedy: bool = True):
+    def decode_step(params, cache, tokens, pos):
+        hidden, cache = forward_decode(params, cfg, cache, tokens, pos)
+        logits = L.lm_logits(params["embed"], hidden)
+        if greedy:
+            next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
+                .astype(jnp.int32)
+        else:
+            next_tok = tokens
+        return next_tok, logits, cache
+    return decode_step

@@ -1,0 +1,137 @@
+"""Optimizers as pure pytree transforms: AdamW and Adafactor.
+
+Adafactor (factored second moment + bf16 first moment) is what lets the
+480 B-param MoE fit 16 GB/chip at 256-way sharding — Adam's 8 B/param fp32
+state cannot (DESIGN.md §5).  Optimizer state inherits the parameter
+PartitionSpecs leaf-for-leaf (factored leaves drop the corresponding axis),
+so ZeRO-style sharding falls out of the param specs for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # adafactor
+    decay_offset: float = 1e-3
+    clip_rms: float = 1.0
+
+
+# --------------------------- AdamW ---------------------------
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, oc: OptConfig):
+    c = state["count"] + 1
+    b1, b2 = oc.b1, oc.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** c.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** c.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - oc.lr * step).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": c}
+
+
+# --------------------------- Adafactor ---------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adafactor_init(params) -> dict:
+    def vr(p):  # row stats (reduce last dim)
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def vc(p):  # col stats (reduce 2nd-to-last dim)
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+    return {"vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                              params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, oc: OptConfig):
+    c = state["count"] + 1
+    beta2 = 1.0 - (c.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, vr, vc, m, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr2 / jnp.mean(vr2, axis=-1, keepdims=True) + 1e-30)
+            cfac = jax.lax.rsqrt(vc2 + 1e-30)
+            update = g * rfac[..., None] * cfac[..., None, :]
+        else:
+            vr2 = beta2 * vr + (1 - beta2) * g2
+            vc2 = vc
+            update = g * jax.lax.rsqrt(vr2 + 1e-30)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / oc.clip_rms)
+        m2 = (oc.b1 * m.astype(jnp.float32) + (1 - oc.b1) * update) \
+            .astype(jnp.bfloat16)
+        step = m2.astype(jnp.float32) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - oc.lr * step).astype(p.dtype), \
+            vr2, vc2, m2
+
+    out = jax.tree.map(upd, grads, state["vr"], state["vc"], state["m"],
+                       params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"vr": pick(1), "vc": pick(2), "m": pick(3), "count": c}
+
+
+# --------------------------- facade ---------------------------
+
+def opt_init(name: str, params):
+    return adamw_init(params) if name == "adamw" else adafactor_init(params)
+
+
+def opt_update(name: str, grads, state, params, oc: OptConfig | None = None):
+    oc = oc or OptConfig(name=name)
+    if name == "adamw":
+        return adamw_update(grads, state, params, oc)
+    return adafactor_update(grads, state, params, oc)
+
+
+def opt_state_shapes(name: str, param_shapes_tree):
+    """eval_shape of the optimizer state (dry-run path)."""
+    def fake(s):
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.eval_shape(
+        lambda: opt_init(name, jax.tree.map(fake, param_shapes_tree)))

@@ -1,0 +1,80 @@
+"""Training step factory: loss -> grads -> (optional compression) -> update.
+
+``make_train_step(cfg)`` returns a pure function
+    train_step(params, opt_state, batch) -> (params', opt_state', metrics)
+suitable for jax.jit with in/out shardings from launch/mesh.py.  Gradient
+compression (cfg.grad_compression) round-trips grads through the int8 Pallas
+quantiser — the compressed representation is what a pod-axis all-reduce
+would ship (4x fewer bytes); the numerical effect is in the HLO either way.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.quantize import (BLOCK_GROUPS, GROUP, dequantize_pallas,
+                                quantize_pallas)
+from ..models import forward_train
+from .loss import lm_loss
+from .optimizer import OptConfig, opt_update
+
+
+def _compress_leaf(g: jnp.ndarray, interpret: bool) -> jnp.ndarray:
+    """int8 quantise->dequantise round trip (the all-reduce payload)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    block = GROUP * BLOCK_GROUPS
+    if n < block:
+        return g  # tiny leaves (norm scales) are not worth compressing
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, jnp.float32)])
+    q, s = quantize_pallas(flat.reshape(-1, GROUP), interpret=interpret)
+    back = dequantize_pallas(q, s, interpret=interpret).reshape(-1)[:n]
+    return back.reshape(g.shape).astype(g.dtype)
+
+
+def compress_grads(grads, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return jax.tree.map(lambda g: _compress_leaf(g, interpret), grads)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def make_train_step(cfg, oc: OptConfig | None = None, n_groups: int = 1,
+                    clip_norm: float = 1.0):
+    oc = oc or OptConfig(name=cfg.optimizer)
+
+    def loss_fn(params, batch):
+        hidden, aux = forward_train(params, cfg, batch, n_groups=n_groups)
+        loss = lm_loss(params, cfg, hidden, batch["tokens"], aux)
+        return loss, {"aux": aux}
+
+    def train_step(params, opt_state, batch):
+        (loss, extras), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        if cfg.grad_compression:
+            grads = compress_grads(grads)
+        params, opt_state = opt_update(cfg.optimizer, grads, opt_state,
+                                       params, oc)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "aux_loss": extras["aux"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, n_groups: int = 1):
+    def eval_step(params, batch):
+        hidden, aux = forward_train(params, cfg, batch, n_groups=n_groups)
+        return lm_loss(params, cfg, hidden, batch["tokens"], aux)
+    return eval_step

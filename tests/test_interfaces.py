@@ -1,0 +1,102 @@
+"""Access interfaces: DFS namespace + the paper's mechanisms, plus the
+perf-model structure they must exhibit (interface cost ordering)."""
+import numpy as np
+import pytest
+
+from repro.core import Pool, Topology, bandwidth
+from repro.core.interfaces import (DFS, INTERFACE_NAMES, MPIIOInterface,
+                                   make_interface)
+
+
+@pytest.fixture()
+def world():
+    pool = Pool(Topology(), materialize=True)
+    cont = pool.create_container("c", oclass="S2")
+    dfs = DFS(cont)
+    dfs.mkdir("/d")
+    return pool, dfs
+
+
+@pytest.mark.parametrize("iface_name", INTERFACE_NAMES)
+def test_roundtrip_every_interface(world, iface_name):
+    pool, dfs = world
+    iface = make_interface(iface_name, dfs)
+    payload = (np.arange(123_457) % 251).astype(np.uint8)
+    h = iface.create(f"/d/file_{iface_name}", client_node=1, process=2)
+    h.write_at(0, payload)
+    np.testing.assert_array_equal(h.read_at(0, payload.size), payload)
+    st = iface.stat(f"/d/file_{iface_name}")
+    assert st["size"] >= payload.size
+
+
+def test_dfs_namespace_ops(world):
+    pool, dfs = world
+    dfs.mkdir("/d/sub")
+    iface = make_interface("dfs", dfs)
+    iface.create("/d/sub/x")
+    iface.create("/d/sub/y")
+    assert dfs.readdir("/d/sub") == ["x", "y"]
+    iface.unlink("/d/sub/x")
+    assert dfs.readdir("/d/sub") == ["y"]
+    with pytest.raises(FileNotFoundError):
+        dfs.stat("/d/sub/x")
+
+
+def test_posix_streaming_api(world):
+    pool, dfs = world
+    iface = make_interface("posix", dfs)
+    h = iface.create("/d/stream")
+    h.write(b"hello ")
+    h.write(b"world")
+    h.seek(0)
+    assert bytes(h.read(11)) == b"hello world"
+    assert h.size == 11
+
+
+def test_mpiio_collective_roundtrip(world):
+    pool, dfs = world
+    iface = MPIIOInterface(dfs)
+    h = iface.create("/d/coll")
+    node_of = {r: r // 4 for r in range(8)}
+    pieces = {r: (r * 1000, 1000) for r in range(8)}
+    wrote = iface.write_all(h, pieces, node_of)
+    assert wrote == 8000
+    got = iface.read_all(h, pieces, node_of)
+    assert got == 8000
+
+
+def test_interface_cost_ordering():
+    """Modeled single-node bulk write bandwidth must order:
+    daos-array >= dfs > posix-over-fuse > hdf5 (paper's structure)."""
+    results = {}
+    for name in ("daos-array", "dfs", "posix", "hdf5"):
+        pool = Pool(Topology(n_client_nodes=1), materialize=False)
+        cont = pool.create_container("c", oclass="S2")
+        dfs = DFS(cont, dir_oclass="S1")
+        iface = make_interface(name, dfs)
+        h = iface.create("/f", client_node=0, process=0)
+        with pool.sim.phase() as ph:
+            for off in range(0, 256 << 20, 4 << 20):
+                h.write_sized_at(off, 4 << 20)
+        results[name] = bandwidth(ph.total_bytes(), ph.elapsed)
+    assert results["daos-array"] >= results["dfs"] * 0.999
+    assert results["dfs"] > results["posix"]
+    assert results["posix"] > results["hdf5"]
+
+
+def test_fuse_shared_daemon_contends():
+    """Two posix processes on one node share the dfuse daemon; on two nodes
+    they don't — the two-node phase must be faster."""
+    def run(n_nodes):
+        pool = Pool(Topology(n_client_nodes=2), materialize=False)
+        cont = pool.create_container("c", oclass="SX")
+        dfs = DFS(cont, dir_oclass="S1")
+        iface = make_interface("posix", dfs)
+        with pool.sim.phase() as ph:
+            for p in range(2):
+                node = p % n_nodes
+                h = iface.create(f"/f{p}", client_node=node, process=p)
+                for off in range(0, 64 << 20, 1 << 20):
+                    h.write_sized_at(off, 1 << 20)
+        return ph.elapsed
+    assert run(2) < run(1)

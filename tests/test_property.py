@@ -1,0 +1,99 @@
+"""Hypothesis property tests on the store's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Pool, Topology, get_class, integrity, jump_hash, \
+    place_object
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(key=st.integers(min_value=0, max_value=2**64 - 1),
+       n=st.integers(min_value=1, max_value=64))
+@settings(**SETTINGS)
+def test_jump_hash_in_range_and_stable(key, n):
+    b = jump_hash(key, n)
+    assert 0 <= b < n
+    assert b == jump_hash(key, n)          # deterministic
+    # consistency: growing the bucket count only moves keys forward
+    b2 = jump_hash(key, n + 1)
+    assert b2 == b or b2 == n
+
+
+@given(oid=st.integers(min_value=0, max_value=2**63),
+       oc=st.sampled_from(["S1", "S2", "S4", "SX", "RP_2GX", "EC_4P1"]),
+       n_engines=st.integers(min_value=2, max_value=16))
+@settings(**SETTINGS)
+def test_placement_valid(oid, oc, n_engines):
+    lay = place_object(oid, get_class(oc), range(n_engines), 1)
+    assert all(0 <= t < n_engines for t in lay.targets)
+    k = get_class(oc).resolve_stripes(n_engines)
+    assert lay.width in (k, min(k + get_class(oc).ec_parity, n_engines)) \
+        or lay.width >= 1
+
+
+@given(writes=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=5000),
+              st.binary(min_size=1, max_size=2000)),
+    min_size=1, max_size=8),
+    oc=st.sampled_from(["S1", "S2", "SX", "RP_2GX"]),
+    cell=st.sampled_from([256, 1024, 4096]))
+@settings(**SETTINGS)
+def test_read_after_write_arbitrary_extents(writes, oc, cell):
+    """The store must agree with a plain in-memory byte array under any
+    sequence of overlapping writes (per object class / stripe size)."""
+    pool = Pool(Topology(n_server_nodes=2, engines_per_node=2))
+    cont = pool.create_container("c")
+    arr = cont.open_array("f", oclass=oc, stripe_cell=cell)
+    shadow = np.zeros(8192, np.uint8)
+    hi = 0
+    for off, data in writes:
+        arr.write(off, data)
+        shadow[off: off + len(data)] = np.frombuffer(data, np.uint8)
+        hi = max(hi, off + len(data))
+    got = arr.read(0, hi)
+    np.testing.assert_array_equal(got, shadow[:hi])
+
+
+@given(data=st.binary(min_size=0, max_size=4096))
+@settings(**SETTINGS)
+def test_checksum_host_equals_device(data):
+    assert integrity.checksum(data) == ops.checksum_array(
+        np.frombuffer(data, np.uint8))
+
+
+@given(data=st.binary(min_size=2, max_size=2048),
+       flip=st.integers(min_value=0, max_value=10**9))
+@settings(**SETTINGS)
+def test_checksum_detects_any_single_bit_flip(data, flip):
+    arr = bytearray(data)
+    pos = flip % len(arr)
+    bit = 1 << (flip % 8)
+    arr[pos] ^= bit
+    assert integrity.checksum(bytes(arr)) != integrity.checksum(data)
+
+
+@given(nbytes=st.integers(min_value=1, max_value=50_000),
+       width=st.sampled_from([1, 2, 4, 8]),
+       cell=st.sampled_from([512, 2048]))
+@settings(**SETTINGS)
+def test_shard_pack_bijection(nbytes, width, cell):
+    data = np.arange(nbytes, dtype=np.uint64).view(np.uint8)[:nbytes].copy()
+    packed, meta = ops.shard_pack(data, width=width, cell_bytes=cell)
+    back = ops.shard_unpack(packed, meta)
+    np.testing.assert_array_equal(back, data)
+    # every input byte lands exactly once: total payload preserved
+    assert np.asarray(packed).view(np.uint8).size >= nbytes
+
+
+@given(x=st.lists(st.floats(min_value=-1e4, max_value=1e4,
+                            allow_nan=False, width=32),
+                  min_size=1, max_size=300))
+@settings(**SETTINGS)
+def test_quantize_error_bound(x):
+    a = np.asarray(x, np.float32)
+    q, s, meta = ops.quantize(a)
+    back = ops.dequantize(q, s, meta)
+    bound = max(1e-6, np.abs(a).max() / 127.0 * 1.02)
+    assert np.max(np.abs(a - np.asarray(back))) <= bound

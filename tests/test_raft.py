@@ -1,0 +1,66 @@
+"""RAFT-lite metadata service: elections, quorum, replication, failover."""
+import pytest
+
+from repro.core import NoQuorumError, RaftGroup
+
+
+def test_basic_kv():
+    g = RaftGroup(3)
+    g.set("a", 1)
+    g.set("b", {"x": 2})
+    assert g.get("a") == 1
+    assert g.get("b") == {"x": 2}
+    g.delete("a")
+    assert g.get("a") is None
+
+
+def test_leader_failover_preserves_committed_state():
+    g = RaftGroup(3)
+    for i in range(20):
+        g.set(("k", i), i * i)
+    old_leader = g.leader_id
+    g.fail_node(old_leader)
+    assert g.leader().id != old_leader
+    for i in range(20):
+        assert g.get(("k", i)) == i * i
+    g.set("post", "failover")  # still writable with 2/3
+    assert g.get("post") == "failover"
+
+
+def test_no_quorum_rejects_writes():
+    g = RaftGroup(3)
+    g.set("a", 1)
+    g.fail_node(0)
+    g.fail_node(1)
+    if g.leader_id is None or not g.nodes[g.leader_id].alive:
+        with pytest.raises(NoQuorumError):
+            g.leader()
+    else:
+        with pytest.raises(NoQuorumError):
+            g.set("b", 2)
+    # committed state still readable from the survivor's log
+    assert g.nodes[2].state.get("a") == 1
+
+
+def test_recovered_node_catches_up():
+    g = RaftGroup(3)
+    g.set("a", 1)
+    g.fail_node(2)
+    g.set("b", 2)
+    g.set("c", 3)
+    g.restore_node(2)
+    g.set("d", 4)  # replication to node 2 forces full sync on divergence
+    assert g.nodes[2].state.get("d") == 4
+    assert g.nodes[2].state.get("b") == 2
+
+
+def test_five_node_group_survives_two_failures():
+    g = RaftGroup(5)
+    for i in range(10):
+        g.set(i, i)
+    g.fail_node(g.leader_id)
+    g.fail_node(g.leader().id)
+    for i in range(10):
+        assert g.get(i) == i
+    g.set("still", "alive")
+    assert g.get("still") == "alive"

@@ -1,0 +1,156 @@
+"""Object store core: placement, striping, redundancy, transactions,
+failures, rebuild."""
+import numpy as np
+import pytest
+
+from repro.core import (ChecksumError, DataLossError, EngineFailedError,
+                        NotFoundError, Pool, Topology, get_class,
+                        place_object)
+
+TOPO = Topology(n_server_nodes=4, engines_per_node=2)
+
+
+@pytest.fixture()
+def pool():
+    return Pool(TOPO)
+
+
+def test_stripe_roundtrip_classes(pool):
+    cont = pool.create_container("c", oclass="S2")
+    data = (np.arange(2_500_000) % 251).astype(np.uint8)
+    for oc in ("S1", "S2", "S4", "SX"):
+        arr = cont.open_array(f"f_{oc}", oclass=oc)
+        arr.write(0, data)
+        np.testing.assert_array_equal(arr.read(0, data.size), data)
+        lay = arr._layout()
+        assert lay.width == get_class(oc).resolve_stripes(8)
+
+
+def test_partial_overwrite_rmw(pool):
+    cont = pool.create_container("c")
+    arr = cont.open_array("f", oclass="S2", stripe_cell=1024)
+    arr.write(0, np.zeros(5000, np.uint8))
+    arr.write(1000, b"A" * 2048)  # spans cells, unaligned
+    out = arr.read(990, 2070)
+    assert bytes(out[:10]) == b"\0" * 10
+    assert bytes(out[10:2058]) == b"A" * 2048
+    assert bytes(out[2058:]) == b"\0" * 12
+
+
+def test_sparse_holes_read_zero(pool):
+    cont = pool.create_container("c")
+    arr = cont.open_array("f", oclass="S2", stripe_cell=512)
+    arr.write(10_000, b"end")
+    out = arr.read(0, 10_003)
+    assert not out[:10_000].any()
+    assert bytes(out[10_000:]) == b"end"
+
+
+def test_replication_degraded_read_and_rebuild(pool):
+    cont = pool.create_container("c")
+    data = (np.arange(700_000) % 251).astype(np.uint8)
+    arr = cont.open_array("f", oclass="RP_2GX")
+    arr.write(0, data)
+    lay = arr._layout()
+    pool.fail_engine(lay.targets[0])
+    np.testing.assert_array_equal(arr.read(0, data.size), data)
+    stats = pool.rebuild()
+    assert stats["moved_cells"] > 0 and stats["lost_objects"] == 0
+    np.testing.assert_array_equal(arr.read(0, data.size), data)
+
+
+def test_replica_placement_distinct_engines(pool):
+    for oid in range(50):
+        lay = place_object(oid, get_class("RP_2GX"), range(8), 1)
+        w = lay.width
+        for i in range(w):
+            assert lay.targets[i] != lay.targets[w + i], \
+                f"replica co-located for oid {oid} stripe {i}"
+
+
+def test_ec_reconstruction(pool):
+    cont = pool.create_container("c")
+    data = (np.arange(3_000_000) % 251).astype(np.uint8)
+    arr = cont.open_array("f", oclass="EC_4P1")
+    arr.write(0, data)
+    lay = arr._layout()
+    alive = [t for t in set(lay.targets) if pool.engines[t].alive]
+    pool.fail_engine(alive[0])
+    np.testing.assert_array_equal(arr.read(0, data.size), data)
+
+
+def test_unprotected_data_loss_is_loud(pool):
+    cont = pool.create_container("c")
+    arr = cont.open_array("f", oclass="S1")
+    arr.write(0, b"x" * 100_000)
+    lay = arr._layout()
+    pool.fail_engine(lay.targets[0])
+    with pytest.raises(DataLossError):
+        arr.read(0, 100)
+    assert pool.rebuild()["lost_objects"] == 1
+
+
+def test_tx_isolation_commit_abort(pool):
+    cont = pool.create_container("c")
+    arr = cont.open_array("f", oclass="S2")
+    arr.write(0, b"base")
+    tx = cont.tx_begin()
+    tx.write_array(arr, 0, b"tx01")
+    assert bytes(arr.read(0, 4)) == b"base"          # invisible pre-commit
+    assert bytes(tx.read_array(arr, 0, 4)) == b"tx01"  # visible inside tx
+    tx.commit()
+    assert bytes(arr.read(0, 4)) == b"tx01"
+    tx2 = cont.tx_begin()
+    tx2.write_array(arr, 0, b"dead")
+    assert tx2.abort() > 0
+    assert bytes(arr.read(0, 4)) == b"tx01"
+
+
+def test_snapshot_reads_old_epoch(pool):
+    cont = pool.create_container("c")
+    arr = cont.open_array("f", oclass="S2")
+    arr.write(0, b"v1v1")
+    snap = cont.snapshot()
+    arr.write(0, b"v2v2")
+    assert bytes(arr.read(0, 4)) == b"v2v2"
+    assert bytes(arr.read(0, 4, epoch=float(snap))) == b"v1v1"
+
+
+def test_checksum_detects_corruption(pool):
+    cont = pool.create_container("c")
+    arr = cont.open_array("f", oclass="S1")
+    arr.write(0, b"payload-payload-payload")
+    lay = arr._layout()
+    eng = pool.engines[lay.shard_for_chunk(0)]
+    key = (cont.label, arr.oid, "arr", 0)
+    rec = eng._store[key][max(eng._store[key])]
+    rec.data = b"Xayload-payload-payload"  # flip a byte behind the api
+    with pytest.raises(ChecksumError):
+        arr.read(0, 8)
+
+
+def test_capacity_enforced():
+    pool = Pool(TOPO)
+    eng = pool.engines[0]
+    eng.capacity = 1000
+    from repro.core import NoSpaceError
+    with pytest.raises(NoSpaceError):
+        eng.update(("c", 1, "arr", 0), b"x" * 2000, epoch=1)
+
+
+def test_kv_replicated_failover(pool):
+    cont = pool.create_container("c")
+    kv = cont.open_kv("kvstore", oclass="RP_3GX")
+    kv.put("dir", "entry", b"hello")
+    reps = kv._replicas_for("dir")
+    pool.fail_engine(reps[0])
+    assert kv.get("dir", "entry") == b"hello"
+    pool.fail_engine(reps[1])
+    assert kv.get("dir", "entry") == b"hello"
+
+
+def test_node_failure_fails_both_engines(pool):
+    failed = pool.fail_node(0)
+    assert len(failed) == 2
+    assert not pool.engines[0].alive and not pool.engines[1].alive
+    assert len(pool.live_engine_ids()) == 6
