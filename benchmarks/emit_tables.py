@@ -1,7 +1,11 @@
-"""Render the §Roofline markdown tables from dry-run artifacts and splice
-them into EXPERIMENTS.md at the <!-- ROOFLINE TABLES --> marker."""
+"""Render the experiment markdown tables from artifacts and splice them
+into EXPERIMENTS.md: the §Roofline tables (dry-run artifacts, at the
+<!-- ROOFLINE TABLES --> marker) and the IOR client-caching study
+(artifacts/ior_results.json cached-mode rows, at the
+<!-- IOR CACHE TABLES --> marker)."""
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 
@@ -10,6 +14,20 @@ from benchmarks.roofline import load  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 MARK = "<!-- ROOFLINE TABLES -->"
+CACHE_MARK = "<!-- IOR CACHE TABLES -->"
+
+SKELETON = f"""# EXPERIMENTS
+
+## §IOR caching
+
+{CACHE_MARK}
+
+## §Roofline
+
+{MARK}
+
+## §Perf
+"""
 
 
 def table(rows, title):
@@ -55,12 +73,53 @@ def summary_block(base, opt):
     return "\n".join(lines)
 
 
+def cache_table(rows: list[dict]) -> str:
+    """The cached-vs-uncached IOR study, one row per interface at the
+    largest client count, with speedups vs the uncached 'posix' row."""
+    crows = [r for r in rows if r.get("mode") == "cached"]
+    if not crows:
+        return ""
+    cmax = max(r["clients"] for r in crows)
+    at_max = [r for r in crows if r["clients"] == cmax]
+    base = next((r for r in at_max if r["interface"] == "posix"), None)
+    out = [f"### IOR small-transfer caching study "
+           f"({cmax} client nodes, transfer "
+           f"{at_max[0].get('transfer_mib', 0) * 1024:.0f} KiB)", "",
+           "| interface | cache | write GiB/s | re-read GiB/s | "
+           "re-write GiB/s | re-read vs posix | hit rate |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(at_max, key=lambda r: r["interface"]):
+        speed = (f"{r['re_read_gib_s'] / base['re_read_gib_s']:.1f}x"
+                 if base else "-")
+        hit = f"{r['hit_rate']:.2f}" if "hit_rate" in r else "-"
+        out.append(
+            f"| {r['interface']} | {r.get('cache', 'none')} | "
+            f"{r['write_gib_s']:.1f} | {r['re_read_gib_s']:.1f} | "
+            f"{r['re_write_gib_s']:.1f} | {speed} | {hit} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def _splice(text: str, mark: str, body: str) -> str:
+    """Replace everything between ``mark`` and the next '## ' heading (or
+    end of file) with ``mark`` + body."""
+    if mark not in text:
+        text = text.rstrip() + f"\n\n{mark}\n"
+    pre, _, post = text.partition(mark)
+    idx = post.find("\n## ")
+    tail = post[idx:] if idx >= 0 else "\n"
+    return pre + mark + "\n" + body + tail
+
+
 def main() -> None:
+    exp = ROOT / "EXPERIMENTS.md"
+    if not exp.exists():
+        exp.write_text(SKELETON)
     base = load("baseline", "16x16")
     opt = load("optimized", "16x16")
     base_mp = load("baseline", "2x16x16")
     opt_mp = load("optimized", "2x16x16")
-    parts = [MARK, ""]
+    parts = []
     if base:
         parts.append(table(base, "Baseline tag (paper-faithful autodiffed flash attention; includes the unconditional H4/H8 fixes + corrected accounting — the *original* pre-hillclimb baselines are quoted in §Perf), 16×16"))
     if opt:
@@ -68,18 +127,23 @@ def main() -> None:
                                 "H4/H8), 16×16"))
         parts.append(summary_block(base, opt))
     if base_mp or opt_mp:
-        n_ok = len(base_mp) + len(opt_mp)
         parts.append(f"Multi-pod (2×16×16): {len(base_mp)} baseline + "
                      f"{len(opt_mp)} optimized cells compiled — artifacts in "
                      f"`artifacts/dryrun/*2x16x16*.json`.\n")
-    text = (ROOT / "EXPERIMENTS.md").read_text()
-    pre = text.split(MARK)[0]
-    post = text.split(MARK)[-1]
-    post = post.split("\n## §Perf")[-1]
-    new = pre + "\n".join(parts) + "\n## §Perf" + post
-    (ROOT / "EXPERIMENTS.md").write_text(new)
-    print(f"spliced tables: base={len(base)} opt={len(opt)} "
-          f"mp={len(base_mp)}+{len(opt_mp)}")
+    text = exp.read_text()
+    text = _splice(text, MARK, "\n".join(parts))
+
+    ior_json = ROOT / "artifacts" / "ior_results.json"
+    n_cached = 0
+    if ior_json.exists():
+        rows = json.loads(ior_json.read_text())
+        body = cache_table(rows)
+        n_cached = sum(1 for r in rows if r.get("mode") == "cached")
+        if body:
+            text = _splice(text, CACHE_MARK, body)
+    exp.write_text(text)
+    print(f"spliced tables: roofline base={len(base)} opt={len(opt)} "
+          f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}")
 
 
 if __name__ == "__main__":

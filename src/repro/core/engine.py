@@ -57,6 +57,7 @@ class Engine:
         self.materialize_default = materialize
         self.alive = True
         self.used = 0
+        self.flushed_epoch = 0   # client write-back durability watermark
         self._store: dict[Key, dict[int, Record]] = {}
 
     # -- health -------------------------------------------------------------
@@ -158,6 +159,13 @@ class Engine:
                 n += 1
         return n
 
+    def mark_flushed(self, epoch: int) -> None:
+        """Advance the write-back durability watermark: every record this
+        engine holds at epochs <= ``epoch`` is known persistent (client
+        caches call this when they flush coalesced extents)."""
+        self._check()
+        self.flushed_epoch = max(self.flushed_epoch, int(epoch))
+
     # -- enumeration (rebuild, DFS readdir) -----------------------------------
     def keys(self, prefix: tuple = ()) -> Iterator[Key]:
         self._check()
@@ -173,4 +181,5 @@ class Engine:
     def stats(self) -> dict:
         return {"id": self.id, "node": self.node_id, "alive": self.alive,
                 "used_bytes": self.used, "capacity": self.capacity,
-                "n_keys": len(self._store)}
+                "n_keys": len(self._store),
+                "flushed_epoch": self.flushed_epoch}

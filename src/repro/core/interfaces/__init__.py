@@ -1,5 +1,5 @@
 """The paper's DAOS access mechanisms, as swappable interfaces."""
-from .base import AccessInterface, FileHandle
+from .base import (COST_PROFILES, AccessInterface, CostProfile, FileHandle)
 from .dfs import DFS, DFSError, DFSInterface, ArrayInterface
 from .hdf5 import HDF5CollectiveInterface, HDF5Interface
 from .mpiio import MPIIOInterface
@@ -10,9 +10,13 @@ def make_interface(name: str, dfs: DFS) -> AccessInterface:
     """Factory keyed by the names the IOR harness / configs use."""
     table = {
         "dfs": lambda: DFSInterface(dfs),
+        "dfs-cached": lambda: DFSInterface(dfs, cache_mode="writeback"),
         "daos-array": lambda: ArrayInterface(dfs),
         "posix": lambda: POSIXInterface(dfs),
         "posix-ioil": lambda: POSIXInterface(dfs, intercept=True),
+        "posix-cached": lambda: POSIXInterface(dfs, cache_mode="writeback"),
+        "posix-readahead": lambda: POSIXInterface(dfs,
+                                                  cache_mode="readahead"),
         "mpiio": lambda: MPIIOInterface(dfs),
         "hdf5": lambda: HDF5Interface(dfs),
         "hdf5-coll": lambda: HDF5CollectiveInterface(dfs),
@@ -23,9 +27,11 @@ def make_interface(name: str, dfs: DFS) -> AccessInterface:
         raise KeyError(f"unknown interface {name!r}; known: {sorted(table)}")
 
 
-INTERFACE_NAMES = ["dfs", "daos-array", "posix", "posix-ioil", "mpiio",
-                   "hdf5", "hdf5-coll"]
+INTERFACE_NAMES = ["dfs", "dfs-cached", "daos-array", "posix", "posix-ioil",
+                   "posix-cached", "posix-readahead", "mpiio", "hdf5",
+                   "hdf5-coll"]
 
-__all__ = ["AccessInterface", "ArrayInterface", "DFS", "DFSError",
-           "DFSInterface", "FileHandle", "HDF5Interface", "INTERFACE_NAMES",
-           "MPIIOInterface", "POSIXInterface", "make_interface"]
+__all__ = ["AccessInterface", "ArrayInterface", "COST_PROFILES",
+           "CostProfile", "DFS", "DFSError", "DFSInterface", "FileHandle",
+           "HDF5Interface", "INTERFACE_NAMES", "MPIIOInterface",
+           "POSIXInterface", "make_interface"]

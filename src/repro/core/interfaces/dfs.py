@@ -126,14 +126,20 @@ class DFS:
 
 
 class DFSInterface(AccessInterface):
-    """The paper's "DFS" line: native libdfs API, user-space, async."""
+    """The paper's "DFS" line: native libdfs API, user-space, async.
+
+    ``cache_mode`` models libdfs-level client caching (readahead /
+    write-back), the analogue of dfuse caching for the native API.
+    """
 
     name = "dfs"
+    profile_name = "dfs"
 
-    def make_ctx(self, client_node: int = 0, process: int = 0,
-                 transfer_bytes: int = 0) -> IOCtx:
-        return IOCtx(client_node=client_node, process=process,
-                     lat_per_op=4e-6, sync=False)
+    def __init__(self, dfs, cache_mode: str = "none") -> None:
+        super().__init__(dfs, cache_mode=cache_mode)
+        if cache_mode != "none":
+            self.name += ("-cached" if cache_mode == "writeback"
+                          else f"-{cache_mode}")
 
 
 class ArrayInterface(AccessInterface):
@@ -143,11 +149,7 @@ class ArrayInterface(AccessInterface):
     no fragmentation.  Included to quantify the headroom above DFS."""
 
     name = "daos-array"
-
-    def make_ctx(self, client_node: int = 0, process: int = 0,
-                 transfer_bytes: int = 0) -> IOCtx:
-        return IOCtx(client_node=client_node, process=process,
-                     lat_per_op=1e-6, sync=False)
+    profile_name = "daos-array"
 
     def create(self, path: str, oclass=None, client_node: int = 0,
                process: int = 0):
@@ -155,8 +157,7 @@ class ArrayInterface(AccessInterface):
         ctx = self.make_ctx(client_node, process)
         obj = self.dfs.cont.open_array(
             f"raw:{path}", oclass=oclass or self.dfs.default_oclass)
-        from .base import FileHandle
-        return FileHandle(self, obj, ctx)
+        return self._handle(obj, ctx, client_node)
 
     def open(self, path: str, client_node: int = 0, process: int = 0):
         return self.create(path, None, client_node, process)

@@ -17,13 +17,12 @@ interfaces converge on shared-file: construct with ``collective=True``.
 from __future__ import annotations
 
 from ..object import IOCtx
-from .base import AccessInterface
-
-H5_CHUNK = 1 << 20
+from .base import AccessInterface, H5_CHUNK  # noqa: F401  (re-export)
 
 
 class HDF5Interface(AccessInterface):
     name = "hdf5"
+    profile_name = "hdf5"
 
     def __init__(self, dfs, chunk_bytes: int = H5_CHUNK,
                  collective: bool = False) -> None:
@@ -32,21 +31,16 @@ class HDF5Interface(AccessInterface):
         self.collective = collective
         if collective:
             self.name = "hdf5-coll"
+            self.profile_name = "hdf5-sfp"
 
     def make_ctx(self, client_node: int = 0, process: int = 0,
                  transfer_bytes: int = 0) -> IOCtx:
         if self.collective:
             # HDF5 -> MPI-IO VFD -> collective buffering: big aggregated ops,
             # still paying h5 library latency per op.
-            return IOCtx(client_node=client_node, process=process,
-                         lat_per_op=70e-6, via_fuse=True, sync=True,
-                         frag_bytes=16 << 20, op_multiplier=1.3)
-        return IOCtx(client_node=client_node, process=process,
-                     lat_per_op=120e-6,        # h5 lib + fuse crossing
-                     via_fuse=True, sync=True,
-                     frag_bytes=self.chunk_bytes,
-                     proc_bw_cap=0.28e9,        # sync chunked stream ceiling
-                     op_multiplier=2.5)        # md: B-tree + obj headers
+            return self.profile.ctx(client_node, process)
+        return self.profile.ctx(client_node, process,
+                                frag_bytes=self.chunk_bytes)
 
     def create(self, path: str, oclass=None, client_node: int = 0,
                process: int = 0):

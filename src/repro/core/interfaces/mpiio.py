@@ -16,19 +16,24 @@ from __future__ import annotations
 from collections import defaultdict
 
 from ..object import IOCtx
-from .base import AccessInterface, FileHandle
-
-CB_BUFFER_SIZE = 16 << 20  # ROMIO default-ish aggregation granularity
+from .base import (AccessInterface, CB_BUFFER_SIZE,  # noqa: F401  (re-export)
+                   FileHandle)
 
 
 class MPIIOInterface(AccessInterface):
     name = "mpiio"
+    profile_name = "mpiio"
 
     def __init__(self, dfs, cb_buffer_size: int = CB_BUFFER_SIZE,
                  via_fuse: bool = True) -> None:
         super().__init__(dfs)
         self.cb_buffer_size = cb_buffer_size
-        self.via_fuse = via_fuse
+        if not via_fuse:
+            self.profile_name = "mpiio-direct"
+
+    @property
+    def via_fuse(self) -> bool:
+        return self.profile.via_fuse
 
     def make_ctx(self, client_node: int = 0, process: int = 0,
                  transfer_bytes: int = 0) -> IOCtx:
@@ -36,12 +41,9 @@ class MPIIOInterface(AccessInterface):
         # Negative process ids mark per-node aggregators (collective path):
         # the two-phase shuffle caps the aggregator's stream (~10 GB/s of
         # intra-node exchange + memcpy per byte shipped).
-        return IOCtx(client_node=client_node, process=process,
-                     lat_per_op=55e-6 if self.via_fuse else 8e-6,
-                     via_fuse=self.via_fuse, sync=True,
-                     frag_bytes=self.cb_buffer_size,
-                     proc_bw_cap=10e9 if process < 0 else 0.0,
-                     op_multiplier=1.1)
+        return self.profile.ctx(client_node, process,
+                                frag_bytes=self.cb_buffer_size,
+                                proc_bw_cap=10e9 if process < 0 else 0.0)
 
     # ---- collective ops: (rank -> (offset, nbytes)) in one barrier ----
     def _aggregate(self, pieces: dict[int, tuple[int, int]],

@@ -1,45 +1,39 @@
 """DFuse — the POSIX mount of a DAOS container.
 
 DFuse runs one user-space daemon per client node; every POSIX call crosses
-the kernel (VFS -> FUSE -> daemon -> libdfs).  Costs modeled, calibrated
-against published DFuse measurements:
+the kernel (VFS -> FUSE -> daemon -> libdfs).  The costs (per-op kernel
+crossing, 1 MiB transfer fragmentation, shared daemon stream, synchronous
+chains) are the ``"posix"`` row of ``COST_PROFILES``, calibrated against
+published DFuse measurements.
 
-* per-op kernel crossing + daemon dispatch latency (``lat_per_op``),
-* transfers fragmented to the FUSE max transfer size (1 MiB),
-* all traffic of a node shares the daemon's streaming capacity
-  (``HWProfile.fuse_bw``) and pays daemon CPU per op (``fuse_op_time``),
-* synchronous: a POSIX read/write blocks the caller (no queue depth).
+Two tuning levers DAOS documents, both modeled:
 
-DAOS also supports an interception library (libioil / libpil4dfs) that
-bounces data-path calls back to user space — exposed here as
-``intercept=True``, which removes the fuse data path while keeping POSIX
-semantics (metadata still goes through the mount). That is the tuning DAOS
-docs recommend and a natural beyond-paper datapoint.
+* ``intercept=True`` — the interception library (libioil / libpil4dfs)
+  bounces data-path calls back to user space, removing the fuse data path
+  while keeping POSIX semantics (the ``"posix-ioil"`` profile);
+* ``cache_mode`` — dfuse client-side caching (``--enable-caching``):
+  ``"readahead"`` serves re-reads from the node's page cache,
+  ``"writeback"`` additionally absorbs small synchronous writes and flushes
+  them as large coalesced extents.  ``"writeback"`` is what the follow-up
+  paper (arXiv 2409.18682) benchmarks as dfuse caching ON.
 """
 from __future__ import annotations
 
-from ..object import IOCtx
-from .base import AccessInterface
-
-FUSE_MAX_TRANSFER = 1 << 20  # 1 MiB
+from .base import AccessInterface, FUSE_MAX_TRANSFER  # noqa: F401  (re-export)
 
 
 class POSIXInterface(AccessInterface):
     name = "posix"
+    profile_name = "posix"
 
-    def __init__(self, dfs, intercept: bool = False) -> None:
-        super().__init__(dfs)
+    def __init__(self, dfs, intercept: bool = False,
+                 cache_mode: str = "none") -> None:
+        super().__init__(dfs, cache_mode=cache_mode)
         self.intercept = intercept
         if intercept:
             self.name = "posix-ioil"
-
-    def make_ctx(self, client_node: int = 0, process: int = 0,
-                 transfer_bytes: int = 0) -> IOCtx:
-        if self.intercept:
-            # data path intercepted to libdfs in user space: near-DFS cost
-            return IOCtx(client_node=client_node, process=process,
-                         lat_per_op=8e-6, sync=True)
-        return IOCtx(client_node=client_node, process=process,
-                     lat_per_op=55e-6,          # VFS+FUSE round trip
-                     via_fuse=True, sync=True,
-                     frag_bytes=FUSE_MAX_TRANSFER)
+            self.profile_name = "posix-ioil"
+        if cache_mode != "none":
+            # writeback is "the cached interface"; weaker modes get named
+            self.name += ("-cached" if cache_mode == "writeback"
+                          else f"-{cache_mode}")

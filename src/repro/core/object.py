@@ -23,6 +23,7 @@ import numpy as np
 from . import layout as _layout
 from . import redundancy
 from .engine import Engine, EngineFailedError, NotFoundError
+from .iopath import CellPlanner, FlowAccumulator
 
 
 @dataclasses.dataclass
@@ -37,6 +38,8 @@ class IOCtx:
     sync: bool = True           # synchronous per-op chain (POSIX-style)
     frag_bytes: int = 0         # interface fragments transfers (fuse 1 MiB,
                                 # HDF5 chunk size); 0 = no fragmentation
+    cache: object | None = None  # originating ClientCache, so the coherence
+                                 # broadcast skips the writer's own cache
 
 
 DEFAULT_CTX = IOCtx()
@@ -79,25 +82,24 @@ class _ObjectBase:
 
 
 class ArrayObject(_ObjectBase):
-    """daos_array_*: striped byte array with optional RP/EC protection."""
+    """daos_array_*: striped byte array with optional RP/EC protection.
+
+    All four data methods share one plan/execute/record pipeline
+    (``iopath.CellPlanner`` + ``iopath.FlowAccumulator``); each method only
+    supplies the per-span action (move real bytes, or account a sized hole).
+    """
 
     # ---------------- placement helpers ----------------
+    def _planner(self, lay: _layout.StripeLayout) -> CellPlanner:
+        return CellPlanner(lay, self.oclass, self.stripe_cell)
+
     def _data_width(self, lay: _layout.StripeLayout) -> int:
-        if self.oclass.ec_data:
-            return max(1, lay.width - self.oclass.ec_parity)
-        return lay.width
+        return self._planner(lay).data_width()
 
     def _cell_engines(self, lay: _layout.StripeLayout, cell_no: int):
         """Engines holding this data cell (replicas) or (data, parity, lane)
         info for EC."""
-        if self.oclass.ec_data:
-            k = self._data_width(lay)
-            group, lane = divmod(cell_no, k)
-            width = lay.width
-            data_eng = lay.targets[(group + lane) % width]
-            parity_eng = lay.targets[(group + k) % width]
-            return data_eng, parity_eng, group, lane, k
-        return lay.replicas_for_chunk(cell_no)
+        return self._planner(lay).cell_engines(cell_no)
 
     # ---------------- size metadata ----------------
     @property
@@ -119,44 +121,38 @@ class ArrayObject(_ObjectBase):
         if epoch is None:
             epoch = self.container.auto_epoch()
         lay = self._layout()
-        cell = self.stripe_cell
-        per_engine: dict[int, list] = {}
-        pos = 0
+        plan = self._planner(lay)
+        acc = FlowAccumulator(self.stripe_cell)
         n = buf.size
-        while pos < n:
-            abs_off = offset + pos
-            cell_no, in_cell = divmod(abs_off, cell)
-            take = min(cell - in_cell, n - pos)
-            payload = buf[pos:pos + take]
-            full = self._rmw_cell(lay, cell_no, in_cell, payload, epoch)
+        pos = 0
+        for span in plan.spans(offset, n):
+            payload = buf[pos:pos + span.take]
+            full = self._rmw_cell(lay, span.cell_no, span.in_cell, payload,
+                                  epoch)
             if self.oclass.ec_data:
-                self._write_cell_ec(lay, cell_no, full, epoch, per_engine)
+                self._write_cell_ec(plan, span.cell_no, full, epoch, acc)
             else:
                 wrote = 0
                 last_err: Exception | None = None
-                for eid in self._cell_engines(lay, cell_no):
+                for eid in plan.replicas(span.cell_no):
                     try:  # degraded write: skip dead replicas (rebuild
                         # restores redundancy later)
-                        self._engine(eid).update(self._key("arr", cell_no),
-                                                 full, epoch)
+                        self._engine(eid).update(
+                            self._key("arr", span.cell_no), full, epoch)
                     except EngineFailedError as e:
                         last_err = e
                         continue
                     wrote += 1
-                    acc = per_engine.setdefault(eid, [0, 0, cell])
-                    acc[0] += take
-                    acc[1] += 1
+                    acc.add(eid, span.take)
                 if not wrote:
                     raise redundancy.DataLossError(
                         f"object {self.name}: no live replica for cell "
-                        f"{cell_no}") from last_err
-            pos += take
+                        f"{span.cell_no}") from last_err
+            pos += span.take
         # one RPC per engine per call batches the cells (DAOS IOD semantics):
-        for eid, acc in per_engine.items():
-            acc[1] = max(1, acc[1] // 4)   # IOD batching of cell descriptors
-        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
-                           "write", ctx)
+        self._record_flows(acc.flows(), "write", ctx)
         self._grow(offset + n)
+        self.container.notify_write(self.name, epoch, origin=ctx.cache)
         return n
 
     def _rmw_cell(self, lay, cell_no: int, in_cell: int, payload: np.ndarray,
@@ -175,27 +171,26 @@ class ArrayObject(_ObjectBase):
         base[in_cell: in_cell + payload.size] = payload
         return base
 
-    def _write_cell_ec(self, lay, cell_no: int, full: np.ndarray, epoch: int,
-                       per_engine: dict) -> None:
-        data_eng, parity_eng, group, lane, k = self._cell_engines(lay, cell_no)
-        self._engine(data_eng).update(self._key("arr", cell_no), full, epoch)
-        acc = per_engine.setdefault(data_eng, [0, 0, self.stripe_cell])
-        acc[0] += full.size
-        acc[1] += 1
+    def _write_cell_ec(self, plan: CellPlanner, cell_no: int,
+                       full: np.ndarray, epoch: int,
+                       acc: FlowAccumulator) -> None:
+        p = plan.ec_placement(cell_no)
+        self._engine(p.data_engine).update(self._key("arr", cell_no), full,
+                                           epoch)
+        acc.add(p.data_engine, full.size)
         # recompute group parity from the cells present at this epoch
         cells = []
-        for ln in range(k):
-            cn = group * k + ln
+        for ln in range(p.k):
+            cn = p.group * p.k + ln
             try:
-                cells.append(self._fetch_raw(self._cell_engines(lay, cn)[0],
-                                             cn, float(epoch)))
+                cells.append(self._fetch_raw(plan.primary(cn), cn,
+                                             float(epoch)))
             except (NotFoundError, KeyError, EngineFailedError):
                 pass
         parity = redundancy.xor_parity(cells, self.stripe_cell)
-        self._engine(parity_eng).update(self._key("par", group), parity, epoch)
-        pacc = per_engine.setdefault(parity_eng, [0, 0, self.stripe_cell])
-        pacc[0] += len(parity)
-        pacc[1] += 1
+        self._engine(p.parity_engine).update(self._key("par", p.group),
+                                             parity, epoch)
+        acc.add(p.parity_engine, len(parity))
 
     # ---------------- read ----------------
     def _fetch_raw(self, eid: int, cell_no: int, max_epoch: float) -> bytes:
@@ -253,30 +248,21 @@ class ArrayObject(_ObjectBase):
         if epoch is None:
             epoch = float(self.container.committed_epoch)
         lay = self._layout()
-        cell = self.stripe_cell
+        plan = self._planner(lay)
+        acc = FlowAccumulator(self.stripe_cell)
         out = np.zeros(size, np.uint8)
-        per_engine: dict[int, list] = {}
         pos = 0
-        while pos < size:
-            abs_off = offset + pos
-            cell_no, in_cell = divmod(abs_off, cell)
-            take = min(cell - in_cell, size - pos)
+        for span in plan.spans(offset, size):
             try:
-                raw = self._read_cell(lay, cell_no, epoch)
+                raw = self._read_cell(lay, span.cell_no, epoch)
                 chunk = np.frombuffer(raw, np.uint8)
-                avail = chunk[in_cell: in_cell + take]
+                avail = chunk[span.in_cell: span.end]
                 out[pos: pos + avail.size] = avail
             except (NotFoundError, KeyError):
                 pass  # sparse hole reads as zeros
-            eid = self._cell_engines(lay, cell_no)[0]
-            acc = per_engine.setdefault(eid, [0, 0, cell])
-            acc[0] += take
-            acc[1] += 1
-            pos += take
-        for eid, acc in per_engine.items():
-            acc[1] = max(1, acc[1] // 4)
-        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
-                           "read", ctx)
+            acc.add(plan.primary(span.cell_no), span.take)
+            pos += span.take
+        self._record_flows(acc.flows(), "read", ctx)
         return out
 
     # ---------------- sized (synthetic-payload) I/O ----------------
@@ -289,32 +275,16 @@ class ArrayObject(_ObjectBase):
         if epoch is None:
             epoch = self.container.auto_epoch()
         lay = self._layout()
-        cell = self.stripe_cell
-        per_engine: dict[int, list] = {}
-        first = offset // cell
-        last = (offset + nbytes - 1) // cell if nbytes else first
-        for cell_no in range(first, last + 1):
-            lo = max(offset, cell_no * cell)
-            hi = min(offset + nbytes, (cell_no + 1) * cell)
-            take = hi - lo
-            if self.oclass.ec_data:
-                data_eng, parity_eng, group, lane, k = self._cell_engines(
-                    lay, cell_no)
-                homes = ((data_eng, take), (parity_eng, take // k + 1))
-            else:
-                homes = tuple((e, take)
-                              for e in self._cell_engines(lay, cell_no))
-            for eid, nb in homes:
-                self._engine(eid).update_hole(self._key("arr", cell_no),
-                                              cell, epoch)
-                acc = per_engine.setdefault(eid, [0, 0, cell])
-                acc[0] += nb
-                acc[1] += 1
-        for eid, acc in per_engine.items():
-            acc[1] = max(1, acc[1] // 4)
-        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
-                           "write", ctx)
+        plan = self._planner(lay)
+        acc = FlowAccumulator(self.stripe_cell)
+        for span in plan.spans(offset, nbytes):
+            for eid, nb in plan.sized_write_homes(span):
+                self._engine(eid).update_hole(self._key("arr", span.cell_no),
+                                              self.stripe_cell, epoch)
+                acc.add(eid, nb)
+        self._record_flows(acc.flows(), "write", ctx)
         self._grow(offset + nbytes)
+        self.container.notify_write(self.name, epoch, origin=ctx.cache)
         return nbytes
 
     def read_sized(self, offset: int, nbytes: int,
@@ -323,22 +293,11 @@ class ArrayObject(_ObjectBase):
         if epoch is None:
             epoch = float(self.container.committed_epoch)
         lay = self._layout()
-        cell = self.stripe_cell
-        per_engine: dict[int, list] = {}
-        first = offset // cell
-        last = (offset + nbytes - 1) // cell if nbytes else first
-        for cell_no in range(first, last + 1):
-            lo = max(offset, cell_no * cell)
-            hi = min(offset + nbytes, (cell_no + 1) * cell)
-            take = hi - lo
-            eid = self._cell_engines(lay, cell_no)[0]
-            acc = per_engine.setdefault(eid, [0, 0, cell])
-            acc[0] += take
-            acc[1] += 1
-        for eid, acc in per_engine.items():
-            acc[1] = max(1, acc[1] // 4)
-        self._record_flows({e: tuple(a) for e, a in per_engine.items()},
-                           "read", ctx)
+        plan = self._planner(lay)
+        acc = FlowAccumulator(self.stripe_cell)
+        for span in plan.spans(offset, nbytes):
+            acc.add(plan.primary(span.cell_no), span.take)
+        self._record_flows(acc.flows(), "read", ctx)
         return nbytes
 
     def punch(self) -> None:
@@ -350,6 +309,7 @@ class ArrayObject(_ObjectBase):
             for key in list(eng.keys((self.container.label, self.oid))):
                 eng.punch(key)
         self.container.set_object_size(self.oid, 0)
+        self.container.notify_punch(self.name)
 
 
 class KVObject(_ObjectBase):
@@ -368,7 +328,7 @@ class KVObject(_ObjectBase):
         if epoch is None:
             epoch = self.container.auto_epoch()
         raw = value if isinstance(value, (bytes, bytearray)) else bytes(value)
-        flows = {}
+        acc = FlowAccumulator(len(raw))
         last_err: Exception | None = None
         for eid in self._replicas_for(dkey):
             try:  # degraded write: surviving replicas only
@@ -376,12 +336,12 @@ class KVObject(_ObjectBase):
             except EngineFailedError as e:
                 last_err = e
                 continue
-            flows[eid] = (len(raw), 1, len(raw))
-        if not flows:
+            acc.add(eid, len(raw))
+        if not acc:
             raise redundancy.DataLossError(
                 f"kv {self.name}: no live replica for dkey {dkey!r}") \
                 from last_err
-        self._record_flows(flows, "write", ctx)
+        self._record_flows(acc.flows(batch=False), "write", ctx)
 
     def get(self, dkey, akey, epoch: float | None = None,
             ctx: IOCtx = DEFAULT_CTX) -> bytes:
@@ -389,7 +349,8 @@ class KVObject(_ObjectBase):
             epoch = float(self.container.committed_epoch)
         last_err: Exception | None = None
         not_found = 0
-        for eid in self._replicas_for(dkey):  # degraded read: next replica
+        replicas = self._replicas_for(dkey)  # one layout walk per op
+        for eid in replicas:  # degraded read: next replica
             try:
                 rec = self._engine(eid).fetch(self._key(dkey, akey), epoch)
             except EngineFailedError as e:
@@ -402,10 +363,11 @@ class KVObject(_ObjectBase):
                 not_found += 1
                 continue
             data = rec.data if rec.data is not None else b"\0" * rec.length
-            self._record_flows({eid: (rec.length, 1, rec.length)}, "read",
-                               ctx)
+            acc = FlowAccumulator(rec.length)
+            acc.add(eid, rec.length)
+            self._record_flows(acc.flows(batch=False), "read", ctx)
             return data
-        if not_found == len(self._replicas_for(dkey)):
+        if not_found == len(replicas):
             raise NotFoundError((self.oid, dkey, akey))
         raise redundancy.DataLossError(
             f"kv {self.name}: all replicas of dkey {dkey!r} down") \

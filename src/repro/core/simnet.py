@@ -57,6 +57,11 @@ class HWProfile:
     # shares the daemon's streaming capacity.
     fuse_bw: float = 12e9               # B/s per client-node dfuse daemon
     fuse_op_time: float = 18e-6         # daemon CPU per fuse op
+    # Client page cache: a hit is a kernel memcpy — no daemon crossing, no
+    # fabric, no engine.  Shared per client node (memory bandwidth), plus a
+    # cheap syscall per op on the caller's serial chain.
+    cache_bw: float = 20e9              # B/s page-cache copy per client node
+    cache_op_time: float = 2e-6         # syscall + page-cache lookup per op
     # Fan-in/fan-out (incast) efficiency: an endpoint streaming to/from k
     # concurrent peers loses NIC efficiency to flow interleaving — the
     # effect that makes wide striping (SX) *worse* than S2 for reads
@@ -147,6 +152,9 @@ class PhaseRecorder:
     def __init__(self, sim: "IOSim") -> None:
         self.sim = sim
         self.flows: list[_Flow] = []
+        # cache-local flows: (client_node, process, nbytes, nops) served
+        # from the node's page cache — client memory only, no fabric/engine
+        self.local_flows: list[tuple[int, int, int, int]] = []
         self.md_ops: int = 0         # metadata service round-trips (serial-ish)
         self.elapsed: float | None = None
 
@@ -168,11 +176,16 @@ class PhaseRecorder:
     def record_md(self, nops: int) -> None:
         self.md_ops += int(nops)
 
+    def record_local(self, *, client_node: int, process: int, nbytes: int,
+                     nops: int = 1) -> None:
+        self.local_flows.append((client_node, process, int(nbytes),
+                                 int(nops)))
+
     # -- solver ------------------------------------------------------------
     def solve(self) -> float:
         hw = self.sim.hw
         topo = self.sim.topo
-        if not self.flows and not self.md_ops:
+        if not self.flows and not self.md_ops and not self.local_flows:
             return 0.0
 
         eng_media = defaultdict(float)      # engine -> media seconds
@@ -213,6 +226,13 @@ class PhaseRecorder:
                 fu[0] += f.nbytes
                 fu[1] += f.nops
 
+        # cache-local traffic: per-node memory bandwidth + per-op syscall
+        # cost on the calling process's serial chain
+        cache_node = defaultdict(float)     # client node -> bytes
+        for cn, p, nb, ops in self.local_flows:
+            cache_node[cn] += nb
+            proc_chain[p] += ops * hw.cache_op_time
+
         t = 0.0
         for e in eng_media:
             t = max(t, eng_media[e] + eng_rpc[e])
@@ -230,6 +250,8 @@ class PhaseRecorder:
                 t = max(t, b / cap)
         for n, (b, ops) in fuse.items():
             t = max(t, b / hw.fuse_bw + ops * hw.fuse_op_time)
+        for n, b in cache_node.items():
+            t = max(t, b / hw.cache_bw)
         # metadata service: treated as a single serialised RPC pipeline
         t = max(t, self.md_ops * self.sim.md_op_time)
         return t + hw.setup_time
@@ -298,6 +320,11 @@ class IOSim:
     def record_md(self, nops: int) -> None:
         if self._active is not None:
             self._active.record_md(nops)
+
+    def record_local(self, **kw) -> None:
+        """Record a cache-local (client-memory) flow into the active phase."""
+        if self._active is not None:
+            self._active.record_local(**kw)
 
 
 def bandwidth(nbytes: int, seconds: float) -> float:

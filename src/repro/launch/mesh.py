@@ -123,7 +123,7 @@ class ShardingRules:
         return P()  # default: replicated
 
     def param_specs(self, shapes_tree):
-        flat, tree = jax.tree.flatten_with_path(shapes_tree)
+        flat, tree = jax.tree_util.tree_flatten_with_path(shapes_tree)
 
         def path_str(p):
             return "/".join(str(getattr(k, "key", k)) for k in p)
@@ -135,11 +135,11 @@ class ShardingRules:
     def opt_specs(self, opt_shapes, param_specs_tree):
         """Optimizer state mirrors param specs; factored Adafactor leaves
         drop the reduced axis."""
-        pflat, _ = jax.tree.flatten_with_path(param_specs_tree)
+        pflat, _ = jax.tree_util.tree_flatten_with_path(param_specs_tree)
         pspec_by_path = {"/".join(str(getattr(k, "key", k)) for k in p): s
                          for p, s in pflat}
 
-        oflat, otree = jax.tree.flatten_with_path(opt_shapes)
+        oflat, otree = jax.tree_util.tree_flatten_with_path(opt_shapes)
         out = []
         for path, leaf in oflat:
             keys = [str(getattr(k, "key", k)) for k in path]
@@ -175,7 +175,7 @@ class ShardingRules:
                 return P(*((None,) * len(s.shape)))
             return P(self.dp, *((None,) * (len(s.shape) - 1)))
 
-        flat, tree = jax.tree.flatten_with_path(batch_shapes)
+        flat, tree = jax.tree_util.tree_flatten_with_path(batch_shapes)
         return jax.tree.unflatten(tree, [spec(p, s) for p, s in flat])
 
     def cache_specs(self, cache_shapes):
@@ -208,7 +208,7 @@ class ShardingRules:
                 return P(None, bspec, None, None)
             return P(*((None,) * nd))
 
-        flat, tree = jax.tree.flatten_with_path(cache_shapes)
+        flat, tree = jax.tree_util.tree_flatten_with_path(cache_shapes)
         return jax.tree.unflatten(tree, [spec(p, s) for p, s in flat])
 
     # -------------- helpers --------------

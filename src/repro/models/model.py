@@ -81,7 +81,7 @@ def make_inputs(key, cfg: ModelConfig, shape: ShapeConfig) -> dict:
                                       s.dtype)
         return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * 0.02
 
-    flat, tree = jax.tree.flatten_with_path(specs)
+    flat, tree = jax.tree_util.tree_flatten_with_path(specs)
     out = [materialize(str(p), s) for p, s in flat]
     return jax.tree.unflatten(tree, out)
 

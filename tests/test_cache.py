@@ -1,0 +1,192 @@
+"""ClientCache: hit/miss/flush statistics, write-back coalescing,
+invalidation on unlink/punch/foreign writes, and the modeled speedup the
+caching tier exists to deliver."""
+import numpy as np
+import pytest
+
+from repro.core import Pool, Topology, bandwidth
+from repro.core.cache import ClientCache, _add_interval, _covers, _total
+from repro.core.interfaces import DFS, make_interface
+
+
+@pytest.fixture()
+def world():
+    pool = Pool(Topology(), materialize=True)
+    cont = pool.create_container("c", oclass="S2")
+    dfs = DFS(cont)
+    dfs.mkdir("/d")
+    return pool, dfs
+
+
+# ---------------- interval helpers ----------------
+def test_interval_merge_and_cover():
+    ivs = []
+    _add_interval(ivs, 0, 10)
+    _add_interval(ivs, 20, 30)
+    _add_interval(ivs, 10, 20)      # adjacency merges all three
+    assert ivs == [[0, 30]]
+    _add_interval(ivs, 50, 60)
+    assert _covers(ivs, 5, 25)
+    assert not _covers(ivs, 25, 55)
+    assert _total(ivs) == 40
+
+
+# ---------------- hit/miss/readahead ----------------
+def test_read_hits_after_write_and_readahead(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/f", client_node=0, process=0)
+    payload = (np.arange(3 << 20) % 251).astype(np.uint8)
+    h.write_at(0, payload)
+    st = iface.cache_stats()
+    assert st["wb_writes"] == 1 and st["wb_bytes"] == payload.size
+    # read of just-written data: page-cache hit, no backend op
+    got = h.read_at(100, 1000)
+    np.testing.assert_array_equal(got, payload[100:1100])
+    assert iface.cache_stats()["read_hits"] == 1
+    # flush, drop, then a cold read prefetches a whole readahead window
+    h.close()
+    cache = iface.cache_for(0)
+    cache.invalidate(h.obj.name)
+    h2 = iface.open("/d/f", client_node=0, process=0)
+    h2.read_at(0, 64 << 10)
+    st = iface.cache_stats()
+    assert st["read_misses"] == 1 and st["readahead_bytes"] > 0
+    h2.read_at(64 << 10, 64 << 10)      # inside the prefetched window
+    assert iface.cache_stats()["read_hits"] == 2
+
+
+def test_writeback_coalesces_and_flushes(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/wb", client_node=0, process=0)
+    cache = iface.cache_for(0)
+    n, step = 64, 8 << 10
+    for i in range(n):
+        h.write_at(i * step, b"x" * step)
+    st = iface.cache_stats()
+    assert st["wb_writes"] == n
+    assert st["flushes"] == 0           # under wb_buffer_bytes: all pending
+    assert cache.dirty_bytes() == n * step
+    h.fsync()
+    st = iface.cache_stats()
+    assert st["flushes"] == 1           # one coalesced extent
+    assert st["flush_bytes"] == n * step
+    assert cache.dirty_bytes() == 0
+    # durability watermark advanced on the engines holding the object
+    eng_ids = set(h.obj._layout().targets)
+    assert all(pool.engines[e].flushed_epoch > 0 for e in eng_ids)
+    # data actually landed (read through a *fresh* uncached interface)
+    plain = make_interface("posix", dfs)
+    h2 = plain.open("/d/wb", client_node=1, process=1)
+    np.testing.assert_array_equal(h2.read_at(0, step),
+                                  np.frombuffer(b"x" * step, np.uint8))
+
+
+def test_wb_buffer_triggers_flush(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    cache = iface.cache_for(0)
+    h = iface.create("/d/big", client_node=0, process=0)
+    h.write_at(0, np.zeros(cache.wb_buffer_bytes + 1, np.uint8))
+    assert iface.cache_stats()["flushes"] >= 1
+    assert cache.dirty_bytes() == 0
+
+
+# ---------------- invalidation ----------------
+def test_unlink_invalidates_pages_and_dentry(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/gone", client_node=0, process=0)
+    h.write_at(0, b"payload")
+    iface.stat("/d/gone")               # populate + hit dentry cache
+    assert iface.cache_stats()["dentry_hits"] >= 1
+    iface.unlink("/d/gone")
+    assert iface.cache_stats()["invalidations"] == 1
+    with pytest.raises(FileNotFoundError):
+        iface.stat("/d/gone")
+
+
+def test_punch_invalidates_other_caches(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/p", client_node=0, process=0)
+    h.write_at(0, b"abc")
+    h.fsync()
+    h.read_at(0, 3)
+    assert iface.cache_for(0).cached_bytes() > 0
+    h.obj.punch()                       # direct object punch, not unlink
+    assert iface.cache_for(0).cached_bytes() == 0
+    assert iface.cache_stats()["invalidations"] >= 1
+
+
+def test_foreign_write_invalidates_but_own_does_not(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h0 = iface.create("/d/shared", client_node=0, process=0)
+    h0.write_at(0, b"old-old-old")
+    h0.fsync()
+    assert iface.cache_for(0).cached_bytes() > 0   # own write kept
+    h1 = iface.open("/d/shared", client_node=1, process=9)
+    assert bytes(h1.read_at(0, 11)) == b"old-old-old"
+    # node 1 overwrites: node 0's pages are stale and must drop
+    h1.write_at(0, b"new-new-new")
+    h1.fsync()
+    assert iface.cache_for(0).cached_bytes() == 0
+    assert bytes(h0.read_at(0, 11)) == b"new-new-new"
+
+
+def test_epoch_advance_of_unrelated_object_keeps_cache(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/a", client_node=0, process=0)
+    h.write_at(0, b"aaaa")
+    other = make_interface("dfs", dfs)
+    other.create("/d/b", client_node=1, process=1).write_at(0, b"bbbb")
+    # the unrelated write advanced the container epoch; /d/a stays cached
+    assert iface.cache_for(0).cached_bytes() > 0
+    assert iface.cache_stats()["read_hits"] == 0
+    h.read_at(0, 4)
+    assert iface.cache_stats()["read_hits"] == 1
+
+
+# ---------------- modeled performance ----------------
+def test_cached_small_transfer_speedup():
+    """The acceptance bar: write-back caching lifts a small-transfer POSIX
+    re-read/re-write workload >= 3x in simulated bandwidth."""
+    def run(name, block=32 << 20, transfer=64 << 10):
+        pool = Pool(Topology(n_client_nodes=1), materialize=False)
+        cont = pool.create_container("c", oclass="S2")
+        dfs = DFS(cont, dir_oclass="S1")
+        iface = make_interface(name, dfs)
+        h = iface.create("/f", client_node=0, process=0)
+        out = {}
+        for label in ("write", "re_read", "re_write"):
+            with pool.sim.phase() as ph:
+                for off in range(0, block, transfer):
+                    if "write" in label:
+                        h.write_sized_at(off, transfer)
+                    else:
+                        h.read_sized_at(off, transfer)
+                if "write" in label:
+                    h.fsync()
+            out[label] = bandwidth(block, ph.elapsed)
+        return out
+
+    base, cached = run("posix"), run("posix-cached")
+    assert cached["re_read"] >= 3 * base["re_read"]
+    assert cached["re_write"] >= 3 * base["re_write"]
+
+
+def test_local_flows_have_cost():
+    """Cache hits are not free: local flows charge client memory bw."""
+    pool = Pool(Topology(), materialize=False)
+    with pool.sim.phase() as ph:
+        pool.sim.record_local(client_node=0, process=0, nbytes=1 << 30,
+                              nops=1)
+    assert ph.elapsed >= (1 << 30) / pool.sim.hw.cache_bw
+
+
+def test_cache_mode_validation():
+    with pytest.raises(ValueError):
+        ClientCache(mode="bogus")

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the store's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Pool, Topology, get_class, integrity, jump_hash, \
     place_object
