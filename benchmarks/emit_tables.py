@@ -1,8 +1,11 @@
 """Render the experiment markdown tables from artifacts and splice them
 into EXPERIMENTS.md: the §Roofline tables (dry-run artifacts, at the
-<!-- ROOFLINE TABLES --> marker) and the IOR client-caching study
+<!-- ROOFLINE TABLES --> marker), the IOR client-caching study
 (artifacts/ior_results.json cached-mode rows, at the
-<!-- IOR CACHE TABLES --> marker)."""
+<!-- IOR CACHE TABLES --> marker), the checkpoint-caching study
+(artifacts/ckpt_bench.json, <!-- CKPT CACHE TABLES -->) and the
+metadata-caching study (artifacts/mdtest.json, <!-- MDTEST CACHE
+TABLES -->)."""
 from __future__ import annotations
 
 import json
@@ -15,12 +18,22 @@ from benchmarks.roofline import load  # noqa: E402
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 MARK = "<!-- ROOFLINE TABLES -->"
 CACHE_MARK = "<!-- IOR CACHE TABLES -->"
+CKPT_MARK = "<!-- CKPT CACHE TABLES -->"
+MDTEST_MARK = "<!-- MDTEST CACHE TABLES -->"
 
 SKELETON = f"""# EXPERIMENTS
 
 ## §IOR caching
 
 {CACHE_MARK}
+
+## §Checkpoint caching
+
+{CKPT_MARK}
+
+## §Metadata caching
+
+{MDTEST_MARK}
 
 ## §Roofline
 
@@ -100,6 +113,59 @@ def cache_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def _claims_lines(rows: list[dict]) -> list[str]:
+    out = []
+    for c in rows:
+        if c.get("mode") == "claims":
+            badge = "PASS" if c.get("ok") else "FAIL"
+            out.append(f"- **[{badge}]** {c['claim']} — {c['detail']}")
+    if out:
+        out.append("")
+    return out
+
+
+def ckpt_cache_table(rows: list[dict]) -> str:
+    """The cached-vs-uncached checkpoint study, one row per
+    interface x layout, plus the validated C8/C9 claims."""
+    crows = [r for r in rows if r.get("mode") == "cached"]
+    if not crows:
+        return ""
+    out = [f"### Checkpoint caching study ({crows[0]['mib']:.0f} MiB "
+           f"small-leaf state, {crows[0]['oclass']})", "",
+           "| layout | interface | cache | save GiB/s | restore GiB/s | "
+           "re-restore GiB/s | hit rate |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(crows, key=lambda r: (r["layout"], r["interface"])):
+        hit = f"{r['hit_rate']:.2f}" if "hit_rate" in r else "-"
+        out.append(
+            f"| {r['layout']} | {r['interface']} | {r.get('cache', 'none')} "
+            f"| {r['save_gib_s']:.2f} | {r['restore_gib_s']:.2f} | "
+            f"{r['re_restore_gib_s']:.2f} | {hit} |")
+    out.append("")
+    out.extend(_claims_lines(rows))
+    return "\n".join(out)
+
+
+def mdtest_table(rows: list[dict]) -> str:
+    """The mdtest dentry-caching sweep plus the validated M1 claims."""
+    mrows = [r for r in rows if "stat_s-1" in r]
+    if not any(r.get("cache") not in (None, "none") for r in mrows):
+        return ""
+    out = ["### mdtest dentry-caching study", "",
+           "| interface | cache | create /s | stat /s | re-stat /s | "
+           "open /s | unlink /s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(mrows, key=lambda r: r["interface"]):
+        out.append(
+            f"| {r['interface']} | {r.get('cache', 'none')} | "
+            f"{r['create_s-1']:,} | {r['stat_s-1']:,} | "
+            f"{r['restat_s-1']:,} | {r['open_s-1']:,} | "
+            f"{r['unlink_s-1']:,} |")
+    out.append("")
+    out.extend(_claims_lines(rows))
+    return "\n".join(out)
+
+
 def _splice(text: str, mark: str, body: str) -> str:
     """Replace everything between ``mark`` and the next '## ' heading (or
     end of file) with ``mark`` + body."""
@@ -141,9 +207,25 @@ def main() -> None:
         n_cached = sum(1 for r in rows if r.get("mode") == "cached")
         if body:
             text = _splice(text, CACHE_MARK, body)
+    n_ckpt = n_md = 0
+    ckpt_json = ROOT / "artifacts" / "ckpt_bench.json"
+    if ckpt_json.exists():
+        rows = json.loads(ckpt_json.read_text())
+        body = ckpt_cache_table(rows)
+        n_ckpt = sum(1 for r in rows if r.get("mode") == "cached")
+        if body:
+            text = _splice(text, CKPT_MARK, body)
+    md_json = ROOT / "artifacts" / "mdtest.json"
+    if md_json.exists():
+        rows = json.loads(md_json.read_text())
+        body = mdtest_table(rows)
+        n_md = sum(1 for r in rows if "stat_s-1" in r)
+        if body:
+            text = _splice(text, MDTEST_MARK, body)
     exp.write_text(text)
     print(f"spliced tables: roofline base={len(base)} opt={len(opt)} "
-          f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}")
+          f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}; "
+          f"ckpt cached rows={n_ckpt}; mdtest rows={n_md}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,12 @@ Creates/stats/unlinks N small files per process through each interface.
 DAOS's advantage is structural — directory entries are KV records on the
 *data-path engines* (scaling with engine count), vs a single-MDS model —
 so we also print the single-MDS Lustre-model rate for contrast.
+
+``--cache`` adds the dentry-caching sweep (dfuse ``--enable-caching``'s
+metadata axis, arXiv 2409.18682): the cached interface serves ``stat`` and
+``open`` from the client-node dentry cache — a local lookup instead of a
+namespace KV walk + metadata round trip — while ``create`` and ``unlink``
+still have to reach the namespace.  Claim M1 validates exactly that split.
 """
 from __future__ import annotations
 
@@ -30,6 +36,15 @@ def bench(interface: str, clients: int, ppn: int, files_pp: int) -> dict:
     iface = make_interface(interface, dfs)
     n = clients * ppn * files_pp
 
+    def sweep(op) -> float:
+        with pool.sim.phase() as ph:
+            for node in range(clients):
+                for p in range(ppn):
+                    rank = node * ppn + p
+                    for i in range(files_pp):
+                        op(f"/md{rank}/f{i}", node, rank)
+        return ph.elapsed
+
     with pool.sim.phase() as cph:
         for node in range(clients):
             for p in range(ppn):
@@ -38,44 +53,94 @@ def bench(interface: str, clients: int, ppn: int, files_pp: int) -> dict:
                 for i in range(files_pp):
                     iface.create(f"/md{rank}/f{i}", client_node=node,
                                  process=rank)
-    with pool.sim.phase() as sph:
-        for node in range(clients):
-            for p in range(ppn):
-                rank = node * ppn + p
-                for i in range(files_pp):
-                    iface.stat(f"/md{rank}/f{i}", client_node=node,
-                               process=rank)
-    with pool.sim.phase() as uph:
-        for node in range(clients):
-            for p in range(ppn):
-                rank = node * ppn + p
-                for i in range(files_pp):
-                    iface.unlink(f"/md{rank}/f{i}", client_node=node,
-                                 process=rank)
-    return {"interface": interface, "clients": clients, "ppn": ppn,
-            "create_s-1": round(n / cph.elapsed),
-            "stat_s-1": round(n / sph.elapsed),
-            "unlink_s-1": round(n / uph.elapsed)}
+    t_stat = sweep(lambda f, node, rank:
+                   iface.stat(f, client_node=node, process=rank))
+    # second pass: a dentry cache now serves these locally
+    t_restat = sweep(lambda f, node, rank:
+                     iface.stat(f, client_node=node, process=rank))
+    t_open = sweep(lambda f, node, rank:
+                   iface.open(f, client_node=node, process=rank))
+    t_unlink = sweep(lambda f, node, rank:
+                     iface.unlink(f, client_node=node, process=rank))
+    row = {"interface": interface, "clients": clients, "ppn": ppn,
+           "create_s-1": round(n / cph.elapsed),
+           "stat_s-1": round(n / t_stat),
+           "restat_s-1": round(n / t_restat),
+           "open_s-1": round(n / t_open),
+           "unlink_s-1": round(n / t_unlink)}
+    if getattr(iface, "cache_mode", "none") != "none":
+        st = iface.cache_stats()
+        row["cache"] = iface.cache_mode
+        row["dentry_hit_rate"] = round(
+            st.get("dentry_hits", 0) /
+            max(1, st.get("dentry_hits", 0) + st.get("dentry_misses", 0)), 3)
+    else:
+        row["cache"] = "none"
+    return row
+
+
+def check_md_cache_claims(rows: list[dict]) -> list[dict]:
+    """M1: the dentry cache lifts stat/open rates; create/unlink — which
+    must reach the namespace — are unchanged."""
+    def get(iface):
+        for r in rows:
+            if r["interface"] == iface:
+                return r
+        return None
+
+    base, cached = get("posix"), get("posix-cached")
+    if base is None or cached is None:
+        return []
+    out = []
+    s_lift = cached["restat_s-1"] / base["restat_s-1"]
+    o_lift = cached["open_s-1"] / base["open_s-1"]
+    out.append({"claim": "M1a dentry cache lifts re-stat and open rates "
+                         ">= 5x",
+                "ok": bool(s_lift >= 5 and o_lift >= 5),
+                "detail": f"re-stat {s_lift:.0f}x, open {o_lift:.0f}x "
+                          f"(hit rate {cached.get('dentry_hit_rate')})"})
+    c_ratio = cached["create_s-1"] / base["create_s-1"]
+    u_ratio = cached["unlink_s-1"] / base["unlink_s-1"]
+    out.append({"claim": "M1b create/unlink rates unchanged (within 10%)",
+                "ok": bool(abs(c_ratio - 1) < 0.1 and abs(u_ratio - 1) < 0.1),
+                "detail": f"create {c_ratio:.2f}x, unlink {u_ratio:.2f}x"})
+    return out
 
 
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--interfaces", nargs="+", default=["dfs", "posix"])
+    ap.add_argument("--cache", action="store_true",
+                    help="sweep dentry caching on/off (adds posix-cached)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--ppn", type=int, default=4)
     ap.add_argument("--files-pp", type=int, default=100)
     ap.add_argument("--out", default=str(ARTIFACTS / "mdtest.json"))
     args = ap.parse_args(argv)
+    ifaces = list(args.interfaces)
+    if args.cache:
+        for name in ("posix", "posix-cached"):
+            if name not in ifaces:
+                ifaces.append(name)
     rows = []
-    for iface in args.interfaces:
+    for iface in ifaces:
         r = bench(iface, args.clients, args.ppn, args.files_pp)
         rows.append(r)
-        print(f"{iface:10s} create {r['create_s-1']:>9,}/s  "
-              f"stat {r['stat_s-1']:>9,}/s  unlink {r['unlink_s-1']:>9,}/s")
+        print(f"{iface:14s} create {r['create_s-1']:>9,}/s  "
+              f"stat {r['stat_s-1']:>9,}/s  re-stat {r['restat_s-1']:>11,}/s  "
+              f"open {r['open_s-1']:>11,}/s  unlink {r['unlink_s-1']:>9,}/s")
     lm = LustreModel()
     mds_rate = round(1.0 / lm.mds_op_time)
-    print(f"{'lustre-mds':10s} create {mds_rate:>9,}/s  (single-MDS ceiling)")
+    print(f"{'lustre-mds':14s} create {mds_rate:>9,}/s  (single-MDS ceiling)")
     rows.append({"interface": "lustre-mds", "create_s-1": mds_rate})
+    if args.cache:
+        claims = check_md_cache_claims(rows)
+        if claims:
+            print("\n=== Metadata-caching claims ===")
+            for c in claims:
+                print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
+                      f"({c['detail']})")
+            rows.extend({"mode": "claims", **c} for c in claims)
     pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
     return rows

@@ -1,26 +1,39 @@
 """Transactional, asynchronous checkpointing on the DAOS-model store.
 
-The interface (dfs / posix / mpiio / hdf5 / daos-array) and the object class
+The interface (dfs / posix / mpiio / hdf5 / daos-array, plus the cached
+variants posix-cached / posix-readahead / dfs-cached) and the object class
 (S1..SX / RP_* / EC_*) are *configuration*, which turns the paper's entire
-benchmark matrix into a live tuning surface for checkpoint I/O.  Layouts:
+benchmark matrix — including the dfuse client-caching axis of the follow-up
+paper (arXiv 2409.18682) — into a live tuning surface for checkpoint I/O.
+Layouts:
 
 * ``sharded`` — file-per-host-shard (IOR easy): write parallelism scales
   with hosts, no write contention on a single object;
 * ``shared``  — one object, hosts write disjoint ranges (IOR hard): the
   layout parallel filesystems choke on and DAOS doesn't (paper claim C5).
 
-Writes run under one epoch transaction: the manifest publishes last, the
-commit flips the epoch — a writer crash mid-save leaves no visible state.
-``async_save`` runs the whole thing on an event queue so training continues
-(compute/IO overlap, the paper's non-blocking I/O feature).
+Every checkpoint byte moves through ``AccessInterface``/``FileHandle`` —
+the same interface -> cache -> planner -> object -> engine pipeline the IOR
+harness measures.  Writer ranks are placed on client nodes by the
+interface's topology-derived ``place_writer`` (one writer stream per node
+before doubling up), so a cached interface engages one ClientCache per
+participating node.
+
+Writes run under one epoch transaction: handles are opened with ``tx=`` so
+``write_at`` stages under the transaction's epoch, the manifest publishes
+last, and the commit flips the epoch — a writer crash mid-save leaves no
+visible state.  Under write-back caching the container's commit barrier
+flushes every dirty byte staged under the tx *before* the epoch becomes
+visible, so torn-save protection holds even when leaves sit in client
+buffers.  ``async_save`` runs the whole thing on an event queue so training
+continues (compute/IO overlap, the paper's non-blocking I/O feature).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from ..core import EventQueue
-from ..core.interfaces import DFS, make_interface
-from ..core.object import IOCtx
+from ..core import EventQueue, NotFoundError
+from ..core.interfaces import AccessInterface, DFS, make_interface
 from . import serializer as S
 
 
@@ -29,14 +42,15 @@ class CheckpointError(IOError):
 
 
 class Checkpointer:
-    def __init__(self, dfs: DFS, interface: str = "dfs",
+    def __init__(self, dfs: DFS, interface: str | AccessInterface = "dfs",
                  oclass: str | None = None, layout: str = "sharded",
                  n_writers: int = 8, base: str = "/ckpt",
                  verify_on_restore: bool = True) -> None:
         if layout not in ("sharded", "shared"):
             raise ValueError(layout)
         self.dfs = dfs
-        self.iface = make_interface(interface, dfs)
+        self.iface = (interface if isinstance(interface, AccessInterface)
+                      else make_interface(interface, dfs))
         self.oclass = oclass or dfs.default_oclass
         self.layout = layout
         self.n_writers = n_writers
@@ -44,7 +58,7 @@ class Checkpointer:
         self.verify = verify_on_restore
         self.eq = EventQueue(depth=4)
         try:
-            dfs.mkdir(self.base)
+            self.iface.mkdir(self.base)
         except Exception:
             pass
 
@@ -52,13 +66,23 @@ class Checkpointer:
     def _step_dir(self, step: int) -> str:
         return f"{self.base}/step_{step:08d}"
 
+    def _manifest_kv(self, sdir: str):
+        # manifests are tiny and precious: always 3-way replicated
+        return self.dfs.cont.open_kv(f"manifest:{sdir}", oclass="RP_3GX")
+
+    def _steps_kv(self):
+        """Step index for namespace-less interfaces (daos-array): raw
+        objects are unenumerable, so discovery needs its own KV record."""
+        return self.dfs.cont.open_kv(f"ckpt-steps:{self.base}",
+                                     oclass="RP_3GX")
+
     # ------------- save -------------
     def save(self, step: int, tree, extra_meta: dict | None = None) -> dict:
         """Blocking transactional save. Returns the manifest dict."""
         cont = self.dfs.cont
         sdir = self._step_dir(step)
         try:
-            self.dfs.mkdir(sdir)
+            self.iface.mkdir(sdir)
         except Exception:
             pass
         leaves = S.flatten_tree(tree)
@@ -72,9 +96,14 @@ class Checkpointer:
             manifest = S.manifest_dumps(entries, {
                 "step": step, "layout": self.layout,
                 "oclass": self.oclass, **(extra_meta or {})})
-            # manifests are tiny and precious: always 3-way replicated
-            mobj = cont.open_kv(f"manifest:{sdir}", oclass="RP_3GX")
-            tx.put_kv(mobj, "manifest", "json", manifest)
+            tx.put_kv(self._manifest_kv(sdir), "manifest", "json", manifest)
+            if not self.iface.has_namespace:
+                # no directory entry will record this step: index it in the
+                # same tx so crash recovery can discover it
+                tx.put_kv(self._steps_kv(), f"{step:08d}", "v", b"1")
+            # commit barrier (container): any write-back data staged under
+            # this tx is flushed to the engines BEFORE the epoch — and with
+            # it the manifest — becomes visible
             tx.commit()
         except BaseException:
             tx.abort()
@@ -89,28 +118,29 @@ class Checkpointer:
             shards = []
             for w, (lo, hi) in enumerate(ranges):
                 fname = f"{sdir}{path}.shard{w}"
-                obj = self.dfs.create_file(
-                    fname, oclass=self.oclass,
-                    ctx=self.iface.make_ctx(w % 8, w))
-                tx.write_array(obj, 0, raw[lo:hi],
-                               ctx=self.iface.make_ctx(w % 8, w))
+                node, proc = self.iface.place_writer(w)
+                h = self.iface.create(fname, oclass=self.oclass,
+                                      client_node=node, process=proc, tx=tx)
+                h.write_at(0, raw[lo:hi])
                 shards.append({"file": fname, "lo": lo, "hi": hi})
             entries[path] = {**meta, "csum": csum, "shards": shards,
                              "nbytes": int(raw.size)}
 
     def _save_shared(self, tx, sdir, leaves, entries) -> None:
         fname = f"{sdir}/checkpoint.bin"
-        obj = self.dfs.create_file(fname, oclass=self.oclass,
-                                   ctx=self.iface.make_ctx(0, 0))
+        h0 = self.iface.create(fname, oclass=self.oclass, tx=tx)
         offset = 0
         for path, leaf in leaves:
             raw, meta = S.leaf_to_bytes(leaf)
             csum = S.checksum_leaf(raw)
-            # hosts write disjoint sub-ranges of this leaf's region
+            # hosts write disjoint sub-ranges of this leaf's region, each
+            # through its own descriptor on the shared file (dup: no extra
+            # namespace traffic, per-rank placement + cache)
             for w, (lo, hi) in enumerate(
                     S.shard_ranges(raw.size, self.n_writers)):
-                tx.write_array(obj, offset + lo, raw[lo:hi],
-                               ctx=self.iface.make_ctx(w % 8, w))
+                node, proc = self.iface.place_writer(w)
+                hw = self.iface.dup(h0, client_node=node, process=proc, tx=tx)
+                hw.write_at(offset + lo, raw[lo:hi])
             entries[path] = {**meta, "csum": csum, "file": fname,
                              "offset": offset, "nbytes": int(raw.size)}
             offset += int(raw.size)
@@ -132,10 +162,9 @@ class Checkpointer:
     # ------------- restore -------------
     def load_manifest(self, step: int) -> dict:
         sdir = self._step_dir(step)
-        mobj = self.dfs.cont.open_kv(f"manifest:{sdir}", oclass="RP_3GX")
         try:
-            raw = mobj.get("manifest", "json")
-        except KeyError as e:
+            raw = self._manifest_kv(sdir).get("manifest", "json")
+        except (NotFoundError, KeyError) as e:
             raise CheckpointError(f"no manifest for step {step}") from e
         return S.manifest_loads(bytes(raw))
 
@@ -166,20 +195,79 @@ class Checkpointer:
     def _read_leaf(self, entry: dict, lo: int = 0,
                    hi: int | None = None) -> np.ndarray:
         hi = entry["nbytes"] if hi is None else hi
-        ctx = self.iface.make_ctx(0, 0)
         if "file" in entry:   # shared layout
-            obj = self.dfs.open_file(entry["file"], ctx=ctx)
-            return obj.read(entry["offset"] + lo, hi - lo, ctx=ctx)
+            h = self.iface.open(entry["file"])
+            return h.read_at(entry["offset"] + lo, hi - lo)
         out = np.zeros(hi - lo, np.uint8)
-        for sh in entry["shards"]:
+        for w, sh in enumerate(entry["shards"]):
             s_lo, s_hi = sh["lo"], sh["hi"]
             a = max(lo, s_lo)
             b = min(hi, s_hi)
             if a >= b:
                 continue
-            obj = self.dfs.open_file(sh["file"], ctx=ctx)
-            out[a - lo: b - lo] = obj.read(a - s_lo, b - a, ctx=ctx)
+            # each shard is read where its writer ran: a cached interface
+            # restores a just-written checkpoint from the node-local page
+            # cache instead of the fabric
+            node, proc = self.iface.place_writer(w)
+            h = self.iface.open(sh["file"], client_node=node, process=proc)
+            out[a - lo: b - lo] = h.read_at(a - s_lo, b - a)
         return out
+
+    # ------------- lifecycle (gc) -------------
+    def list_steps(self) -> list[int]:
+        """Steps visible in the checkpoint namespace (or, for namespace-less
+        interfaces, the step-index KV), newest first."""
+        steps: set[int] = set()
+        try:
+            names = self.iface.readdir(self.base)
+        except Exception:
+            names = []
+        for n in names:
+            if n.startswith("step_"):
+                try:
+                    steps.add(int(n[5:]))
+                except ValueError:
+                    pass
+        if not self.iface.has_namespace:
+            try:
+                steps.update(int(d) for d in self._steps_kv().list_dkeys())
+            except Exception:
+                pass
+        return sorted(steps, reverse=True)
+
+    def delete_step(self, step: int) -> None:
+        """Remove every trace of one checkpoint: shard/shared files (from
+        the manifest, so namespace-less interfaces gc too), stray directory
+        entries, the manifest KV object, and the step directory itself."""
+        sdir = self._step_dir(step)
+        files: list[str] = []
+        try:
+            man = self.load_manifest(step)
+        except CheckpointError:
+            man = None
+        if man is not None:
+            for entry in man["leaves"].values():
+                if "file" in entry:
+                    files.append(entry["file"])
+                else:
+                    files.extend(sh["file"] for sh in entry["shards"])
+        for f in dict.fromkeys(files):          # dedup, keep order
+            try:
+                self.iface.unlink(f)
+            except (FileNotFoundError, KeyError):
+                pass
+        for name in self.iface.readdir(sdir):   # stray (non-manifest) files
+            try:
+                self.iface.unlink(f"{sdir}/{name}")
+            except (FileNotFoundError, KeyError):
+                pass
+        self._manifest_kv(sdir).remove("manifest")
+        if not self.iface.has_namespace:
+            self._steps_kv().remove(f"{step:08d}")
+        try:
+            self.iface.unlink(sdir)             # the step directory entry
+        except (FileNotFoundError, KeyError):
+            pass
 
 
 def _template_of(tree):

@@ -41,9 +41,9 @@ class CheckpointManager:
         while len(self.saved_steps) > self.keep_n:
             old = self.saved_steps.pop(0)
             try:
-                sdir = self.ckpt._step_dir(old)
-                for name in self.ckpt.dfs.readdir(sdir):
-                    self.ckpt.dfs.unlink(f"{sdir}/{name}")
+                # full reclamation: shard files, manifest KV object and the
+                # step directory entry — so keep_n actually bounds store use
+                self.ckpt.delete_step(old)
             except Exception:
                 pass  # gc is best-effort
 
@@ -80,15 +80,4 @@ class CheckpointManager:
             f"no restorable checkpoint found: {last_err}")
 
     def _discover_steps(self) -> list[int]:
-        try:
-            names = self.ckpt.dfs.readdir(self.ckpt.base)
-        except Exception:
-            return []
-        steps = []
-        for n in names:
-            if n.startswith("step_"):
-                try:
-                    steps.append(int(n[5:]))
-                except ValueError:
-                    pass
-        return sorted(steps, reverse=True)
+        return self.ckpt.list_steps()

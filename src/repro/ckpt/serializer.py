@@ -21,7 +21,6 @@ import json
 import numpy as np
 
 from ..core import integrity
-from ..core.object import IOCtx
 
 try:  # device-side checksum when jax arrays flow through
     from ..kernels import ops as kops

@@ -102,7 +102,7 @@ def _total(ivs: list[list[int]]) -> int:
 class _ObjEntry:
     """Cached state for one object: bytes (real path) or extents (sized)."""
 
-    __slots__ = ("obj", "sized", "data", "valid", "dirty", "ctx")
+    __slots__ = ("obj", "sized", "data", "valid", "dirty", "ctx", "tx")
 
     def __init__(self, obj, sized: bool) -> None:
         self.obj = obj
@@ -111,6 +111,8 @@ class _ObjEntry:
         self.valid: list[list[int]] = []
         self.dirty: list[list[int]] = []
         self.ctx = None              # last IOCtx, used for flush/evict
+        self.tx = None               # open Transaction the dirty data is
+                                     # staged under (epoch atomicity)
 
     def ensure(self, end: int) -> None:
         if self.data is not None and self.data.size < end:
@@ -179,18 +181,45 @@ class ClientCache:
                 self._flush_entry(e)
             del self._entries[name]
 
+    @staticmethod
+    def _tx_epoch(tx) -> float | None:
+        """Snapshot epoch for reads issued under an open transaction."""
+        if tx is not None and getattr(tx, "state", None) == "open":
+            return float(tx.epoch)
+        return None
+
+    def _retag(self, e: _ObjEntry, tx) -> None:
+        """Re-associate the entry with ``tx`` without clobbering another
+        transaction's staged state.  If the entry is tagged to a different
+        tx that never committed, its dirty extents are flushed at *that*
+        tx's epoch first (so the old tx's commit barrier has nothing left
+        to lose) and its cached ranges are dropped (an abort of the old tx
+        could no longer reach them once retagged) — this also stops a
+        committed-epoch caller from hitting pages staged under someone
+        else's open transaction."""
+        old = e.tx
+        if old is tx:
+            return
+        if old is not None and getattr(old, "state", None) != "committed":
+            if e.dirty:
+                self._flush_entry(e)
+            e.valid = []
+            e.dirty = []
+        e.tx = tx
+
     # ---------------- data path: reads ----------------
-    def read(self, obj, offset: int, size: int, ctx) -> np.ndarray:
+    def read(self, obj, offset: int, size: int, ctx, tx=None) -> np.ndarray:
         e = self._touch(obj, sized=False)
         if e is None:
-            return obj.read(offset, size, ctx=ctx)
+            return obj.read(offset, size, epoch=self._tx_epoch(tx), ctx=ctx)
+        self._retag(e, tx)
         if _covers(e.valid, offset, offset + size):
             self.stats.read_hits += 1
             self._record_local(obj, ctx, size, 1)
             return e.data[offset: offset + size].copy()
         self.stats.read_misses += 1
         lo, hi = self._ra_window(obj, offset, size)
-        raw = obj.read(lo, hi - lo, ctx=ctx)
+        raw = obj.read(lo, hi - lo, epoch=self._tx_epoch(tx), ctx=ctx)
         e.ensure(hi)
         # don't let the backend fill clobber dirty (unflushed) bytes
         dirty_save = [(a, b, e.data[a:b].copy()) for a, b in e.dirty
@@ -205,17 +234,19 @@ class ClientCache:
         self._evict_if_needed()
         return e.data[offset: offset + size].copy()
 
-    def read_sized(self, obj, offset: int, nbytes: int, ctx) -> int:
+    def read_sized(self, obj, offset: int, nbytes: int, ctx, tx=None) -> int:
         e = self._touch(obj, sized=True)
         if e is None:
-            return obj.read_sized(offset, nbytes, ctx=ctx)
+            return obj.read_sized(offset, nbytes, epoch=self._tx_epoch(tx),
+                                  ctx=ctx)
+        self._retag(e, tx)
         if _covers(e.valid, offset, offset + nbytes):
             self.stats.read_hits += 1
             self._record_local(obj, ctx, nbytes, 1)
             return nbytes
         self.stats.read_misses += 1
         lo, hi = self._ra_window(obj, offset, nbytes)
-        obj.read_sized(lo, hi - lo, ctx=ctx)
+        obj.read_sized(lo, hi - lo, epoch=self._tx_epoch(tx), ctx=ctx)
         _add_interval(e.valid, lo, hi)
         e.ctx = ctx
         self.stats.readahead_bytes += (hi - lo) - nbytes
@@ -223,17 +254,30 @@ class ClientCache:
         return nbytes
 
     # ---------------- data path: writes ----------------
-    def write(self, obj, offset: int, data, ctx) -> int:
+    @staticmethod
+    def _write_through(obj, offset: int, data, ctx, tx) -> int:
+        if tx is not None and getattr(tx, "state", None) == "open":
+            return tx.write_array(obj, offset, data, ctx=ctx)
+        return obj.write(offset, data, ctx=ctx)
+
+    @staticmethod
+    def _write_through_sized(obj, offset: int, nbytes: int, ctx, tx) -> int:
+        if tx is not None and getattr(tx, "state", None) == "open":
+            return tx.write_sized(obj, offset, nbytes, ctx=ctx)
+        return obj.write_sized(offset, nbytes, ctx=ctx)
+
+    def write(self, obj, offset: int, data, ctx, tx=None) -> int:
         buf = np.asarray(
             np.frombuffer(data, np.uint8)
             if isinstance(data, (bytes, bytearray, memoryview))
             else np.ascontiguousarray(data).view(np.uint8).reshape(-1))
         e = self._touch(obj, sized=False)
         if e is None:
-            return obj.write(offset, buf, ctx=ctx)
+            return self._write_through(obj, offset, buf, ctx, tx)
+        self._retag(e, tx)
         n = buf.size
         if self.mode != "writeback":
-            wrote = obj.write(offset, buf, ctx=ctx)
+            wrote = self._write_through(obj, offset, buf, ctx, tx)
             e.ensure(offset + n)
             e.data[offset: offset + n] = buf
             _add_interval(e.valid, offset, offset + n)
@@ -254,12 +298,13 @@ class ClientCache:
         self._evict_if_needed()
         return n
 
-    def write_sized(self, obj, offset: int, nbytes: int, ctx) -> int:
+    def write_sized(self, obj, offset: int, nbytes: int, ctx, tx=None) -> int:
         e = self._touch(obj, sized=True)
         if e is None:
-            return obj.write_sized(offset, nbytes, ctx=ctx)
+            return self._write_through_sized(obj, offset, nbytes, ctx, tx)
+        self._retag(e, tx)
         if self.mode != "writeback":
-            obj.write_sized(offset, nbytes, ctx=ctx)
+            self._write_through_sized(obj, offset, nbytes, ctx, tx)
             _add_interval(e.valid, offset, offset + nbytes)
             e.ctx = ctx
             self._evict_if_needed()
@@ -280,17 +325,28 @@ class ClientCache:
         if not e.dirty or e.ctx is None:
             e.dirty = []
             return
+        tx = e.tx
+        if tx is not None and getattr(tx, "state", None) == "aborted":
+            # dirty data staged under an aborted tx must never reach the
+            # engines: the epoch it belonged to has been punched
+            e.dirty = []
+            e.tx = None
+            return
+        if tx is not None and getattr(tx, "state", None) != "open":
+            tx = None            # tx already closed: flush as untracked data
         fctx = self._flush_ctx(e.ctx)
         flushed = 0
         for a, b in e.dirty:
             if e.sized:
-                e.obj.write_sized(a, b - a, ctx=fctx)
+                self._write_through_sized(e.obj, a, b - a, fctx, tx)
             else:
-                e.obj.write(a, e.data[a:b], ctx=fctx)
+                self._write_through(e.obj, a, e.data[a:b], fctx, tx)
             self.stats.flushes += 1
             flushed += b - a
         self.stats.flush_bytes += flushed
         e.dirty = []
+        # keep e.tx while the tx is open: sibling ranks of the same tx may
+        # still be flushing, and their broadcasts must not drop this entry
         # durability watermark: the engines holding this object have now
         # persisted everything up to the current committed epoch
         cont = e.obj.container
@@ -308,6 +364,23 @@ class ClientCache:
             return
         for e in list(self._entries.values()):
             self._flush_entry(e)
+
+    # ---------------- transaction barriers ----------------
+    def flush_tx(self, tx) -> None:
+        """Commit barrier: every dirty byte staged under ``tx`` must be on
+        the engines *before* the commit makes the epoch visible — otherwise
+        a reader could see the transaction's metadata (e.g. a checkpoint
+        manifest) while its data still sits in a client buffer."""
+        for e in list(self._entries.values()):
+            if e.tx is tx and e.dirty:
+                self._flush_entry(e)
+
+    def drop_tx(self, tx) -> None:
+        """Abort barrier: cached state staged under ``tx`` is garbage (the
+        epoch was punched) — drop the whole entry, dirty and clean alike."""
+        for name, e in list(self._entries.items()):
+            if e.tx is tx:
+                self.invalidate(name)
 
     # ---------------- dentry/metadata cache ----------------
     def lookup_dentry(self, path: str) -> dict | None:
@@ -335,7 +408,19 @@ class ClientCache:
 
     def on_remote_write(self, name: str, epoch: int) -> None:
         """A foreign client advanced this object's epoch: our pages are
-        stale.  Last-writer-wins — pending dirty data is dropped too."""
+        stale.  Last-writer-wins — pending dirty data is dropped too.
+
+        Exception: a write from a *sibling rank of the same open
+        transaction* (shared-file checkpoint: many nodes write disjoint
+        ranges under one epoch).  Those writes are coordinated, so our
+        staged extents are still valid — but clean pages outside them may
+        now be stale, so the entry is trimmed to what we own."""
+        e = self._entries.get(name)
+        if (e is not None and e.tx is not None
+                and getattr(e.tx, "state", None) == "open"
+                and getattr(e.tx, "epoch", None) == epoch):
+            e.valid = [iv[:] for iv in e.dirty]
+            return
         self.invalidate(name)
 
     def on_punch(self, name: str) -> None:

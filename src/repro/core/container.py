@@ -48,10 +48,24 @@ class Container:
         return Transaction(self)
 
     def commit_tx(self, tx: Transaction) -> None:
+        # commit barrier: write-back data staged under this tx must reach
+        # the engines BEFORE the epoch becomes visible.  A client crash
+        # before this point leaves the whole epoch invisible (atomic); after
+        # it, readers of the committed epoch see every byte.  This is what
+        # keeps torn-save protection intact under client-side caching.
+        for c in list(self._caches):
+            flush = getattr(c, "flush_tx", None)
+            if flush is not None:
+                flush(tx)
         self._committed = max(self._committed, tx.epoch)
         self.pool.raft.set(("cont_epoch", self.label), self._committed)
 
     def abort_tx(self, tx: Transaction) -> int:
+        # staged cache state for a punched epoch is garbage everywhere
+        for c in list(self._caches):
+            drop = getattr(c, "drop_tx", None)
+            if drop is not None:
+                drop(tx)
         dropped = 0
         for eid in tx.touched_engines:
             eng = self.pool.engines[eid]

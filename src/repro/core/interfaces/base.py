@@ -89,36 +89,57 @@ class FileHandle:
     When the owning interface has a cache tier, every data op is routed
     through the client node's ``ClientCache`` (which absorbs, coalesces or
     forwards it); otherwise ops go straight to the unified object pipeline.
+
+    A handle opened with ``tx=`` is *transaction-aware*: its writes are
+    staged under the transaction's epoch (invisible until commit, punched on
+    abort) and its reads see the transaction's own writes.  With a cache
+    tier the dirty data carries the tx, so write-back flushes — whether
+    triggered by the buffer watermark, ``fsync`` or the container's commit
+    barrier — land in the same epoch.
     """
 
     def __init__(self, iface: "AccessInterface", obj: ArrayObject,
-                 ctx: IOCtx, cache: ClientCache | None = None) -> None:
+                 ctx: IOCtx, cache: ClientCache | None = None,
+                 tx=None) -> None:
         self.iface = iface
         self.obj = obj
         self.ctx = ctx
         self.cache = cache
+        self.tx = tx
         self.offset = 0
         self.closed = False
 
     # -- explicit-offset ops (what IOR uses) --------------------------------
     def write_at(self, offset: int, data) -> int:
         if self.cache is not None:
-            return self.cache.write(self.obj, offset, data, self.ctx)
+            return self.cache.write(self.obj, offset, data, self.ctx,
+                                    tx=self.tx)
+        if self.tx is not None:
+            return self.tx.write_array(self.obj, offset, data, ctx=self.ctx)
         return self.obj.write(offset, data, ctx=self.ctx)
 
     def read_at(self, offset: int, size: int) -> np.ndarray:
         if self.cache is not None:
-            return self.cache.read(self.obj, offset, size, self.ctx)
+            return self.cache.read(self.obj, offset, size, self.ctx,
+                                   tx=self.tx)
+        if self.tx is not None:
+            return self.tx.read_array(self.obj, offset, size, ctx=self.ctx)
         return self.obj.read(offset, size, ctx=self.ctx)
 
     def write_sized_at(self, offset: int, nbytes: int) -> int:
         if self.cache is not None:
-            return self.cache.write_sized(self.obj, offset, nbytes, self.ctx)
+            return self.cache.write_sized(self.obj, offset, nbytes, self.ctx,
+                                          tx=self.tx)
+        if self.tx is not None:
+            return self.tx.write_sized(self.obj, offset, nbytes, ctx=self.ctx)
         return self.obj.write_sized(offset, nbytes, ctx=self.ctx)
 
     def read_sized_at(self, offset: int, nbytes: int) -> int:
         if self.cache is not None:
-            return self.cache.read_sized(self.obj, offset, nbytes, self.ctx)
+            return self.cache.read_sized(self.obj, offset, nbytes, self.ctx,
+                                         tx=self.tx)
+        if self.tx is not None:
+            return self.tx.read_sized(self.obj, offset, nbytes, ctx=self.ctx)
         return self.obj.read_sized(offset, nbytes, ctx=self.ctx)
 
     # -- streaming ops (POSIX style) -----------------------------------------
@@ -153,6 +174,7 @@ class AccessInterface(abc.ABC):
 
     name: str = "?"
     profile_name: str = "dfs"   # row of COST_PROFILES this interface uses
+    has_namespace: bool = True  # False: raw objects, mkdir/readdir are void
 
     def __init__(self, dfs, cache_mode: str = "none") -> None:
         self.dfs = dfs
@@ -194,39 +216,68 @@ class AccessInterface(abc.ABC):
             cache.flush()
 
     def _handle(self, obj: ArrayObject, ctx: IOCtx,
-                client_node: int) -> FileHandle:
+                client_node: int, tx=None) -> FileHandle:
         cache = self.cache_for(client_node)
         if cache is not None:
             ctx = dataclasses.replace(ctx, cache=cache)
-        return FileHandle(self, obj, ctx, cache)
+        return FileHandle(self, obj, ctx, cache, tx=tx)
+
+    # ---- topology-derived placement ----------------------------------------
+    def place_writer(self, rank: int) -> tuple[int, int]:
+        """Map a parallel-writer rank onto the client topology.
+
+        Checkpoint writers are hosts: rank ``w`` runs on client node
+        ``w % n_client_nodes`` (round-robin, one writer stream per node
+        before doubling up), keeping every node NIC — and, when caching is
+        on, every node's ClientCache — in play."""
+        topo = self.dfs.cont.pool.sim.topo
+        return rank % topo.n_client_nodes, rank
+
+    def _dentry_hit_cost(self, client_node: int, process: int) -> None:
+        """A dentry-cache hit is not free: one page-cache/syscall lookup on
+        the caller's serial chain (no fabric, no metadata service)."""
+        self.dfs.cont.pool.sim.record_local(client_node=client_node,
+                                            process=process, nbytes=0,
+                                            nops=1)
 
     # ---- namespace ops -----------------------------------------------------
     def create(self, path: str, oclass=None, client_node: int = 0,
-               process: int = 0) -> FileHandle:
+               process: int = 0, tx=None) -> FileHandle:
         ctx = self.make_ctx(client_node, process)
         obj = self.dfs.create_file(path, oclass=oclass, ctx=ctx)
         cache = self.cache_for(client_node)
         if cache is not None:
             ocname = obj.oclass.name
             cache.put_dentry(path, {"type": "file", "oclass": ocname})
-        return self._handle(obj, ctx, client_node)
+        return self._handle(obj, ctx, client_node, tx=tx)
 
     def open(self, path: str, client_node: int = 0,
-             process: int = 0) -> FileHandle:
+             process: int = 0, tx=None) -> FileHandle:
         ctx = self.make_ctx(client_node, process)
         cache = self.cache_for(client_node)
         if cache is not None:
             d = cache.lookup_dentry(path)
             if d is not None and d.get("type") == "file":
                 # dentry hit: skip the namespace KV walk entirely
+                self._dentry_hit_cost(client_node, process)
                 obj = self.dfs.cont.open_array(f"file:{path}",
                                                oclass=d["oclass"])
-                return self._handle(obj, ctx, client_node)
+                return self._handle(obj, ctx, client_node, tx=tx)
         obj = self.dfs.open_file(path, ctx=ctx)
         if cache is not None:
             cache.put_dentry(path, {"type": "file",
                                     "oclass": obj.oclass.name})
-        return self._handle(obj, ctx, client_node)
+        return self._handle(obj, ctx, client_node, tx=tx)
+
+    def dup(self, handle: FileHandle, client_node: int = 0, process: int = 0,
+            tx=None) -> FileHandle:
+        """A second descriptor on an already-open file for another rank —
+        the shared-file (MPI_File_open-style) pattern where every rank holds
+        its own fd but only one namespace lookup ever happened.  No
+        metadata traffic; the new handle carries the rank's own placement,
+        cache tier and transaction."""
+        ctx = self.make_ctx(client_node, process)
+        return self._handle(handle.obj, ctx, client_node, tx=tx)
 
     def unlink(self, path: str, client_node: int = 0, process: int = 0) -> None:
         # drop every cached view this interface holds (all client nodes):
@@ -241,6 +292,7 @@ class AccessInterface(abc.ABC):
         if cache is not None:
             d = cache.lookup_dentry(path)
             if d is not None:
+                self._dentry_hit_cost(client_node, process)
                 if d.get("type") == "file":
                     obj = self.dfs.cont.open_array(f"file:{path}",
                                                    oclass=d["oclass"])
@@ -251,3 +303,10 @@ class AccessInterface(abc.ABC):
             cache.put_dentry(path, {k: v for k, v in d.items()
                                     if k != "size"})
         return d
+
+    def mkdir(self, path: str) -> None:
+        """Directory creation is a pure metadata op (no data-path ctx)."""
+        self.dfs.mkdir(path)
+
+    def readdir(self, path: str) -> list[str]:
+        return self.dfs.readdir(path)

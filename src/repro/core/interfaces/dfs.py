@@ -90,6 +90,7 @@ class DFS:
         d = self._dentry(path, ctx)
         if d.get("type") != "file":
             raise DFSError(f"{path} is not a file")
+        self.cont.pool.sim.record_md(1)
         return self.cont.open_array(f"file:{path}", oclass=d["oclass"])
 
     def unlink(self, path: str, ctx: IOCtx = DEFAULT_CTX) -> None:
@@ -97,6 +98,10 @@ class DFS:
         parent, name = self._split(path)
         if d["type"] == "file":
             self.open_file(path, ctx).punch()
+        else:
+            # reclaim the directory's own KV object (its "." self-record)
+            # along with the dentry, or unlinked dirs leak store space
+            self._dir_kv(path).remove(".")
         self._dir_kv(parent).remove(name)
         self.cont.pool.sim.record_md(1)
 
@@ -110,19 +115,9 @@ class DFS:
 
     def readdir(self, path: str, ctx: IOCtx = DEFAULT_CTX) -> list[str]:
         path = "/" + path.strip("/")
-        kv = self._dir_kv(path)
-        names: set[str] = set()
-        # enumerate across all shards (dkeys are hashed over the engines)
-        lay = kv._layout()
-        for eid in set(lay.targets):
-            eng = self.cont.pool.engines[eid]
-            if not eng.alive:
-                continue
-            for key in eng.keys((self.cont.label, kv.oid)):
-                if key[2] not in (".",):
-                    names.add(key[2])
+        names = [n for n in self._dir_kv(path).list_dkeys() if n != "."]
         self.cont.pool.sim.record_md(1)
-        return sorted(names)
+        return names
 
 
 class DFSInterface(AccessInterface):
@@ -150,17 +145,19 @@ class ArrayInterface(AccessInterface):
 
     name = "daos-array"
     profile_name = "daos-array"
+    has_namespace = False
 
     def create(self, path: str, oclass=None, client_node: int = 0,
-               process: int = 0):
+               process: int = 0, tx=None):
         # no namespace entry: raw object addressed by name
         ctx = self.make_ctx(client_node, process)
         obj = self.dfs.cont.open_array(
             f"raw:{path}", oclass=oclass or self.dfs.default_oclass)
-        return self._handle(obj, ctx, client_node)
+        return self._handle(obj, ctx, client_node, tx=tx)
 
-    def open(self, path: str, client_node: int = 0, process: int = 0):
-        return self.create(path, None, client_node, process)
+    def open(self, path: str, client_node: int = 0, process: int = 0,
+             tx=None):
+        return self.create(path, None, client_node, process, tx=tx)
 
     def stat(self, path: str, client_node: int = 0, process: int = 0) -> dict:
         obj = self.dfs.cont.open_array(f"raw:{path}",
@@ -168,5 +165,12 @@ class ArrayInterface(AccessInterface):
         return {"type": "array", "size": obj.size}
 
     def unlink(self, path: str, client_node: int = 0, process: int = 0) -> None:
+        # punch broadcasts notify_punch to every attached cache
         self.dfs.cont.open_array(f"raw:{path}",
                                  oclass=self.dfs.default_oclass).punch()
+
+    def mkdir(self, path: str) -> None:
+        pass          # no namespace: directories don't exist at this level
+
+    def readdir(self, path: str) -> list[str]:
+        return []     # raw objects are unenumerable without the namespace

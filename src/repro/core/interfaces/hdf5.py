@@ -43,11 +43,11 @@ class HDF5Interface(AccessInterface):
                                 frag_bytes=self.chunk_bytes)
 
     def create(self, path: str, oclass=None, client_node: int = 0,
-               process: int = 0):
-        h = super().create(path, oclass, client_node, process)
+               process: int = 0, tx=None):
+        h = super().create(path, oclass, client_node, process, tx=tx)
         # file-format bootstrap: superblock + root group + dataset header
         self.dfs.cont.pool.sim.record_md(3)
-        h.obj.write_sized(0, 2048, ctx=h.ctx)   # superblock/header blocks
+        h.write_sized_at(0, 2048)               # superblock/header blocks
         return h
 
     def close(self, handle) -> None:

@@ -389,3 +389,16 @@ class KVObject(_ObjectBase):
         eid = self._shard_for(dkey)
         return [k[3] for k in
                 self._engine(eid).keys((self.container.label, self.oid, dkey))]
+
+    def list_dkeys(self) -> list:
+        """Enumerate dkeys across all live shards (daos_kv_list: dkeys are
+        hashed over the engines, so every shard must be walked)."""
+        lay = self._layout()
+        out: set = set()
+        for eid in set(lay.targets):
+            eng = self._engine(eid)
+            if not eng.alive:
+                continue
+            for key in eng.keys((self.container.label, self.oid)):
+                out.add(key[2])
+        return sorted(out)

@@ -32,6 +32,15 @@ class Transaction:
         kw = {"ctx": ctx} if ctx is not None else {}
         return obj.write(offset, data, epoch=self.epoch, **kw)
 
+    def write_sized(self, obj, offset: int, nbytes: int, ctx=None) -> int:
+        """Sized (synthetic-payload) write staged under this tx's epoch."""
+        self._check_open()
+        lay = obj._layout()
+        for t in lay.targets:
+            self.touch(t)
+        kw = {"ctx": ctx} if ctx is not None else {}
+        return obj.write_sized(offset, nbytes, epoch=self.epoch, **kw)
+
     def put_kv(self, obj, dkey, akey, value, ctx=None) -> None:
         self._check_open()
         for eid in obj._replicas_for(dkey):
@@ -43,6 +52,10 @@ class Transaction:
         """Reads inside the tx see the tx's own writes."""
         kw = {"ctx": ctx} if ctx is not None else {}
         return obj.read(offset, size, epoch=float(self.epoch), **kw)
+
+    def read_sized(self, obj, offset: int, nbytes: int, ctx=None) -> int:
+        kw = {"ctx": ctx} if ctx is not None else {}
+        return obj.read_sized(offset, nbytes, epoch=float(self.epoch), **kw)
 
     # -- lifecycle ------------------------------------------------------------
     def _check_open(self) -> None:

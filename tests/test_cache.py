@@ -150,6 +150,60 @@ def test_epoch_advance_of_unrelated_object_keeps_cache(world):
     assert iface.cache_stats()["read_hits"] == 1
 
 
+# ---------------- transaction association ----------------
+def test_write_through_tx_staged_pages_dropped_on_abort(world):
+    """Non-writeback (readahead) caches populate pages from tx-staged
+    writes; an abort must drop them, not serve them as hits."""
+    pool, dfs = world
+    iface = make_interface("posix-readahead", dfs)
+    h0 = iface.create("/d/ra_tx", client_node=0, process=0)
+    tx = dfs.cont.tx_begin()
+    h = iface.dup(h0, client_node=0, process=0, tx=tx)
+    h.write_at(0, b"staged!")
+    tx.abort()
+    h2 = iface.open("/d/ra_tx", client_node=0, process=0)
+    assert bytes(h2.read_at(0, 7)) == b"\0" * 7   # punched, not cached
+
+
+def test_second_writer_does_not_clobber_open_tx_association(world):
+    """A second writer (different tx, same node cache, same object) must
+    not re-associate dirty extents staged under an earlier open tx — the
+    earlier tx's commit barrier would then have nothing to flush and its
+    epoch would become visible with data still in the client buffer."""
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h0 = iface.create("/d/two_tx", client_node=0, process=0)
+    tx_a = dfs.cont.tx_begin()
+    ha = iface.dup(h0, client_node=0, process=0, tx=tx_a)
+    ha.write_at(0, b"A" * 32)
+    hb = iface.open("/d/two_tx", client_node=0, process=1)  # no tx
+    hb.write_at(32, b"B" * 32)
+    tx_a.commit()
+    # A's bytes are durable and visible to a cache-less foreign client
+    plain = make_interface("posix", dfs)
+    got = plain.open("/d/two_tx", client_node=1, process=9).read_at(0, 32)
+    np.testing.assert_array_equal(got, np.frombuffer(b"A" * 32, np.uint8))
+
+
+def test_committed_read_does_not_hit_open_tx_staged_pages(world):
+    """A committed-epoch reader on the same node must not be served pages
+    another handle staged under a still-open transaction."""
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h0 = iface.create("/d/stage", client_node=0, process=0)
+    tx = dfs.cont.tx_begin()
+    h = iface.dup(h0, client_node=0, process=0, tx=tx)
+    h.write_at(0, b"uncommitted")
+    h2 = iface.open("/d/stage", client_node=0, process=1)   # no tx
+    assert bytes(h2.read_at(0, 11)) == b"\0" * 11
+    tx.commit()
+    # durable and visible post-commit (read via a cache-less client: the
+    # same-node entry legitimately still holds its committed-epoch view)
+    plain = make_interface("posix", dfs)
+    got = plain.open("/d/stage", client_node=1, process=9).read_at(0, 11)
+    assert bytes(got) == b"uncommitted"
+
+
 # ---------------- modeled performance ----------------
 def test_cached_small_transfer_speedup():
     """The acceptance bar: write-back caching lifts a small-transfer POSIX

@@ -103,6 +103,54 @@ def test_manager_walks_back_to_restorable(world):
                                   trees[1]["params"]["w"])
 
 
+@pytest.mark.parametrize("interface", ["hdf5", "daos-array"])
+def test_fresh_manager_discovers_steps(world, interface):
+    """Crash recovery: a manager with no in-memory history must discover
+    saved steps — including through the namespace-less daos-array
+    interface (step-index KV) and hdf5 (tx-aware create override)."""
+    pool, dfs = world
+    ck = Checkpointer(dfs, interface=interface, layout="sharded",
+                      n_writers=2, base=f"/disc_{interface}")
+    trees = {s: make_tree(seed=s) for s in range(2)}
+    for s in range(2):
+        ck.save(s, trees[s])
+    fresh = CheckpointManager(Checkpointer(
+        dfs, interface=interface, layout="sharded", n_writers=2,
+        base=f"/disc_{interface}"))
+    step, back = fresh.restore_latest(make_tree(), pool=pool)
+    assert step == 1
+    np.testing.assert_array_equal(back["params"]["w"],
+                                  trees[1]["params"]["w"])
+    # and gc through the fresh manager removes the index entry too
+    fresh.ckpt.delete_step(0)
+    assert fresh.ckpt.list_steps() == [1]
+
+
+def test_gc_reclaims_manifests_and_directories(world):
+    """keep_n must bound store usage: gc of an old step removes its shard
+    files AND its manifest KV object AND its step-directory entry (the seed
+    left the last two behind, so the store grew without bound)."""
+    pool, dfs = world
+    ck = Checkpointer(dfs, layout="sharded", n_writers=2, base="/gcr")
+    mgr = CheckpointManager(ck, save_every=1, keep_n=2)
+    used = []
+    for s in range(6):
+        mgr.maybe_save(s, make_tree(seed=s), async_=False)
+        used.append(sum(len(e._store) for e in pool.engines.values()))
+    # namespace: only the kept steps remain visible
+    assert ck.list_steps() == [5, 4]
+    # manifests of collected steps are gone, not just their shard files
+    for old in (0, 1, 2, 3):
+        with pytest.raises(CheckpointError):
+            ck.load_manifest(old)
+    # store usage reaches a steady state once keep_n is exceeded
+    assert used[-1] <= used[2]
+    step, back = mgr.restore_latest(make_tree(), pool=pool)
+    assert step == 5
+    np.testing.assert_array_equal(back["params"]["w"],
+                                  make_tree(seed=5)["params"]["w"])
+
+
 def test_elastic_slice_read(world):
     pool, dfs = world
     ck = Checkpointer(dfs, layout="sharded", n_writers=4)
