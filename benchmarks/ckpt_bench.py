@@ -19,6 +19,12 @@ cached interface variants, in both layouts, validating
   interface is served from the node-local page cache (each shard is read
   where its writer ran), lifting restore bandwidth over uncached POSIX.
 
+``--mode elastic`` is the elastic restore study: save with N writer
+ranks, restore re-sharded onto a *different* host count through
+``restore_slice`` — whose ``place_reader`` maps each new host's ranges
+onto the original writers' nodes, so the re-sharded restore still hits
+warm caches (claim **C10**).
+
 The cached study uses a synthetic many-small-leaves state (``--cached-
 leaves x --cached-leaf-kib``), the checkpoint analogue of IOR's small-
 transfer cached sweep; the interface matrix keeps the real smoke model.
@@ -119,6 +125,82 @@ def bench_cached(params, interface: str, layout: str, oclass: str = "SX",
     return row
 
 
+def bench_elastic(params, interface: str, layout: str = "shared",
+                  oclass: str = "SX", save_writers: int = 8,
+                  new_hosts: int = 12) -> dict:
+    """Elastic restore: save with ``save_writers`` writer ranks, then
+    restore re-sharded onto a *different* host count via
+    ``restore_slice``.  ``place_reader`` maps each new host's range onto
+    the original writers' nodes where they overlap, so a caching
+    interface restores from warm page caches even though no host reads
+    the exact range it would have written (claim C10)."""
+    pool = Pool(Topology(), materialize=True)
+    cont = pool.create_container("ck", oclass=oclass)
+    dfs = DFS(cont)
+    ck = Checkpointer(dfs, interface=interface, oclass=oclass,
+                      layout=layout, n_writers=save_writers)
+    nbytes = tree_bytes(params)
+    with pool.sim.phase():
+        ck.save(0, params)
+    got: dict[str, list] = {}
+    with pool.sim.phase() as rph:
+        for h in range(new_hosts):           # each new host: one manifest
+            man = ck.load_manifest(0)        # read, then its slice of every
+            for path, entry in man["leaves"].items():   # leaf
+                n = entry["nbytes"]
+                per = -(-n // new_hosts)
+                lo, hi = h * per, min(n, (h + 1) * per)
+                if lo >= hi:
+                    continue
+                got.setdefault(path, []).append(
+                    (h, ck.restore_slice(0, path, lo, hi, man=man)))
+    # bit-exactness of the re-sharded slices
+    for (path, leaf) in ((p, np.asarray(v)) for p, v in params.items()):
+        raw = np.ascontiguousarray(leaf).view(np.uint8).reshape(-1)
+        parts = [s for _, s in sorted(got[f"/{path}"], key=lambda t: t[0])]
+        np.testing.assert_array_equal(np.concatenate(parts), raw)
+    row = {"mode": "elastic", "interface": interface, "oclass": oclass,
+           "layout": layout, "mib": round(nbytes / 2**20, 1),
+           "save_writers": save_writers, "new_hosts": new_hosts,
+           "restore_gib_s": round(bandwidth(nbytes, rph.elapsed), 2)}
+    if getattr(ck.iface, "cache_mode", "none") != "none":
+        st = ck.iface.cache_stats()
+        hits, misses = st.get("read_hits", 0), st.get("read_misses", 0)
+        row["cache"] = ck.iface.cache_mode
+        row["hit_rate"] = round(hits / max(1, hits + misses), 3)
+    else:
+        row["cache"] = "none"
+    return row
+
+
+def check_elastic_claims(rows: list[dict]) -> list[dict]:
+    erows = [r for r in rows if r.get("mode") == "elastic"]
+    if not erows:
+        return []
+
+    def get(iface, metric):
+        for r in erows:
+            if r["interface"] == iface:
+                return r.get(metric)
+        return None
+
+    out = []
+    b = get("posix", "restore_gib_s")
+    c = get("posix-cached", "restore_gib_s")
+    if None not in (b, c):
+        r0 = erows[0]
+        out.append({"claim": "C10 elastic cached restore onto a different "
+                             "host count hits the writers' warm caches "
+                             "(posix-cached >= 3x uncached posix)",
+                    "ok": bool(c >= 3 * b),
+                    "detail": f"{r0['save_writers']} writers -> "
+                              f"{r0['new_hosts']} hosts ({r0['layout']}): "
+                              f"restore {b:.2f}->{c:.2f} GiB/s "
+                              f"({c / b:.1f}x), hit rate "
+                              f"{get('posix-cached', 'hit_rate')}"})
+    return out
+
+
 def check_ckpt_cache_claims(rows: list[dict]) -> list[dict]:
     """Validate the checkpoint-caching claims against the cached sweep."""
     crows = [r for r in rows if r.get("mode") == "cached"]
@@ -173,7 +255,7 @@ def check_ckpt_cache_claims(rows: list[dict]) -> list[dict]:
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
-    ap.add_argument("--mode", choices=["matrix", "cached", "all"],
+    ap.add_argument("--mode", choices=["matrix", "cached", "elastic", "all"],
                     default="matrix")
     ap.add_argument("--interfaces", nargs="+",
                     default=["dfs", "posix", "hdf5", "daos-array"])
@@ -187,6 +269,12 @@ def main(argv=None) -> list[dict]:
     ap.add_argument("--cached-leaves", type=int, default=128)
     ap.add_argument("--cached-leaf-kib", type=int, default=256)
     ap.add_argument("--cached-writers", type=int, default=8)
+    # elastic restore: save with N writers, restore onto a different count
+    ap.add_argument("--elastic-interfaces", nargs="+",
+                    default=["posix", "posix-cached"])
+    ap.add_argument("--elastic-layout", default="shared")
+    ap.add_argument("--elastic-save-writers", type=int, default=8)
+    ap.add_argument("--elastic-new-hosts", type=int, default=12)
     ap.add_argument("--out", default=str(ARTIFACTS / "ckpt_bench.json"))
     args = ap.parse_args(argv)
 
@@ -225,6 +313,26 @@ def main(argv=None) -> list[dict]:
                 print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
                       f"({c['detail']})")
             rows.extend({"mode": "claims", **c} for c in claims)
+    if args.mode in ("elastic", "all"):
+        state = small_leaf_tree(args.cached_leaves, args.cached_leaf_kib)
+        print(f"\n=== elastic restore study "
+              f"({args.elastic_save_writers} writers -> "
+              f"{args.elastic_new_hosts} hosts, {args.elastic_layout}) ===")
+        for iface in args.elastic_interfaces:
+            r = bench_elastic(state, iface, layout=args.elastic_layout,
+                              save_writers=args.elastic_save_writers,
+                              new_hosts=args.elastic_new_hosts)
+            rows.append(r)
+            print(f"{iface:16s} restore {r['restore_gib_s']:7.2f} GiB/s  "
+                  f"cache={r['cache']}"
+                  + (f"  hit={r['hit_rate']}" if "hit_rate" in r else ""))
+        eclaims = check_elastic_claims(rows)
+        if eclaims:
+            print("\n=== Elastic-restore claims ===")
+            for c in eclaims:
+                print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
+                      f"({c['detail']})")
+            rows.extend({"mode": "claims", **c} for c in eclaims)
     pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
     return rows

@@ -1,0 +1,280 @@
+"""Multi-client coherence study: write-sharing storms and the caching-off
+crossover (the arXiv 2409.18682 finding PR 1/2 could not model).
+
+N client nodes write-share one file *outside* a transaction — the
+uncoordinated pattern DAOS guidance says to disable dfuse caching for —
+under each coherence policy of the cache tier:
+
+* ``off``        — direct I/O (no cache): every op pays the sync fuse
+                   path, but nothing is ever invalidated or refetched;
+* ``broadcast``  — coherent caching: every flush invalidates the shared
+                   file's pages in all other caches (storm: writes x
+                   (N-1) messages), so sharers' reads keep missing and
+                   refetch whole readahead windows — amplified fabric
+                   traffic that grows with sharer count;
+* ``timeout``    — dfuse-style leases: no storms, reads served (possibly
+                   stale, bounded by the timeout) until the lease expires,
+                   then one cheap version-token revalidation.
+
+The workload interleaves, chunk by chunk, a sync-visible write (write +
+fsync: sharers must see it — the non-tx sharing contract) with reads of a
+peer's chunk, then repeats for ``--rounds`` rounds separated by
+``--think`` seconds of application compute (advancing the simulated clock
+so leases age).  A single-writer/many-reader control shows the C6/C9-style
+caching wins survive every policy when there is no write-sharing.
+
+Claims validated:
+
+* **CO1** — the caching-off crossover exists and shifts with sharer
+  count: coherent (broadcast) caching beats off at 1 sharer, loses beyond
+  a crossover sharer count, and its advantage decays monotonically as
+  sharers grow.
+* **CO2** — timeout revalidation cuts coherence traffic >= 5x vs the
+  broadcast storm under write-sharing, while serving staleness bounded by
+  the timeout.
+* **CO3** — single-writer/many-reader re-reads keep their cache win
+  (>= 3x off) under every caching policy.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import Pool, Topology, bandwidth       # noqa: E402
+from repro.core.interfaces import DFS, make_interface  # noqa: E402
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+MIB = 1 << 20
+KIB = 1 << 10
+GIB = 1 << 30
+
+
+def mount_for(policy: str, tau: float) -> str:
+    return {"off": "posix-cached:coherence=off",
+            "broadcast": "posix-cached:coherence=broadcast",
+            "timeout": f"posix-cached:timeout={tau}"}[policy]
+
+
+def make_world(clients: int, oclass: str = "SX"):
+    topo = Topology(n_server_nodes=8, engines_per_node=2,
+                    n_client_nodes=clients, procs_per_client_node=1)
+    pool = Pool(topo, materialize=False)
+    cont = pool.create_container("coh", oclass=oclass)
+    dfs = DFS(cont, dir_oclass="S1")
+    dfs.mkdir("/coh")
+    return pool, dfs
+
+
+def _shared_handles(pool, dfs, iface, clients: int, block: int):
+    """One shared file, one descriptor per node (dup: single namespace
+    lookup), pre-sized so readahead windows are bounded by the file."""
+    with pool.sim.phase():
+        h0 = iface.create("/coh/shared", client_node=0, process=0)
+        handles = [h0]
+        for n in range(1, clients):
+            handles.append(iface.dup(h0, client_node=n, process=n))
+        for n, h in enumerate(handles):
+            h.write_sized_at(n * block, block)
+            h.fsync()
+    return handles
+
+
+def _iface_row(iface) -> dict:
+    st = iface.cache_stats()
+    co = iface.coherence_stats()
+    hits, misses = st.get("read_hits", 0), st.get("read_misses", 0)
+    return {"hit_rate": round(hits / max(1, hits + misses), 3),
+            "messages": co.get("messages", 0),
+            "invalidations_sent": co.get("invalidations_sent", 0),
+            "revalidations": (co.get("revalidations", 0)
+                              + co.get("dentry_revalidations", 0)),
+            "stale_hits": co.get("stale_hits", 0),
+            "max_staleness_s": round(co.get("max_staleness_s", 0.0), 3)}
+
+
+def write_share(policy: str, clients: int, rounds: int, block: int,
+                transfer: int, tau: float, think: float) -> dict:
+    """N nodes write-share one file, non-tx: per chunk index, every node
+    writes-and-syncs its own chunk (sharers must see it), then reads its
+    neighbour's freshly written chunk."""
+    pool, dfs = make_world(clients)
+    iface = make_interface(mount_for(policy, tau), dfs)
+    handles = _shared_handles(pool, dfs, iface, clients, block)
+    chunks = max(1, block // transfer)
+    t_total = 0.0
+    for _ in range(rounds):
+        with pool.sim.phase() as ph:
+            for k in range(chunks):
+                for n, h in enumerate(handles):
+                    h.write_sized_at(n * block + k * transfer, transfer)
+                    h.fsync()
+                for n, h in enumerate(handles):
+                    peer = (n + 1) % clients
+                    h.read_sized_at(peer * block + k * transfer, transfer)
+        t_total += ph.elapsed
+        pool.sim.clock.advance(think)        # application compute between
+        #                                      rounds: leases age here
+    moved = rounds * chunks * clients * transfer * 2
+    return {"mode": "write-share", "policy": policy, "clients": clients,
+            "block_mib": block // MIB, "transfer_kib": transfer // KIB,
+            "tau_s": tau, "bw_gib_s": round(bandwidth(moved, t_total), 3),
+            **_iface_row(iface)}
+
+
+def single_writer(policy: str, clients: int, rounds: int, block: int,
+                  transfer: int, tau: float, think: float) -> dict:
+    """Control workload: one writer, N re-reading nodes — no write-sharing,
+    so every caching policy should keep the C6/C9-style re-read win."""
+    pool, dfs = make_world(clients)
+    iface = make_interface(mount_for(policy, tau), dfs)
+    handles = _shared_handles(pool, dfs, iface, 1, block)
+    h0 = handles[0]
+    readers = [h0] + [iface.dup(h0, client_node=n, process=n)
+                      for n in range(1, clients)]
+    chunks = max(1, block // transfer)
+    t_total = 0.0
+    for _ in range(rounds):
+        with pool.sim.phase() as ph:
+            for k in range(chunks):
+                for h in readers:
+                    h.read_sized_at(k * transfer, transfer)
+        t_total += ph.elapsed
+        pool.sim.clock.advance(think)
+    moved = rounds * chunks * clients * transfer
+    return {"mode": "single-writer", "policy": policy, "clients": clients,
+            "block_mib": block // MIB, "transfer_kib": transfer // KIB,
+            "tau_s": tau,
+            "re_read_gib_s": round(bandwidth(moved, t_total), 3),
+            **_iface_row(iface)}
+
+
+def check_claims(rows: list[dict]) -> list[dict]:
+    ws = [r for r in rows if r["mode"] == "write-share"]
+    sw = [r for r in rows if r["mode"] == "single-writer"]
+
+    def get(sel, policy, clients, metric):
+        for r in sel:
+            if r["policy"] == policy and r["clients"] == clients:
+                return r.get(metric)
+        return None
+
+    out = []
+    counts = sorted({r["clients"] for r in ws})
+    if len(counts) >= 2:
+        nmin, nmax = counts[0], counts[-1]
+        ratios = []
+        for c in counts:
+            b = get(ws, "broadcast", c, "bw_gib_s")
+            o = get(ws, "off", c, "bw_gib_s")
+            if None in (b, o):
+                break
+            ratios.append((c, b / o))
+        if len(ratios) == len(counts):
+            crossover = next((c for c, q in ratios if q < 1.0), None)
+            decaying = all(b[1] <= a[1] * 1.05
+                           for a, b in zip(ratios, ratios[1:]))
+            ok = (ratios[0][1] >= 1.5 and ratios[-1][1] < 1.0
+                  and crossover is not None and decaying)
+            out.append({"claim": "CO1 caching-off crossover exists and "
+                                 "shifts with sharer count (cached wins "
+                                 "solo, off wins beyond the crossover, "
+                                 "advantage decays monotonically)",
+                        "ok": bool(ok),
+                        "detail": f"cached/off: " + ", ".join(
+                            f"N={c}: {q:.2f}x" for c, q in ratios)
+                        + (f"; crossover at N={crossover}" if crossover
+                           else "; no crossover")})
+        b_msgs = get(ws, "broadcast", nmax, "messages")
+        t_msgs = get(ws, "timeout", nmax, "messages")
+        t_stale = get(ws, "timeout", nmax, "max_staleness_s")
+        tau = get(ws, "timeout", nmax, "tau_s")
+        if None not in (b_msgs, t_msgs, t_stale, tau):
+            # zero timeout messages is the ideal case (no lease ever
+            # expired): compare against max(1, ...) so it passes
+            ok = (b_msgs >= 5 * max(1, t_msgs)
+                  and t_stale <= tau + 1e-9)
+            out.append({"claim": "CO2 timeout revalidation cuts coherence "
+                                 "traffic >= 5x vs broadcast under "
+                                 "write-sharing, staleness bounded by the "
+                                 "timeout",
+                        "ok": bool(ok),
+                        "detail": f"messages at N={nmax}: broadcast "
+                                  f"{b_msgs:,} vs timeout {t_msgs:,} "
+                                  f"({b_msgs / max(1, t_msgs):.0f}x); max "
+                                  f"staleness {t_stale:.3f}s <= tau "
+                                  f"{tau}s"})
+    if sw:
+        cmax = max(r["clients"] for r in sw)
+        o = get(sw, "off", cmax, "re_read_gib_s")
+        b = get(sw, "broadcast", cmax, "re_read_gib_s")
+        t = get(sw, "timeout", cmax, "re_read_gib_s")
+        if None not in (o, b, t):
+            ok = b >= 3 * o and t >= 3 * o
+            out.append({"claim": "CO3 single-writer/many-reader re-reads "
+                                 "keep the cache win (>= 3x off) under "
+                                 "every policy",
+                        "ok": bool(ok),
+                        "detail": f"re-read at N={cmax}: off {o:.1f}, "
+                                  f"broadcast {b:.1f} "
+                                  f"({b / o:.1f}x), timeout {t:.1f} "
+                                  f"({t / o:.1f}x) GiB/s"})
+    return out
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", nargs="+", type=int,
+                    default=[1, 2, 4, 8, 16])
+    ap.add_argument("--policies", nargs="+",
+                    default=["off", "broadcast", "timeout"])
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--block-mib", type=int, default=8)
+    ap.add_argument("--transfer-kib", type=int, default=64)
+    ap.add_argument("--tau", type=float, default=1.0,
+                    help="timeout-policy attr/dentry lease (s)")
+    ap.add_argument("--think", type=float, default=0.3,
+                    help="simulated compute between rounds (s)")
+    ap.add_argument("--out", default=str(ARTIFACTS / "coherence_bench.json"))
+    args = ap.parse_args(argv)
+
+    block = args.block_mib * MIB
+    transfer = args.transfer_kib * KIB
+    rows = []
+    print(f"=== write-sharing sweep ({args.block_mib} MiB/node, "
+          f"{args.transfer_kib} KiB transfers, {args.rounds} rounds, "
+          f"tau={args.tau}s, think={args.think}s) ===")
+    for clients in args.clients:
+        for policy in args.policies:
+            r = write_share(policy, clients, args.rounds, block, transfer,
+                            args.tau, args.think)
+            rows.append(r)
+            print(f"N={clients:3d} {policy:10s} {r['bw_gib_s']:8.2f} GiB/s  "
+                  f"msgs {r['messages']:7,}  hit {r['hit_rate']:.2f}  "
+                  f"stale<= {r['max_staleness_s']:.2f}s")
+    print("\n=== single-writer / many-reader control ===")
+    cmax = max(args.clients)
+    for policy in args.policies:
+        r = single_writer(policy, cmax, args.rounds, block, transfer,
+                          args.tau, args.think)
+        rows.append(r)
+        print(f"N={cmax:3d} {policy:10s} {r['re_read_gib_s']:8.2f} GiB/s  "
+              f"msgs {r['messages']:7,}  hit {r['hit_rate']:.2f}")
+    claims = check_claims(rows)
+    if claims:
+        print("\n=== Coherence claims ===")
+        for c in claims:
+            print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
+                  f"({c['detail']})")
+        rows.extend({"mode": "claims", **c} for c in claims)
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(f"\nsaved {len(rows)} rows -> {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,14 @@
 into EXPERIMENTS.md: the §Roofline tables (dry-run artifacts, at the
 <!-- ROOFLINE TABLES --> marker), the IOR client-caching study
 (artifacts/ior_results.json cached-mode rows, at the
-<!-- IOR CACHE TABLES --> marker), the checkpoint-caching study
-(artifacts/ckpt_bench.json, <!-- CKPT CACHE TABLES -->) and the
-metadata-caching study (artifacts/mdtest.json, <!-- MDTEST CACHE
-TABLES -->)."""
+<!-- IOR CACHE TABLES --> marker), the transfer-size sweep
+(sweep-mode rows from artifacts/ior_sweep.json or ior_results.json,
+<!-- IOR SWEEP TABLES -->), the checkpoint-caching study
+(artifacts/ckpt_bench.json, <!-- CKPT CACHE TABLES -->), the elastic
+restore study (elastic-mode rows of the same file, <!-- ELASTIC
+TABLES -->), the metadata-caching study (artifacts/mdtest.json,
+<!-- MDTEST CACHE TABLES -->) and the multi-client coherence study
+(artifacts/coherence_bench.json, <!-- COHERENCE TABLES -->)."""
 from __future__ import annotations
 
 import json
@@ -18,8 +22,11 @@ from benchmarks.roofline import load  # noqa: E402
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 MARK = "<!-- ROOFLINE TABLES -->"
 CACHE_MARK = "<!-- IOR CACHE TABLES -->"
+SWEEP_MARK = "<!-- IOR SWEEP TABLES -->"
 CKPT_MARK = "<!-- CKPT CACHE TABLES -->"
+ELASTIC_MARK = "<!-- ELASTIC TABLES -->"
 MDTEST_MARK = "<!-- MDTEST CACHE TABLES -->"
+COH_MARK = "<!-- COHERENCE TABLES -->"
 
 SKELETON = f"""# EXPERIMENTS
 
@@ -27,13 +34,25 @@ SKELETON = f"""# EXPERIMENTS
 
 {CACHE_MARK}
 
+## §IOR transfer sweep
+
+{SWEEP_MARK}
+
 ## §Checkpoint caching
 
 {CKPT_MARK}
 
+## §Elastic restore
+
+{ELASTIC_MARK}
+
 ## §Metadata caching
 
 {MDTEST_MARK}
+
+## §Coherence
+
+{COH_MARK}
 
 ## §Roofline
 
@@ -113,15 +132,114 @@ def cache_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
-def _claims_lines(rows: list[dict]) -> list[str]:
+def _claims_lines(rows: list[dict], prefixes: tuple = ()) -> list[str]:
     out = []
     for c in rows:
         if c.get("mode") == "claims":
+            if prefixes and not c["claim"].startswith(prefixes):
+                continue
             badge = "PASS" if c.get("ok") else "FAIL"
             out.append(f"- **[{badge}]** {c['claim']} — {c['detail']}")
     if out:
         out.append("")
     return out
+
+
+def sweep_table(rows: list[dict]) -> str:
+    """The transfer-size x cache-window sweep (arXiv 2409.18682 curves)."""
+    srows = [r for r in rows if r.get("mode") == "sweep"]
+    if not srows:
+        return ""
+    transfers = sorted({r["transfer_kib"] for r in srows})
+    windows = sorted({r["window"] for r in srows})
+    out = [f"### Transfer-size sweep ({srows[0]['clients']} client nodes x "
+           f"{srows[0]['ppn']} ppn, {srows[0]['block_mib']} MiB/process)", ""]
+    for metric, label in (("write_gib_s", "write"),
+                          ("cold_read_gib_s", "cold read"),
+                          ("re_read_gib_s", "re-read")):
+        out.append(f"**{label} GiB/s**")
+        out.append("")
+        out.append("| window | " + " | ".join(f"{t:.0f} KiB"
+                                              for t in transfers) + " |")
+        out.append("|---|" + "---|" * len(transfers))
+        for w in windows:
+            vals = []
+            for t in transfers:
+                v = [r for r in srows if r["window"] == w
+                     and r["transfer_kib"] == t]
+                vals.append(f"{v[0][metric]:.1f}" if v else "-")
+            out.append(f"| {w} | " + " | ".join(vals) + " |")
+        out.append("")
+    return "\n".join(out)
+
+
+def elastic_table(rows: list[dict]) -> str:
+    """Elastic restore onto a different host count, plus claim C10."""
+    erows = [r for r in rows if r.get("mode") == "elastic"]
+    if not erows:
+        return ""
+    r0 = erows[0]
+    out = [f"### Elastic restore ({r0['save_writers']} writers -> "
+           f"{r0['new_hosts']} hosts, {r0['layout']}, {r0['mib']:.0f} MiB)",
+           "",
+           "| interface | cache | restore GiB/s | hit rate |",
+           "|---|---|---|---|"]
+    for r in sorted(erows, key=lambda r: r["interface"]):
+        hit = f"{r['hit_rate']:.2f}" if "hit_rate" in r else "-"
+        out.append(f"| {r['interface']} | {r.get('cache', 'none')} | "
+                   f"{r['restore_gib_s']:.2f} | {hit} |")
+    out.append("")
+    out.extend(_claims_lines(rows, prefixes=("C10",)))
+    return "\n".join(out)
+
+
+def coherence_table(rows: list[dict]) -> str:
+    """The write-sharing policy sweep + single-writer control + CO claims."""
+    ws = [r for r in rows if r.get("mode") == "write-share"]
+    if not ws:
+        return ""
+    counts = sorted({r["clients"] for r in ws})
+    policies = ["off", "broadcast", "timeout"]
+    out = [f"### Write-sharing sweep ({ws[0]['block_mib']} MiB/node, "
+           f"{ws[0]['transfer_kib']} KiB transfers, "
+           f"tau={ws[0]['tau_s']}s)", "",
+           "| policy | metric | " + " | ".join(f"N={c}" for c in counts)
+           + " |",
+           "|---|---|" + "---|" * len(counts)]
+
+    def cell(policy, clients, metric, fmt):
+        for r in ws:
+            if r["policy"] == policy and r["clients"] == clients:
+                return fmt.format(r[metric])
+        return "-"
+
+    for p in policies:
+        if not any(r["policy"] == p for r in ws):
+            continue
+        out.append(f"| {p} | GiB/s | " + " | ".join(
+            cell(p, c, "bw_gib_s", "{:.2f}") for c in counts) + " |")
+        out.append(f"| {p} | messages | " + " | ".join(
+            cell(p, c, "messages", "{:,}") for c in counts) + " |")
+    trow = [r for r in ws if r["policy"] == "timeout"]
+    if trow:
+        out.append("| timeout | max staleness (s) | " + " | ".join(
+            cell("timeout", c, "max_staleness_s", "{:.2f}")
+            for c in counts) + " |")
+    out.append("")
+    sw = [r for r in rows if r.get("mode") == "single-writer"]
+    if sw:
+        out.append(f"### Single-writer / many-reader control "
+                   f"(N={sw[0]['clients']})")
+        out.append("")
+        out.append("| policy | re-read GiB/s | messages | hit rate |")
+        out.append("|---|---|---|---|")
+        for r in sorted(sw, key=lambda r: policies.index(r["policy"])
+                        if r["policy"] in policies else 9):
+            out.append(f"| {r['policy']} | {r['re_read_gib_s']:.1f} | "
+                       f"{r['messages']:,} | {r['hit_rate']:.2f} |")
+        out.append("")
+    out.extend(_claims_lines(rows))
+    return "\n".join(out)
 
 
 def ckpt_cache_table(rows: list[dict]) -> str:
@@ -142,7 +260,7 @@ def ckpt_cache_table(rows: list[dict]) -> str:
             f"| {r['save_gib_s']:.2f} | {r['restore_gib_s']:.2f} | "
             f"{r['re_restore_gib_s']:.2f} | {hit} |")
     out.append("")
-    out.extend(_claims_lines(rows))
+    out.extend(_claims_lines(rows, prefixes=("C8", "C9")))
     return "\n".join(out)
 
 
@@ -200,14 +318,25 @@ def main() -> None:
     text = _splice(text, MARK, "\n".join(parts))
 
     ior_json = ROOT / "artifacts" / "ior_results.json"
-    n_cached = 0
+    n_cached = n_sweep = 0
+    sweep_rows: list[dict] = []
     if ior_json.exists():
         rows = json.loads(ior_json.read_text())
         body = cache_table(rows)
         n_cached = sum(1 for r in rows if r.get("mode") == "cached")
         if body:
             text = _splice(text, CACHE_MARK, body)
-    n_ckpt = n_md = 0
+        sweep_rows.extend(r for r in rows if r.get("mode") == "sweep")
+    sweep_json = ROOT / "artifacts" / "ior_sweep.json"
+    if sweep_json.exists():
+        sweep_rows.extend(r for r in json.loads(sweep_json.read_text())
+                          if r.get("mode") == "sweep")
+    if sweep_rows:
+        body = sweep_table(sweep_rows)
+        n_sweep = len(sweep_rows)
+        if body:
+            text = _splice(text, SWEEP_MARK, body)
+    n_ckpt = n_md = n_elastic = n_coh = 0
     ckpt_json = ROOT / "artifacts" / "ckpt_bench.json"
     if ckpt_json.exists():
         rows = json.loads(ckpt_json.read_text())
@@ -215,6 +344,10 @@ def main() -> None:
         n_ckpt = sum(1 for r in rows if r.get("mode") == "cached")
         if body:
             text = _splice(text, CKPT_MARK, body)
+        body = elastic_table(rows)
+        n_elastic = sum(1 for r in rows if r.get("mode") == "elastic")
+        if body:
+            text = _splice(text, ELASTIC_MARK, body)
     md_json = ROOT / "artifacts" / "mdtest.json"
     if md_json.exists():
         rows = json.loads(md_json.read_text())
@@ -222,10 +355,20 @@ def main() -> None:
         n_md = sum(1 for r in rows if "stat_s-1" in r)
         if body:
             text = _splice(text, MDTEST_MARK, body)
+    coh_json = ROOT / "artifacts" / "coherence_bench.json"
+    if coh_json.exists():
+        rows = json.loads(coh_json.read_text())
+        body = coherence_table(rows)
+        n_coh = sum(1 for r in rows
+                    if r.get("mode") in ("write-share", "single-writer"))
+        if body:
+            text = _splice(text, COH_MARK, body)
     exp.write_text(text)
     print(f"spliced tables: roofline base={len(base)} opt={len(opt)} "
           f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}; "
-          f"ckpt cached rows={n_ckpt}; mdtest rows={n_md}")
+          f"ior sweep rows={n_sweep}; ckpt cached rows={n_ckpt}; "
+          f"elastic rows={n_elastic}; mdtest rows={n_md}; "
+          f"coherence rows={n_coh}")
 
 
 if __name__ == "__main__":

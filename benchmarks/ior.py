@@ -169,6 +169,99 @@ def ior_cached(pool, dfs, iface_name: str, oclass: str, clients: int,
     return row
 
 
+#: readahead-window (pages) x write-back-buffer (MiB) grid for the
+#: transfer-size sweep — the cache-tuning axes of arXiv 2409.18682.
+DEFAULT_WINDOWS = [(4, 4), (8, 16), (16, 64)]
+
+
+def ior_sweep_cell(pool, dfs, iface_name: str, clients: int, ppn: int,
+                   block: int, transfer: int) -> dict:
+    """One sweep cell: write pass (wb_buffer sets flush granularity), a
+    *cold* sequential read after the caches are dropped (fresh mount: the
+    readahead window sets the miss rate), and a warm re-read."""
+    iface = make_interface(iface_name, dfs)
+    handles = {}
+    with pool.sim.phase():
+        for node in range(clients):
+            for p in range(ppn):
+                rank = node * ppn + p
+                handles[rank] = iface.create(f"/ior/s_{rank}", oclass="SX",
+                                             client_node=node, process=rank)
+
+    def sweep(op: str) -> float:
+        with pool.sim.phase() as ph:
+            for node in range(clients):
+                for p in range(ppn):
+                    rank = node * ppn + p
+                    h = handles[rank]
+                    for off in range(0, block, transfer):
+                        if op == "write":
+                            h.write_sized_at(off, transfer)
+                        else:
+                            h.read_sized_at(off, transfer)
+                    if op == "write":
+                        h.fsync()
+        return ph.elapsed
+
+    total = clients * ppn * block
+    t_w = sweep("write")
+    iface.drop_caches()                                    # fresh mount
+    t_cold = sweep("read")
+    t_rr = sweep("read")
+    row = {"write_gib_s": bandwidth(total, t_w),
+           "cold_read_gib_s": bandwidth(total, t_cold),
+           "re_read_gib_s": bandwidth(total, t_rr),
+           "total_gib": total / GIB}
+    if getattr(iface, "cache_mode", "none") != "none":
+        st = iface.cache_stats()
+        row["flushes"] = st.get("flushes", 0)
+        row["readahead_gib"] = round(st.get("readahead_bytes", 0) / GIB, 2)
+    return row
+
+
+def ior_sweep(clients: int, ppn: int, block: int, transfers, windows
+              ) -> list[dict]:
+    """Transfer-size sweep (4 KiB - 4 MiB) x readahead/wb_buffer windows,
+    following the arXiv 2409.18682 curve methodology: each cell runs
+    write / cold-read / re-read through a mount-option-tuned cache
+    (``posix-cached:readahead=R,wb_mib=W``) and is compared against the
+    uncached posix floor at the same transfer size."""
+    rows = []
+    for transfer in transfers:
+        cells = [("posix", "uncached", None, None)]
+        for ra, wb in windows:
+            cells.append((f"posix-cached:readahead={ra},wb_mib={wb}",
+                          f"ra{ra}/wb{wb}", ra, wb))
+        for name, window, ra, wb in cells:
+            pool, dfs = make_world("SX", ppn, clients)
+            res = ior_sweep_cell(pool, dfs, name, clients, ppn, block,
+                                 transfer)
+            rows.append({"mode": "sweep", "oclass": "SX", "interface": name,
+                         "window": window, "readahead_pages": ra,
+                         "wb_mib": wb, "clients": clients, "ppn": ppn,
+                         "block_mib": block // MIB,
+                         "transfer_kib": transfer / KIB, **res})
+    return rows
+
+
+def print_sweep(rows: list[dict]) -> None:
+    srows = [r for r in rows if r.get("mode") == "sweep"]
+    if not srows:
+        return
+    transfers = sorted({r["transfer_kib"] for r in srows})
+    windows = sorted({r["window"] for r in srows})
+    for metric in ("write_gib_s", "cold_read_gib_s", "re_read_gib_s"):
+        print(f"\n=== IOR transfer-size sweep: {metric} (GiB/s) ===")
+        print(f"{'window':12s}" + "".join(f"{t:>9.0f}K" for t in transfers))
+        for w in windows:
+            vals = []
+            for t in transfers:
+                v = [r for r in srows if r["window"] == w
+                     and r["transfer_kib"] == t]
+                vals.append(f"{v[0][metric]:10.1f}" if v else " " * 10)
+            print(f"{w:12s}" + "".join(vals))
+
+
 def run_matrix(mode: str, classes, ifaces, client_counts, ppn: int,
                block: int, transfer: int) -> list[dict]:
     rows = []
@@ -327,8 +420,8 @@ def check_cache_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
 
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["easy", "hard", "cached", "both",
-                                       "all"],
+    ap.add_argument("--mode", choices=["easy", "hard", "cached", "sweep",
+                                       "both", "all"],
                     default="both")
     ap.add_argument("--classes", nargs="+", default=DEFAULT_CLASSES)
     ap.add_argument("--interfaces", nargs="+", default=DEFAULT_IFACES)
@@ -342,6 +435,12 @@ def main(argv=None) -> list[dict]:
     # the caching study is a *small-transfer* workload by design
     ap.add_argument("--cached-block-mib", type=int, default=64)
     ap.add_argument("--cached-transfer-kib", type=int, default=64)
+    # the transfer-size sweep (4 KiB - 4 MiB, arXiv 2409.18682 curves)
+    ap.add_argument("--sweep-transfers-kib", nargs="+", type=float,
+                    default=[4, 16, 64, 256, 1024, 4096])
+    ap.add_argument("--sweep-block-mib", type=int, default=16)
+    ap.add_argument("--sweep-clients", type=int, default=2)
+    ap.add_argument("--sweep-ppn", type=int, default=4)
     ap.add_argument("--baseline", choices=["lustre", "none"],
                     default="lustre")
     ap.add_argument("--out", default=str(ARTIFACTS / "ior_results.json"))
@@ -350,9 +449,18 @@ def main(argv=None) -> list[dict]:
     block = args.block_mib * MIB
     transfer = int(args.transfer_mib * MIB)
     modes = {"both": ["easy", "hard"],
-             "all": ["easy", "hard", "cached"]}.get(args.mode, [args.mode])
+             "all": ["easy", "hard", "cached", "sweep"]}.get(args.mode,
+                                                             [args.mode])
     all_rows = []
     for mode in modes:
+        if mode == "sweep":
+            rows = ior_sweep(args.sweep_clients, args.sweep_ppn,
+                             args.sweep_block_mib * MIB,
+                             [int(t * KIB) for t in args.sweep_transfers_kib],
+                             DEFAULT_WINDOWS)
+            all_rows.extend(rows)
+            print_sweep(rows)
+            continue
         if mode == "cached":
             rows = run_matrix("cached", ["SX"], args.cached_interfaces,
                               args.clients, args.ppn,

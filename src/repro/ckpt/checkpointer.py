@@ -95,7 +95,8 @@ class Checkpointer:
                 self._save_sharded(tx, sdir, leaves, entries)
             manifest = S.manifest_dumps(entries, {
                 "step": step, "layout": self.layout,
-                "oclass": self.oclass, **(extra_meta or {})})
+                "oclass": self.oclass, "n_writers": self.n_writers,
+                **(extra_meta or {})})
             tx.put_kv(self._manifest_kv(sdir), "manifest", "json", manifest)
             if not self.iface.has_namespace:
                 # no directory entry will record this step: index it in the
@@ -174,7 +175,7 @@ class Checkpointer:
         man = self.load_manifest(step)
         items = {}
         for path, entry in man["leaves"].items():
-            raw = self._read_leaf(entry)
+            raw = self._read_leaf(entry, n_writers=man.get("n_writers"))
             if self.verify:
                 got = S.checksum_leaf(raw)
                 if got != entry["csum"]:
@@ -184,33 +185,71 @@ class Checkpointer:
             items[path] = S.bytes_to_leaf(raw, entry)
         return S.unflatten_tree(items, template)
 
-    def restore_slice(self, step: int, path: str, lo: int, hi: int
-                      ) -> np.ndarray:
+    def restore_slice(self, step: int, path: str, lo: int, hi: int,
+                      man: dict | None = None) -> np.ndarray:
         """Elastic restore: read one byte range of one leaf (what a new host
-        with a different shard assignment reads)."""
-        man = self.load_manifest(step)
+        with a different shard assignment reads).  Reader placement maps
+        the range onto the nodes the original writers ran on
+        (``place_reader``), so re-sharding onto a *different* host count
+        still hits the writers' warm caches where ranges overlap.  A host
+        slicing many leaves loads the manifest once and passes it as
+        ``man`` instead of re-reading the KV per slice."""
+        if man is None:
+            man = self.load_manifest(step)
         entry = man["leaves"][path]
-        return self._read_leaf(entry, lo, hi)
+        return self._read_leaf(entry, lo, hi, n_writers=man.get("n_writers"))
 
-    def _read_leaf(self, entry: dict, lo: int = 0,
-                   hi: int | None = None) -> np.ndarray:
-        hi = entry["nbytes"] if hi is None else hi
-        if "file" in entry:   # shared layout
-            h = self.iface.open(entry["file"])
-            return h.read_at(entry["offset"] + lo, hi - lo)
-        out = np.zeros(hi - lo, np.uint8)
-        for w, sh in enumerate(entry["shards"]):
-            s_lo, s_hi = sh["lo"], sh["hi"]
-            a = max(lo, s_lo)
-            b = min(hi, s_hi)
+    def place_reader(self, entry: dict, lo: int, hi: int,
+                     n_writers: int | None = None):
+        """Map one byte range of one leaf onto the client topology the way
+        its *writers* were placed: yields ``(node, proc, a, b)`` sub-ranges
+        of ``[lo, hi)``, each assigned to the node that originally wrote
+        it.  For the sharded layout the shard table gives the writer
+        ranges; for the shared layout they are re-derived from the saving
+        writer count recorded in the manifest.  This is what makes an
+        elastic restore (new host count, new shard assignment) land on
+        warm caches wherever new and old ranges overlap."""
+        nw = n_writers or self.n_writers
+        if "file" in entry:   # shared layout: ranges derived, not stored
+            ranges = S.shard_ranges(entry["nbytes"], nw)
+        else:
+            ranges = [(sh["lo"], sh["hi"]) for sh in entry["shards"]]
+        for w, (s_lo, s_hi) in enumerate(ranges):
+            a, b = max(lo, s_lo), min(hi, s_hi)
             if a >= b:
                 continue
+            node, proc = self.iface.place_writer(w)
+            yield node, proc, a, b
+
+    def _read_leaf(self, entry: dict, lo: int = 0,
+                   hi: int | None = None,
+                   n_writers: int | None = None) -> np.ndarray:
+        hi = entry["nbytes"] if hi is None else hi
+        out = np.zeros(hi - lo, np.uint8)
+        if "file" in entry:   # shared layout
+            # one namespace lookup; every other reader range gets a dup'd
+            # descriptor on its own (possibly warm) node — the
+            # MPI_File_open pattern, no extra metadata traffic
+            h0 = None
+            for node, proc, a, b in self.place_reader(entry, lo, hi,
+                                                      n_writers):
+                if h0 is None:
+                    h0 = self.iface.open(entry["file"], client_node=node,
+                                         process=proc)
+                    h = h0
+                else:
+                    h = self.iface.dup(h0, client_node=node, process=proc)
+                out[a - lo: b - lo] = h.read_at(entry["offset"] + a, b - a)
+            return out
+        by_shard = {(sh["lo"], sh["hi"]): sh for sh in entry["shards"]}
+        for node, proc, a, b in self.place_reader(entry, lo, hi, n_writers):
             # each shard is read where its writer ran: a cached interface
             # restores a just-written checkpoint from the node-local page
             # cache instead of the fabric
-            node, proc = self.iface.place_writer(w)
+            sh = next(s for (s_lo, s_hi), s in by_shard.items()
+                      if s_lo <= a < s_hi)
             h = self.iface.open(sh["file"], client_node=node, process=proc)
-            out[a - lo: b - lo] = h.read_at(a - s_lo, b - a)
+            out[a - lo: b - lo] = h.read_at(a - sh["lo"], b - a)
         return out
 
     # ------------- lifecycle (gc) -------------

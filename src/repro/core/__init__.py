@@ -4,6 +4,8 @@ metadata, epoch transactions, event queues, end-to-end integrity,
 replication + erasure coding) with a calibrated performance model standing in
 for the Optane/fabric hardware the paper benchmarks."""
 from .cache import CacheStats, ClientCache
+from .coherence import (BroadcastPolicy, CoherencePolicy, CoherenceStats,
+                        TimeoutPolicy, make_policy, object_token)
 from .engine import Engine, EngineFailedError, NoSpaceError, NotFoundError
 from .events import Event, EventQueue
 from .iopath import CellPlanner, FlowAccumulator, IOD_BATCH, iod_batch
@@ -19,12 +21,14 @@ from .simnet import HWProfile, IOSim, PROFILES, Topology, bandwidth
 from .transactions import Transaction, TxStateError
 
 __all__ = [
-    "ArrayObject", "CacheStats", "CellPlanner", "ChecksumError",
+    "ArrayObject", "BroadcastPolicy", "CacheStats", "CellPlanner",
+    "ChecksumError", "CoherencePolicy", "CoherenceStats",
     "ClientCache", "Container", "DataLossError", "Engine",
     "EngineFailedError", "Event", "EventQueue", "FlowAccumulator",
     "HWProfile", "IOCtx", "IOD_BATCH", "IOSim", "KVObject", "NoQuorumError",
     "NoSpaceError", "NotFoundError", "NotLeaderError", "ObjectClass",
-    "PROFILES", "Pool", "RaftGroup", "StripeLayout", "Topology",
-    "Transaction", "TxStateError", "bandwidth", "checksum", "get_class",
-    "iod_batch", "jump_hash", "oid_for", "place_object", "verify",
+    "PROFILES", "Pool", "RaftGroup", "StripeLayout", "TimeoutPolicy",
+    "Topology", "Transaction", "TxStateError", "bandwidth", "checksum",
+    "get_class", "iod_batch", "jump_hash", "make_policy", "object_token",
+    "oid_for", "place_object", "verify",
 ]

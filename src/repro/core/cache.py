@@ -15,12 +15,14 @@ round trips.  ``ClientCache`` models one client node's cache stack:
 * **dentry/metadata cache** — ``stat`` / ``open`` results are cached per
   path, skipping the namespace KV lookup and metadata round trip.
 
-Coherence model (matches dfuse's, which is *not* POSIX-coherent across
-nodes): caches attach to their container; a write or punch that reaches the
-object layer broadcasts an invalidation to every attached cache except the
-one that issued it (``Container.notify_write`` / ``notify_punch``), so a
-foreign epoch advance on an object drops that object's cached pages.  Dirty
-write-back data lost to a foreign overwrite is dropped, last-writer-wins.
+Coherence is *pluggable* (``core/coherence.py``): caches attach to their
+container, and every write/punch that reaches the object layer is routed
+through each attached cache's ``CoherencePolicy`` — eager ``broadcast``
+invalidation (foreign epoch advance drops the object's pages,
+last-writer-wins), dfuse-style ``timeout`` leases revalidated against
+engine version tokens, or ``off`` (no cache is created at all).  This
+module owns only the *mechanisms* (entries, intervals, dirty tracking,
+dropping/trimming); the coherence *decisions* live in the policy.
 
 The cache sits *between* the interface layer and the unified I/O pipeline
 (``iopath``): ``FileHandle`` routes through it when the interface was built
@@ -34,6 +36,8 @@ import dataclasses
 from collections import OrderedDict
 
 import numpy as np
+
+from .coherence import BroadcastPolicy, CoherencePolicy, object_token
 
 MIB = 1 << 20
 
@@ -102,7 +106,8 @@ def _total(ivs: list[list[int]]) -> int:
 class _ObjEntry:
     """Cached state for one object: bytes (real path) or extents (sized)."""
 
-    __slots__ = ("obj", "sized", "data", "valid", "dirty", "ctx", "tx")
+    __slots__ = ("obj", "sized", "data", "valid", "dirty", "ctx", "tx",
+                 "validated_at", "version", "stale_since")
 
     def __init__(self, obj, sized: bool) -> None:
         self.obj = obj
@@ -113,6 +118,10 @@ class _ObjEntry:
         self.ctx = None              # last IOCtx, used for flush/evict
         self.tx = None               # open Transaction the dirty data is
                                      # staged under (epoch atomicity)
+        # coherence-policy bookkeeping (timeout leases / version tokens)
+        self.validated_at: float | None = None  # sim time of last validation
+        self.version: int = 0        # engine version token at validation
+        self.stale_since: float | None = None   # first foreign write seen
 
     def ensure(self, end: int) -> None:
         if self.data is not None and self.data.size < end:
@@ -127,7 +136,8 @@ class ClientCache:
     def __init__(self, client_node: int = 0, mode: str = "writeback",
                  page_bytes: int = MIB, readahead_pages: int = 8,
                  wb_buffer_bytes: int = 16 * MIB,
-                 capacity_bytes: int = 1024 * MIB) -> None:
+                 capacity_bytes: int = 1024 * MIB,
+                 policy: CoherencePolicy | None = None) -> None:
         if mode not in CACHE_MODES:
             raise ValueError(f"cache mode {mode!r}; known: {CACHE_MODES}")
         self.client_node = client_node
@@ -136,9 +146,11 @@ class ClientCache:
         self.readahead_pages = readahead_pages
         self.wb_buffer_bytes = wb_buffer_bytes
         self.capacity_bytes = capacity_bytes
+        self.policy = policy if policy is not None else BroadcastPolicy()
         self.stats = CacheStats()
         self._entries: OrderedDict[str, _ObjEntry] = OrderedDict()
         self._dentries: dict[str, dict] = {}
+        self._dentry_meta: dict[str, dict] = {}   # lease/version bookkeeping
 
     # ---------------- internals ----------------
     def _touch(self, obj, sized: bool) -> _ObjEntry | None:
@@ -213,11 +225,14 @@ class ClientCache:
         if e is None:
             return obj.read(offset, size, epoch=self._tx_epoch(tx), ctx=ctx)
         self._retag(e, tx)
-        if _covers(e.valid, offset, offset + size):
+        if (_covers(e.valid, offset, offset + size)
+                and self.policy.validate(self, e, obj, ctx)):
             self.stats.read_hits += 1
             self._record_local(obj, ctx, size, 1)
             return e.data[offset: offset + size].copy()
         self.stats.read_misses += 1
+        e = self._touch(obj, sized=False)   # validate may have dropped it
+        self._retag(e, tx)
         lo, hi = self._ra_window(obj, offset, size)
         raw = obj.read(lo, hi - lo, epoch=self._tx_epoch(tx), ctx=ctx)
         e.ensure(hi)
@@ -230,6 +245,7 @@ class ClientCache:
             e.data[a2:b2] = d[a2 - a: b2 - a]
         _add_interval(e.valid, lo, hi)
         e.ctx = ctx
+        self.policy.note_fill(self, e, obj)
         self.stats.readahead_bytes += (hi - lo) - size
         self._evict_if_needed()
         return e.data[offset: offset + size].copy()
@@ -240,15 +256,19 @@ class ClientCache:
             return obj.read_sized(offset, nbytes, epoch=self._tx_epoch(tx),
                                   ctx=ctx)
         self._retag(e, tx)
-        if _covers(e.valid, offset, offset + nbytes):
+        if (_covers(e.valid, offset, offset + nbytes)
+                and self.policy.validate(self, e, obj, ctx)):
             self.stats.read_hits += 1
             self._record_local(obj, ctx, nbytes, 1)
             return nbytes
         self.stats.read_misses += 1
+        e = self._touch(obj, sized=True)    # validate may have dropped it
+        self._retag(e, tx)
         lo, hi = self._ra_window(obj, offset, nbytes)
         obj.read_sized(lo, hi - lo, epoch=self._tx_epoch(tx), ctx=ctx)
         _add_interval(e.valid, lo, hi)
         e.ctx = ctx
+        self.policy.note_fill(self, e, obj)
         self.stats.readahead_bytes += (hi - lo) - nbytes
         self._evict_if_needed()
         return nbytes
@@ -383,48 +403,63 @@ class ClientCache:
                 self.invalidate(name)
 
     # ---------------- dentry/metadata cache ----------------
-    def lookup_dentry(self, path: str) -> dict | None:
+    def lookup_dentry(self, path: str, process: int = 0) -> dict | None:
         d = self._dentries.get(path)
-        if d is not None:
+        if d is not None and self.policy.validate_dentry(
+                self, path, self._dentry_meta.get(path), process):
             self.stats.dentry_hits += 1
             return dict(d)
         self.stats.dentry_misses += 1
         return None
 
-    def put_dentry(self, path: str, dentry: dict) -> None:
+    def put_dentry(self, path: str, dentry: dict, vobj=None) -> None:
+        """Cache a namespace lookup.  ``vobj`` is the parent directory's KV
+        object — its engine version token is the dentry's revalidation
+        anchor under a timeout policy (piggybacked for free: the lookup
+        that produced the dentry walked that object anyway)."""
         self._dentries[path] = dict(dentry)
+        if vobj is not None:
+            self._dentry_meta[path] = {"vobj": vobj,
+                                       "vtok": object_token(vobj),
+                                       "validated_at":
+                                           vobj.pool.sim.clock.now}
+        else:
+            self._dentry_meta.pop(path, None)
 
     def drop_dentry(self, path: str) -> None:
         self._dentries.pop(path, None)
+        self._dentry_meta.pop(path, None)
 
-    # ---------------- invalidation ----------------
-    def invalidate(self, name: str) -> None:
+    # ---------------- coherence mechanisms (decisions live in .policy) ----
+    def invalidate(self, name: str) -> bool:
         """Drop everything cached for an object (dirty data included),
-        plus the dentry of the path a DFS file object is named after."""
+        plus the dentry of the path a DFS file object is named after.
+        Returns True when an entry was actually dropped."""
         if name.startswith("file:"):
-            self._dentries.pop(name[len("file:"):], None)
+            self.drop_dentry(name[len("file:"):])
         if self._entries.pop(name, None) is not None:
             self.stats.invalidations += 1
+            return True
+        return False
 
-    def on_remote_write(self, name: str, epoch: int) -> None:
-        """A foreign client advanced this object's epoch: our pages are
-        stale.  Last-writer-wins — pending dirty data is dropped too.
-
-        Exception: a write from a *sibling rank of the same open
-        transaction* (shared-file checkpoint: many nodes write disjoint
-        ranges under one epoch).  Those writes are coordinated, so our
-        staged extents are still valid — but clean pages outside them may
-        now be stale, so the entry is trimmed to what we own."""
+    def trim_to_dirty(self, name: str) -> None:
+        """Shrink an entry's valid ranges to the dirty extents it owns —
+        the sibling-rank case (same open transaction): our staged writes
+        stay valid, clean pages outside them may be stale."""
         e = self._entries.get(name)
-        if (e is not None and e.tx is not None
-                and getattr(e.tx, "state", None) == "open"
-                and getattr(e.tx, "epoch", None) == epoch):
+        if e is not None:
             e.valid = [iv[:] for iv in e.dirty]
-            return
-        self.invalidate(name)
 
-    def on_punch(self, name: str) -> None:
-        self.invalidate(name)
+    def drop_all(self) -> None:
+        """Simulate a remount: flush pending write-back data, then forget
+        every entry and dentry.  Unlike ``invalidate``, nothing is counted
+        as a coherence invalidation — the cache is simply gone."""
+        for e in list(self._entries.values()):
+            if e.dirty:
+                self._flush_entry(e)
+        self._entries.clear()
+        self._dentries.clear()
+        self._dentry_meta.clear()
 
     # ---------------- introspection ----------------
     def cached_bytes(self) -> int:

@@ -1,0 +1,307 @@
+"""Pluggable client-cache coherence policies.
+
+The follow-up paper ("Exploring DAOS Interfaces and Performance",
+arXiv 2409.18682) shows that the dfuse caching knob is not a boolean: under
+multi-client *write-sharing* the caching advantage inverts — beyond some
+sharer count, caching OFF wins.  Modeling that requires coherence to be a
+policy axis of the cache tier, not a hardcoded scheme.  Three policies:
+
+* ``broadcast`` — the PR 1/2 behaviour: a write or punch that reaches the
+  object layer eagerly pushes an invalidation into every attached cache
+  except the writer's own.  An idealised oracle (real dfuse cannot do
+  this); delivery is free in simulated time, but every message is counted,
+  which is what makes write-sharing *storms* (writes x sharers messages)
+  visible to the coherence study.
+* ``timeout`` — what dfuse actually does (``attr-timeout`` /
+  ``dentry-timeout``): cached attrs/dentries/pages are served without any
+  coherence traffic until their lease expires; an expired entry is then
+  *revalidated* against an engine-side version token — a cheap round trip
+  (``HWProfile.reval_op_time``, no payload, no media time) that either
+  renews the lease (token unchanged) or drops the entry (token moved:
+  someone else wrote).  Staleness is bounded by the timeout: an entry can
+  serve foreign-stale data only until its last validation + timeout.
+* ``off`` — direct I/O (dfuse caching disabled): the interface layer
+  creates no cache at all, so every op is byte-for-byte the uncached
+  interface.  Handled in ``AccessInterface`` (there is nothing for a
+  policy object to do); :func:`make_policy` returns ``None`` for it.
+
+Decision vs mechanism: the *policies* here decide what a notification or
+an expired lease means; the *mechanisms* (dropping entries, trimming valid
+ranges to owned dirty extents, dentry eviction) stay on ``ClientCache``.
+``Container.notify_write``/``notify_punch`` route every event through the
+attached caches' policies — neither ``Container`` nor ``ClientCache``
+hardcodes an invalidation scheme anymore.
+
+Version-token protocol: every engine keeps a tiny monotonic counter per
+(container, object) — bumped by ``update``/``update_hole``/``punch`` —
+and a read fill piggybacks the current token onto the response for free.
+Revalidation compares the remembered token against ``object_token`` (sum
+over the object's live target engines; counters only grow, so any foreign
+mutation moves the sum).  Transaction semantics are policy-independent:
+the commit barrier (``flush_tx``) and abort (``drop_tx``) act on staged
+cache state directly, and sibling writes of one open transaction are never
+treated as foreign by any policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class CoherenceStats:
+    """Coherence *traffic* and *staleness* accounting for one policy."""
+    invalidations_sent: int = 0    # broadcast messages delivered to caches
+    invalidations_applied: int = 0  # messages that actually dropped an entry
+    revalidations: int = 0         # version-token round trips (data entries)
+    reval_hits: int = 0            # lease renewed, cached data still valid
+    reval_misses: int = 0          # token moved: entry dropped, full re-fetch
+    dentry_revalidations: int = 0  # version-token round trips (dentries)
+    stale_hits: int = 0            # hits served after a foreign write
+    max_staleness_s: float = 0.0   # oldest foreign-stale data ever served
+    expired: int = 0               # entries dropped on expiry w/o a token
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def messages(self) -> int:
+        """Total coherence traffic in messages — the CO2 metric."""
+        return (self.invalidations_sent + self.revalidations
+                + self.dentry_revalidations)
+
+
+def object_token(obj) -> int:
+    """Current engine-side version token of an object: the SUM of the live
+    target engines' per-object counters.  Counters only grow, so any
+    mutation (update / sized update / punch) on any shard moves the sum —
+    a max would miss mutations landing on a different shard than earlier
+    ones (KV dkeys hash across engines).  An engine death shrinks the sum,
+    which fails conservative: the next revalidation drops the entry.  Pure
+    model state — the caller charges the round trip
+    (``IOSim.record_reval``) when the lookup is real traffic and not
+    piggybacked on a fill."""
+    tok = 0
+    cont = obj.container
+    for eid in set(obj._layout().targets):
+        eng = obj.pool.engines[eid]
+        if eng.alive:
+            tok += eng.version_token(cont.label, obj.oid)
+    return tok
+
+
+def _primary_live_engine(obj) -> int | None:
+    for eid in obj._layout().targets:
+        if obj.pool.engines[eid].alive:
+            return eid
+    return None
+
+
+def _tx_sibling(entry, epoch) -> bool:
+    """A write from a sibling rank of the same *open* transaction (shared-
+    file checkpoint: many nodes, disjoint ranges, one epoch) is coordinated,
+    not foreign — no policy treats it as a coherence event."""
+    return (entry is not None and entry.tx is not None
+            and getattr(entry.tx, "state", None) == "open"
+            and getattr(entry.tx, "epoch", None) == epoch)
+
+
+class CoherencePolicy:
+    """Decision surface between ``Container`` notifications and one
+    ``ClientCache``'s read path.  One instance per cache (policies keep
+    per-cache staleness bookkeeping); stats are aggregated per interface
+    by ``AccessInterface.coherence_stats``."""
+
+    kind: str = "?"
+
+    def __init__(self) -> None:
+        self.stats = CoherenceStats()
+
+    # ---- container-side notifications ----
+    def remote_write(self, cache, name: str, epoch: int, origin,
+                     now: float) -> None:
+        raise NotImplementedError
+
+    def punch(self, cache, name: str, origin, now: float) -> None:
+        raise NotImplementedError
+
+    # ---- client-side validation (read path) ----
+    def validate(self, cache, entry, obj, ctx) -> bool:
+        """May a covering cache entry be served as a hit?  Returning False
+        means the caller treats the access as a miss (the policy may have
+        dropped the entry)."""
+        return True
+
+    def validate_dentry(self, cache, path: str, meta, process: int) -> bool:
+        return True
+
+    # ---- fill bookkeeping (no traffic: token piggybacks on the fetch) ----
+    def note_fill(self, cache, entry, obj) -> None:
+        pass
+
+
+class BroadcastPolicy(CoherencePolicy):
+    """Eager push invalidation — flow-equivalent to the pre-refactor
+    hardcoded scheme: foreign epoch advance drops the object's cached pages
+    (last-writer-wins, pending dirty data included), sibling ranks of one
+    open transaction only get trimmed to the ranges they own, punch drops
+    everywhere.  Delivery costs no simulated time (an oracle upper bound on
+    any real broadcast protocol) but every delivered message is counted."""
+
+    kind = "broadcast"
+
+    def remote_write(self, cache, name, epoch, origin, now) -> None:
+        if origin is cache:
+            return
+        self.stats.invalidations_sent += 1
+        entry = cache._entries.get(name)
+        if _tx_sibling(entry, epoch):
+            cache.trim_to_dirty(name)
+            return
+        if cache.invalidate(name):
+            self.stats.invalidations_applied += 1
+
+    def punch(self, cache, name, origin, now) -> None:
+        self.stats.invalidations_sent += 1
+        if cache.invalidate(name):
+            self.stats.invalidations_applied += 1
+
+
+class TimeoutPolicy(CoherencePolicy):
+    """dfuse-style lease + revalidation.  No traffic on writes; cached
+    state is served until ``attr_timeout`` (data/attrs) or
+    ``dentry_timeout`` (namespace) after its last validation, then
+    revalidated against the engine-side version token.  Staleness served is
+    bounded by the timeout: a lease is only (re)granted when the token
+    proves no foreign write preceded it."""
+
+    kind = "timeout"
+
+    def __init__(self, attr_timeout: float = 1.0,
+                 dentry_timeout: float | None = None) -> None:
+        super().__init__()
+        self.attr_timeout = float(attr_timeout)
+        self.dentry_timeout = (self.attr_timeout if dentry_timeout is None
+                               else float(dentry_timeout))
+
+    # ---- notifications: bookkeeping only, no invalidation, no traffic ----
+    def remote_write(self, cache, name, epoch, origin, now) -> None:
+        entry = cache._entries.get(name)
+        if origin is cache:
+            # our own flush landed: renew the remembered version so expiry
+            # revalidation doesn't treat our own write as foreign — but
+            # ONLY while no foreign write is pending.  Adopting the global
+            # token over a stale-marked entry would swallow the foreign
+            # bump and let revalidation renew the lease forever,
+            # unbounding staleness.
+            if entry is not None and entry.stale_since is None:
+                entry.version = object_token(entry.obj)
+            return
+        if _tx_sibling(entry, epoch):
+            return
+        if entry is not None and entry.stale_since is None:
+            entry.stale_since = now
+
+    def punch(self, cache, name, origin, now) -> None:
+        # punches are destructive and rare: propagate them eagerly even
+        # under timeout coherence (serving pages of a deleted object for a
+        # lease — including to the client that deleted it — buys nothing)
+        cache.invalidate(name)
+
+    # ---- read-path validation ----
+    def validate(self, cache, entry, obj, ctx) -> bool:
+        sim = obj.pool.sim
+        now = sim.clock.now
+        if entry.validated_at is None:       # first touch (write-created)
+            if entry.stale_since is None:
+                entry.validated_at = now
+                entry.version = object_token(obj)
+                return True
+            # never validated AND already foreign-stale: no lease was ever
+            # granted, so there is nothing to serve under — fall through
+            # and revalidate right now (the 0-token always mismatches:
+            # drop, honest miss, last-writer-wins)
+        elif now - entry.validated_at < self.attr_timeout:
+            if entry.stale_since is not None:
+                self.stats.stale_hits += 1
+                self.stats.max_staleness_s = max(self.stats.max_staleness_s,
+                                                 now - entry.stale_since)
+            return True
+        # lease expired: revalidate against the engine-side version token
+        eng = _primary_live_engine(obj)
+        self.stats.revalidations += 1
+        if eng is not None:
+            sim.record_reval(client_node=cache.client_node,
+                             process=ctx.process, engine=eng)
+        if object_token(obj) == entry.version:
+            entry.validated_at = now
+            entry.stale_since = None
+            self.stats.reval_hits += 1
+            return True
+        self.stats.reval_misses += 1
+        cache.invalidate(entry.obj.name)
+        return False
+
+    def validate_dentry(self, cache, path, meta, process) -> bool:
+        if meta is None or meta.get("vobj") is None:
+            return True                      # no token provider: no lease
+        vobj = meta["vobj"]
+        sim = vobj.pool.sim
+        now = sim.clock.now
+        if now - meta["validated_at"] < self.dentry_timeout:
+            return True
+        eng = _primary_live_engine(vobj)
+        self.stats.dentry_revalidations += 1
+        if eng is not None:
+            sim.record_reval(client_node=cache.client_node, process=process,
+                             engine=eng)
+        # the token of the *parent directory* KV object: any entry
+        # create/unlink in that directory moves it (conservatively dropping
+        # sibling dentries too — the weak-consistency tradeoff dfuse makes)
+        if object_token(vobj) == meta["vtok"]:
+            meta["validated_at"] = now
+            return True
+        cache.drop_dentry(path)
+        return False
+
+    def note_fill(self, cache, entry, obj) -> None:
+        # a fill fetched current bytes; the token piggybacks for free.  The
+        # lease timestamp is only set on FIRST validation — a partial
+        # refill must not extend the serving window of older stale ranges
+        # in the same entry, or staleness would escape the timeout bound.
+        if entry.validated_at is None:
+            entry.validated_at = obj.pool.sim.clock.now
+            entry.version = object_token(obj)
+            entry.stale_since = None
+
+
+#: Mount-option surface: policy name -> constructor kwargs accepted.
+POLICY_KINDS = ("broadcast", "timeout", "off")
+
+
+def normalize_coherence(spec) -> dict:
+    """Normalise a coherence spec (None | str | dict) into a plain dict
+    ``{"policy": ..., ...kwargs}``.  ``None`` means the default
+    (broadcast, the pre-refactor behaviour)."""
+    if spec is None:
+        return {"policy": "broadcast"}
+    if isinstance(spec, str):
+        spec = {"policy": spec}
+    out = dict(spec)
+    policy = out.setdefault("policy", "broadcast")
+    if policy not in POLICY_KINDS:
+        raise ValueError(f"coherence policy {policy!r}; known: {POLICY_KINDS}")
+    return out
+
+
+def make_policy(spec) -> CoherencePolicy | None:
+    """Build a fresh per-cache policy instance from a spec.  Returns None
+    for ``off`` — the interface then attaches no cache at all (direct
+    I/O)."""
+    spec = normalize_coherence(spec)
+    kind = spec["policy"]
+    if kind == "off":
+        return None
+    if kind == "timeout":
+        return TimeoutPolicy(
+            attr_timeout=spec.get("attr_timeout", spec.get("timeout", 1.0)),
+            dentry_timeout=spec.get("dentry_timeout"))
+    return BroadcastPolicy()

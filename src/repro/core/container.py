@@ -81,8 +81,10 @@ class Container:
         return snap
 
     # ------------- client-cache coherence -------------
-    # dfuse-style caches register here; writes/punches that reach the object
-    # layer broadcast invalidations to every cache except the writer's own.
+    # dfuse-style caches register here; writes/punches that reach the
+    # object layer are routed through each attached cache's coherence
+    # policy (core/coherence.py) — the container fans events out but makes
+    # no invalidation decision itself.
     def attach_cache(self, cache) -> None:
         if cache not in self._caches:
             self._caches.append(cache)
@@ -92,13 +94,18 @@ class Container:
             self._caches.remove(cache)
 
     def notify_write(self, name: str, epoch: int, origin=None) -> None:
-        for c in self._caches:
-            if c is not origin:
-                c.on_remote_write(name, epoch)
+        if not self._caches:
+            return
+        now = self.pool.sim.clock.now
+        for c in list(self._caches):
+            c.policy.remote_write(c, name, epoch, origin, now)
 
-    def notify_punch(self, name: str) -> None:
-        for c in self._caches:
-            c.on_punch(name)
+    def notify_punch(self, name: str, origin=None) -> None:
+        if not self._caches:
+            return
+        now = self.pool.sim.clock.now
+        for c in list(self._caches):
+            c.policy.punch(c, name, origin, now)
 
     # ------------- objects -------------
     def _resolve_class(self, oclass: str | _layout.ObjectClass | None

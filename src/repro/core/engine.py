@@ -59,6 +59,12 @@ class Engine:
         self.used = 0
         self.flushed_epoch = 0   # client write-back durability watermark
         self._store: dict[Key, dict[int, Record]] = {}
+        # cheap per-object version tokens for cache revalidation: a
+        # monotonic counter per (container, object), bumped by every
+        # mutation.  A timeout-coherence client compares the token it
+        # remembered at fill time against the current one — one tiny RPC
+        # (HWProfile.reval_op_time) instead of a full re-fetch.
+        self._obj_tokens: dict[tuple, int] = {}
 
     # -- health -------------------------------------------------------------
     def fail(self) -> None:
@@ -70,6 +76,18 @@ class Engine:
     def _check(self) -> None:
         if not self.alive:
             raise EngineFailedError(f"engine {self.id} is down")
+
+    # -- version tokens (cache revalidation) ----------------------------------
+    def _bump_token(self, key: Key) -> None:
+        k = (key[0], key[1])
+        self._obj_tokens[k] = self._obj_tokens.get(k, 0) + 1
+
+    def version_token(self, cont_label, oid) -> int:
+        """Current version token of one object on this engine (0 if the
+        object was never touched here).  Counters only grow, so equality
+        with a remembered token proves no intervening mutation."""
+        self._check()
+        return self._obj_tokens.get((cont_label, oid), 0)
 
     # -- data path ------------------------------------------------------------
     @staticmethod
@@ -96,6 +114,7 @@ class Engine:
         versions[epoch] = Record(epoch, len(raw), csum,
                                  raw if mat else None)
         self.used += len(raw)
+        self._bump_token(key)
         return csum
 
     def update_hole(self, key: Key, length: int, epoch: int) -> None:
@@ -112,6 +131,7 @@ class Engine:
                 f"engine {self.id}: {self.used + length} > {self.capacity}")
         versions[epoch] = Record(epoch, length, 0, None)
         self.used += length
+        self._bump_token(key)
 
     def fetch(self, key: Key, max_epoch: float = float("inf"),
               verify: bool = True) -> Record:
@@ -142,11 +162,13 @@ class Engine:
         if epoch is None:
             self.used -= sum(r.length for r in versions.values())
             del self._store[key]
+            self._bump_token(key)
         elif epoch in versions:
             self.used -= versions[epoch].length
             del versions[epoch]
             if not versions:
                 del self._store[key]
+            self._bump_token(key)
 
     def punch_epoch(self, epoch: int) -> int:
         """Drop every record staged at exactly `epoch` (tx abort). Returns

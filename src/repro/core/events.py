@@ -42,9 +42,15 @@ class EventQueue:
         return ev
 
     def poll(self) -> list[Event]:
-        """Return (and retire) completed events."""
-        done = [e for e in self._inflight if e.test()]
-        self._inflight = [e for e in self._inflight if not e.test()]
+        """Return (and retire) completed events.  ``test()`` is snapshotted
+        exactly once per event: probing twice would let an event complete
+        between the probes and vanish from both the returned and retained
+        lists."""
+        done: list[Event] = []
+        pending: list[Event] = []
+        for e in self._inflight:
+            (done if e.test() else pending).append(e)
+        self._inflight = pending
         return done
 
     def drain(self, timeout: float | None = None) -> None:

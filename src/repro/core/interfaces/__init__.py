@@ -1,30 +1,98 @@
-"""The paper's DAOS access mechanisms, as swappable interfaces."""
+"""The paper's DAOS access mechanisms, as swappable interfaces.
+
+``make_interface`` accepts dfuse-style *mount options* appended to the
+interface name after a colon, ``name:key=val,key=val`` — the knobs the
+real ``dfuse --enable-caching`` / ``attr-timeout`` flags expose:
+
+=================  =====================================================
+``coherence=``     cache-coherence policy: ``broadcast`` (eager push
+                   invalidation, the default), ``timeout`` (dfuse-style
+                   lease + version-token revalidation) or ``off``
+                   (direct I/O: no cache is created at all)
+``timeout=``       shorthand: selects ``coherence=timeout`` and sets
+                   both the attr and dentry timeouts (seconds)
+``attr_timeout=``  data/attr lease length (implies ``coherence=timeout``)
+``dentry_timeout=`` namespace lease length (implies ``coherence=timeout``)
+``readahead=``     readahead window, in pages (default 8)
+``wb_mib=``        write-back buffer watermark, MiB (default 16)
+``page_kib=``      cache page size, KiB (default 1024)
+=================  =====================================================
+
+e.g. ``posix-cached:timeout=1.0`` is the dfuse-caching-enabled POSIX
+mount with one-second attr/dentry revalidation;
+``posix-cached:coherence=off`` is byte-for-byte plain ``posix``.
+"""
 from .base import (COST_PROFILES, AccessInterface, CostProfile, FileHandle)
 from .dfs import DFS, DFSError, DFSInterface, ArrayInterface
 from .hdf5 import HDF5CollectiveInterface, HDF5Interface
 from .mpiio import MPIIOInterface
 from .posix import POSIXInterface
 
+MIB = 1 << 20
+KIB = 1 << 10
+
+
+def parse_mount_options(optstr: str) -> dict:
+    """``"timeout=1.0,readahead=4"`` -> constructor kwargs
+    (``coherence=``/``cache_opts=``) for an AccessInterface."""
+    coherence: dict = {}
+    cache_opts: dict = {}
+    for part in filter(None, optstr.split(",")):
+        key, sep, val = part.partition("=")
+        key = key.strip()
+        if not sep:
+            raise ValueError(f"mount option {part!r}: expected key=value")
+        if key == "coherence":
+            coherence["policy"] = val
+        elif key == "timeout":
+            coherence.setdefault("policy", "timeout")
+            coherence["attr_timeout"] = float(val)
+            coherence["dentry_timeout"] = float(val)
+        elif key in ("attr_timeout", "dentry_timeout"):
+            coherence.setdefault("policy", "timeout")
+            coherence[key] = float(val)
+        elif key == "readahead":
+            cache_opts["readahead_pages"] = int(val)
+        elif key == "wb_mib":
+            cache_opts["wb_buffer_bytes"] = int(float(val) * MIB)
+        elif key == "page_kib":
+            cache_opts["page_bytes"] = int(float(val) * KIB)
+        else:
+            raise ValueError(f"unknown mount option {key!r}")
+    kw: dict = {}
+    if coherence:
+        kw["coherence"] = coherence
+    if cache_opts:
+        kw["cache_opts"] = cache_opts
+    return kw
+
 
 def make_interface(name: str, dfs: DFS) -> AccessInterface:
-    """Factory keyed by the names the IOR harness / configs use."""
+    """Factory keyed by the names the IOR harness / configs use, with
+    optional ``:key=val,...`` mount options (see module docstring)."""
+    base, _, optstr = name.partition(":")
+    kw = parse_mount_options(optstr) if optstr else {}
     table = {
-        "dfs": lambda: DFSInterface(dfs),
-        "dfs-cached": lambda: DFSInterface(dfs, cache_mode="writeback"),
-        "daos-array": lambda: ArrayInterface(dfs),
-        "posix": lambda: POSIXInterface(dfs),
-        "posix-ioil": lambda: POSIXInterface(dfs, intercept=True),
-        "posix-cached": lambda: POSIXInterface(dfs, cache_mode="writeback"),
-        "posix-readahead": lambda: POSIXInterface(dfs,
-                                                  cache_mode="readahead"),
-        "mpiio": lambda: MPIIOInterface(dfs),
-        "hdf5": lambda: HDF5Interface(dfs),
-        "hdf5-coll": lambda: HDF5CollectiveInterface(dfs),
+        "dfs": lambda **kw: DFSInterface(dfs, **kw),
+        "dfs-cached": lambda **kw: DFSInterface(dfs, cache_mode="writeback",
+                                                **kw),
+        "daos-array": lambda **kw: ArrayInterface(dfs, **kw),
+        "posix": lambda **kw: POSIXInterface(dfs, **kw),
+        "posix-ioil": lambda **kw: POSIXInterface(dfs, intercept=True, **kw),
+        "posix-cached": lambda **kw: POSIXInterface(dfs,
+                                                    cache_mode="writeback",
+                                                    **kw),
+        "posix-readahead": lambda **kw: POSIXInterface(
+            dfs, cache_mode="readahead", **kw),
+        "mpiio": lambda **kw: MPIIOInterface(dfs, **kw),
+        "hdf5": lambda **kw: HDF5Interface(dfs, **kw),
+        "hdf5-coll": lambda **kw: HDF5CollectiveInterface(dfs, **kw),
     }
     try:
-        return table[name]()
+        factory = table[base]
     except KeyError:
-        raise KeyError(f"unknown interface {name!r}; known: {sorted(table)}")
+        raise KeyError(f"unknown interface {base!r}; known: {sorted(table)}")
+    return factory(**kw)
 
 
 INTERFACE_NAMES = ["dfs", "dfs-cached", "daos-array", "posix", "posix-ioil",
@@ -34,4 +102,4 @@ INTERFACE_NAMES = ["dfs", "dfs-cached", "daos-array", "posix", "posix-ioil",
 __all__ = ["AccessInterface", "ArrayInterface", "COST_PROFILES",
            "CostProfile", "DFS", "DFSError", "DFSInterface", "FileHandle",
            "HDF5Interface", "INTERFACE_NAMES", "MPIIOInterface",
-           "POSIXInterface", "make_interface"]
+           "POSIXInterface", "make_interface", "parse_mount_options"]

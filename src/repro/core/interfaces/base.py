@@ -19,6 +19,7 @@ import dataclasses
 import numpy as np
 
 from ..cache import ClientCache
+from ..coherence import make_policy, normalize_coherence
 from ..object import ArrayObject, IOCtx
 
 # Interface-layer transfer granularities (shared by the cost table and the
@@ -176,9 +177,17 @@ class AccessInterface(abc.ABC):
     profile_name: str = "dfs"   # row of COST_PROFILES this interface uses
     has_namespace: bool = True  # False: raw objects, mkdir/readdir are void
 
-    def __init__(self, dfs, cache_mode: str = "none") -> None:
+    def __init__(self, dfs, cache_mode: str = "none", coherence=None,
+                 cache_opts: dict | None = None) -> None:
         self.dfs = dfs
+        # coherence: None/str/dict spec (see core.coherence) selected by
+        # mount options; "off" means direct I/O — no cache is ever created,
+        # so the interface is byte-for-byte its uncached self.
+        self.coherence = normalize_coherence(coherence)
+        if self.coherence["policy"] == "off":
+            cache_mode = "none"
         self.cache_mode = cache_mode
+        self.cache_opts = dict(cache_opts or {})
         self._caches: dict[int, ClientCache] = {}
 
     # ---- cost model --------------------------------------------------------
@@ -198,7 +207,9 @@ class AccessInterface(abc.ABC):
             return None
         cache = self._caches.get(client_node)
         if cache is None:
-            cache = ClientCache(client_node=client_node, mode=self.cache_mode)
+            cache = ClientCache(client_node=client_node, mode=self.cache_mode,
+                                policy=make_policy(self.coherence),
+                                **self.cache_opts)
             self.dfs.cont.attach_cache(cache)
             self._caches[client_node] = cache
         return cache
@@ -211,9 +222,29 @@ class AccessInterface(abc.ABC):
                 total[k] = total.get(k, 0) + v
         return total
 
+    def coherence_stats(self) -> dict:
+        """Aggregate coherence traffic/staleness stats across this
+        interface's caches (one policy instance per cache)."""
+        total: dict = {"policy": self.coherence["policy"]}
+        for cache in self._caches.values():
+            for k, v in cache.policy.stats.as_dict().items():
+                if k == "max_staleness_s":
+                    total[k] = max(total.get(k, 0.0), v)
+                else:
+                    total[k] = total.get(k, 0) + v
+        total["messages"] = sum(
+            c.policy.stats.messages() for c in self._caches.values())
+        return total
+
     def flush_caches(self) -> None:
         for cache in self._caches.values():
             cache.flush()
+
+    def drop_caches(self) -> None:
+        """Simulate remounting every client node: all cached state (pages,
+        dentries) is forgotten; pending write-back data is flushed first."""
+        for cache in self._caches.values():
+            cache.drop_all()
 
     def _handle(self, obj: ArrayObject, ctx: IOCtx,
                 client_node: int, tx=None) -> FileHandle:
@@ -233,6 +264,15 @@ class AccessInterface(abc.ABC):
         topo = self.dfs.cont.pool.sim.topo
         return rank % topo.n_client_nodes, rank
 
+    def _dentry_vobj(self, path: str):
+        """The parent directory's KV object — the version-token anchor a
+        timeout policy revalidates this path's dentry against."""
+        try:
+            parent, _ = self.dfs._split(path)
+            return self.dfs._dir_kv(parent)
+        except Exception:
+            return None
+
     def _dentry_hit_cost(self, client_node: int, process: int) -> None:
         """A dentry-cache hit is not free: one page-cache/syscall lookup on
         the caller's serial chain (no fabric, no metadata service)."""
@@ -248,7 +288,8 @@ class AccessInterface(abc.ABC):
         cache = self.cache_for(client_node)
         if cache is not None:
             ocname = obj.oclass.name
-            cache.put_dentry(path, {"type": "file", "oclass": ocname})
+            cache.put_dentry(path, {"type": "file", "oclass": ocname},
+                             vobj=self._dentry_vobj(path))
         return self._handle(obj, ctx, client_node, tx=tx)
 
     def open(self, path: str, client_node: int = 0,
@@ -256,7 +297,7 @@ class AccessInterface(abc.ABC):
         ctx = self.make_ctx(client_node, process)
         cache = self.cache_for(client_node)
         if cache is not None:
-            d = cache.lookup_dentry(path)
+            d = cache.lookup_dentry(path, process=process)
             if d is not None and d.get("type") == "file":
                 # dentry hit: skip the namespace KV walk entirely
                 self._dentry_hit_cost(client_node, process)
@@ -266,7 +307,8 @@ class AccessInterface(abc.ABC):
         obj = self.dfs.open_file(path, ctx=ctx)
         if cache is not None:
             cache.put_dentry(path, {"type": "file",
-                                    "oclass": obj.oclass.name})
+                                    "oclass": obj.oclass.name},
+                             vobj=self._dentry_vobj(path))
         return self._handle(obj, ctx, client_node, tx=tx)
 
     def dup(self, handle: FileHandle, client_node: int = 0, process: int = 0,
@@ -290,7 +332,7 @@ class AccessInterface(abc.ABC):
     def stat(self, path: str, client_node: int = 0, process: int = 0) -> dict:
         cache = self.cache_for(client_node)
         if cache is not None:
-            d = cache.lookup_dentry(path)
+            d = cache.lookup_dentry(path, process=process)
             if d is not None:
                 self._dentry_hit_cost(client_node, process)
                 if d.get("type") == "file":
@@ -301,7 +343,8 @@ class AccessInterface(abc.ABC):
         d = self.dfs.stat(path, ctx=self.make_ctx(client_node, process))
         if cache is not None:
             cache.put_dentry(path, {k: v for k, v in d.items()
-                                    if k != "size"})
+                                    if k != "size"},
+                             vobj=self._dentry_vobj(path))
         return d
 
     def mkdir(self, path: str) -> None:

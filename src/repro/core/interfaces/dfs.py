@@ -130,8 +130,8 @@ class DFSInterface(AccessInterface):
     name = "dfs"
     profile_name = "dfs"
 
-    def __init__(self, dfs, cache_mode: str = "none") -> None:
-        super().__init__(dfs, cache_mode=cache_mode)
+    def __init__(self, dfs, cache_mode: str = "none", **kw) -> None:
+        super().__init__(dfs, cache_mode=cache_mode, **kw)
         if cache_mode != "none":
             self.name += ("-cached" if cache_mode == "writeback"
                           else f"-{cache_mode}")

@@ -25,8 +25,8 @@ class HDF5Interface(AccessInterface):
     profile_name = "hdf5"
 
     def __init__(self, dfs, chunk_bytes: int = H5_CHUNK,
-                 collective: bool = False) -> None:
-        super().__init__(dfs)
+                 collective: bool = False, **kw) -> None:
+        super().__init__(dfs, **kw)
         self.chunk_bytes = chunk_bytes
         self.collective = collective
         if collective:

@@ -25,8 +25,8 @@ class MPIIOInterface(AccessInterface):
     profile_name = "mpiio"
 
     def __init__(self, dfs, cb_buffer_size: int = CB_BUFFER_SIZE,
-                 via_fuse: bool = True) -> None:
-        super().__init__(dfs)
+                 via_fuse: bool = True, **kw) -> None:
+        super().__init__(dfs, **kw)
         self.cb_buffer_size = cb_buffer_size
         if not via_fuse:
             self.profile_name = "mpiio-direct"

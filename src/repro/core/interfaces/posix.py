@@ -27,8 +27,8 @@ class POSIXInterface(AccessInterface):
     profile_name = "posix"
 
     def __init__(self, dfs, intercept: bool = False,
-                 cache_mode: str = "none") -> None:
-        super().__init__(dfs, cache_mode=cache_mode)
+                 cache_mode: str = "none", **kw) -> None:
+        super().__init__(dfs, cache_mode=cache_mode, **kw)
         self.intercept = intercept
         if intercept:
             self.name = "posix-ioil"

@@ -62,6 +62,11 @@ class HWProfile:
     # cheap syscall per op on the caller's serial chain.
     cache_bw: float = 20e9              # B/s page-cache copy per client node
     cache_op_time: float = 2e-6         # syscall + page-cache lookup per op
+    # Coherence revalidation: a timeout-expired cache entry is revalidated
+    # against an engine-side version token — one tiny RPC (no payload, no
+    # media access), an order of magnitude cheaper than re-fetching the
+    # readahead window the entry caches.
+    reval_op_time: float = 2e-6         # engine service CPU per token lookup
     # Fan-in/fan-out (incast) efficiency: an endpoint streaming to/from k
     # concurrent peers loses NIC efficiency to flow interleaving — the
     # effect that makes wide striping (SX) *worse* than S2 for reads
@@ -155,6 +160,9 @@ class PhaseRecorder:
         # cache-local flows: (client_node, process, nbytes, nops) served
         # from the node's page cache — client memory only, no fabric/engine
         self.local_flows: list[tuple[int, int, int, int]] = []
+        # revalidation round trips: (client_node, process, engine, nops) —
+        # version-token lookups, charged per-op (no bytes, no media time)
+        self.reval_flows: list[tuple[int, int, int, int]] = []
         self.md_ops: int = 0         # metadata service round-trips (serial-ish)
         self.elapsed: float | None = None
 
@@ -181,11 +189,19 @@ class PhaseRecorder:
         self.local_flows.append((client_node, process, int(nbytes),
                                  int(nops)))
 
+    def record_reval(self, *, client_node: int, process: int, engine: int,
+                     nops: int = 1) -> None:
+        """A revalidation round trip: client -> engine version-token lookup.
+        Distinct from a full re-fetch: per-op latency only, no payload."""
+        self.reval_flows.append((client_node, process, int(engine),
+                                 int(nops)))
+
     # -- solver ------------------------------------------------------------
     def solve(self) -> float:
         hw = self.sim.hw
         topo = self.sim.topo
-        if not self.flows and not self.md_ops and not self.local_flows:
+        if (not self.flows and not self.md_ops and not self.local_flows
+                and not self.reval_flows):
             return 0.0
 
         eng_media = defaultdict(float)      # engine -> media seconds
@@ -233,8 +249,15 @@ class PhaseRecorder:
             cache_node[cn] += nb
             proc_chain[p] += ops * hw.cache_op_time
 
+        # revalidation round trips: serialized on the caller (sync lookup),
+        # tiny service slice on the engine, no bytes and no media time
+        for cn, p, eng, ops in self.reval_flows:
+            proc_chain[p] += ops * (hw.client_op_time + 2 * hw.fabric_lat
+                                    + hw.reval_op_time)
+            eng_rpc[eng] += ops * hw.reval_op_time / hw.engine_rpc_threads
+
         t = 0.0
-        for e in eng_media:
+        for e in set(eng_media) | set(eng_rpc):
             t = max(t, eng_media[e] + eng_rpc[e])
         any_dir = next(iter(cli_dir.values()), "read")
         for n, b in srv_nic.items():
@@ -325,6 +348,12 @@ class IOSim:
         """Record a cache-local (client-memory) flow into the active phase."""
         if self._active is not None:
             self._active.record_local(**kw)
+
+    def record_reval(self, **kw) -> None:
+        """Record a coherence revalidation round trip into the active
+        phase."""
+        if self._active is not None:
+            self._active.record_reval(**kw)
 
 
 def bandwidth(nbytes: int, seconds: float) -> float:

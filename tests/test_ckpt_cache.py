@@ -82,8 +82,12 @@ def _seed_save(dfs, iface, oclass, layout, n_writers, base, step, tree):
                 shards.append({"file": fname, "lo": lo, "hi": hi})
             entries[path] = {**meta, "csum": csum, "shards": shards,
                              "nbytes": int(raw.size)}
+    # manifest meta mirrors the current schema (n_writers rides along for
+    # elastic restore) so the flow comparison pins the *pipeline*, not the
+    # manifest's size
     manifest = S.manifest_dumps(entries, {"step": step, "layout": layout,
-                                          "oclass": oclass})
+                                          "oclass": oclass,
+                                          "n_writers": n_writers})
     mobj = cont.open_kv(f"manifest:{sdir}", oclass="RP_3GX")
     tx.put_kv(mobj, "manifest", "json", manifest)
     tx.commit()

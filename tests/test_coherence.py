@@ -1,0 +1,336 @@
+"""The pluggable cache-coherence layer (core/coherence.py).
+
+Pinned here:
+
+* mount-option parsing (``posix-cached:timeout=1.0`` style) selects and
+  parameterises the policy;
+* ``off`` is byte-for-byte the uncached interface (identical flows and
+  phase times — direct I/O, no cache object at all);
+* ``broadcast`` is flow-equivalent to the default (it *is* the default:
+  the pre-refactor scheme extracted into a policy);
+* ``timeout`` serves bounded-stale data during the lease, then
+  revalidates against the engine-side version token — a cheap op, not a
+  re-fetch — with staleness never exceeding the timeout;
+* transaction semantics (commit barrier, abort drop) hold under every
+  policy.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Pool, Topology
+from repro.core.coherence import (BroadcastPolicy, TimeoutPolicy,
+                                  make_policy, normalize_coherence,
+                                  object_token)
+from repro.core.interfaces import DFS, make_interface, parse_mount_options
+
+
+@pytest.fixture()
+def world():
+    pool = Pool(Topology(), materialize=True)
+    cont = pool.create_container("c", oclass="S2")
+    dfs = DFS(cont)
+    dfs.mkdir("/d")
+    return pool, dfs
+
+
+# ---------------- mount options / policy construction ----------------
+def test_mount_option_parsing(world):
+    pool, dfs = world
+    kw = parse_mount_options("timeout=0.5,readahead=4,wb_mib=8")
+    assert kw["coherence"] == {"policy": "timeout", "attr_timeout": 0.5,
+                               "dentry_timeout": 0.5}
+    assert kw["cache_opts"] == {"readahead_pages": 4,
+                                "wb_buffer_bytes": 8 << 20}
+    iface = make_interface("posix-cached:timeout=0.5,readahead=4", dfs)
+    cache = iface.cache_for(0)
+    assert isinstance(cache.policy, TimeoutPolicy)
+    assert cache.policy.attr_timeout == 0.5
+    assert cache.readahead_pages == 4
+    with pytest.raises(ValueError):
+        parse_mount_options("bogus_knob=1")
+    with pytest.raises(ValueError):
+        make_interface("posix-cached:coherence=bogus", dfs)
+    with pytest.raises(KeyError):
+        make_interface("not-an-interface:timeout=1", dfs)
+
+
+def test_policy_factory():
+    assert isinstance(make_policy(None), BroadcastPolicy)
+    assert isinstance(make_policy("broadcast"), BroadcastPolicy)
+    assert make_policy("off") is None
+    p = make_policy({"policy": "timeout", "attr_timeout": 2.0})
+    assert isinstance(p, TimeoutPolicy) and p.attr_timeout == 2.0
+    assert p.dentry_timeout == 2.0          # defaults to attr_timeout
+    assert normalize_coherence(None) == {"policy": "broadcast"}
+
+
+# ---------------- off == uncached, byte for byte ----------------
+def test_off_matches_uncached_byte_for_byte():
+    def run(name):
+        pool = Pool(Topology(n_client_nodes=2), materialize=True)
+        cont = pool.create_container("c", oclass="S2")
+        dfs = DFS(cont)
+        dfs.mkdir("/d")
+        iface = make_interface(name, dfs)
+        payload = (np.arange(256 << 10) % 251).astype(np.uint8)
+        with pool.sim.phase() as wph:
+            h = iface.create("/d/f", client_node=0, process=0)
+            h.write_at(0, payload)
+            h.fsync()
+        with pool.sim.phase() as rph:
+            h2 = iface.open("/d/f", client_node=1, process=9)
+            got = h2.read_at(0, payload.size)
+        sig = lambda ph: sorted(  # noqa: E731
+            (f.engine, f.direction, f.nbytes, f.nops, f.client_node,
+             f.process, f.sync, f.via_fuse) for f in ph.flows)
+        return (sig(wph), sig(rph), wph.elapsed, rph.elapsed, bytes(got),
+                iface)
+
+    base = run("posix")
+    off = run("posix-cached:coherence=off")
+    assert base[:5] == off[:5]
+    assert off[5]._caches == {}              # no cache was ever created
+    assert off[5].cache_mode == "none"
+
+
+# ---------------- broadcast is the (extracted) default ----------------
+def test_broadcast_explicit_equals_default(world):
+    pool, dfs = world
+    for name in ("posix-cached", "posix-cached:coherence=broadcast"):
+        iface = make_interface(name, dfs)
+        assert isinstance(iface.cache_for(0).policy, BroadcastPolicy)
+
+
+def test_broadcast_counts_storm_messages(world):
+    """One foreign flush delivers one message to every non-origin cache —
+    the write-sharing storm the coherence study quantifies."""
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    handles = [iface.create("/d/s", client_node=0, process=0)]
+    for node in range(1, 4):
+        handles.append(iface.dup(handles[0], client_node=node, process=node))
+    for h in handles:                        # warm all four node caches
+        h.write_at(0, b"x" * 64)
+        h.fsync()
+    sent_before = iface.coherence_stats()["invalidations_sent"]
+    handles[0].write_at(0, b"y" * 64)
+    handles[0].fsync()
+    st = iface.coherence_stats()
+    assert st["policy"] == "broadcast"
+    assert st["invalidations_sent"] - sent_before == 3   # all but origin
+    # timeout policy: the same event produces zero messages
+    iface_t = make_interface("posix-cached:timeout=1.0", dfs)
+    ht = [iface_t.create("/d/t", client_node=0, process=0)]
+    for node in range(1, 4):
+        ht.append(iface_t.dup(ht[0], client_node=node, process=node))
+    for h in ht:
+        h.write_at(0, b"x" * 64)
+        h.fsync()
+    assert iface_t.coherence_stats()["messages"] == 0
+
+
+# ---------------- timeout: bounded staleness + revalidation ----------------
+def test_timeout_serves_stale_then_revalidates(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=0.5", dfs)
+    h0 = iface.create("/d/f", client_node=0, process=0)
+    h0.write_at(0, b"old-old-old")
+    h0.fsync()
+    assert bytes(h0.read_at(0, 11)) == b"old-old-old"    # own data, cached
+    h1 = iface.dup(h0, client_node=1, process=9)
+    h1.write_at(0, b"new-new-new")
+    h1.fsync()                                           # foreign write
+    # within the lease: node 0 serves its stale pages, no coherence traffic
+    assert bytes(h0.read_at(0, 11)) == b"old-old-old"
+    p0 = iface.cache_for(0).policy
+    assert p0.stats.stale_hits >= 1
+    assert p0.stats.revalidations == 0
+    assert iface.cache_for(0).stats.invalidations == 0
+    # lease expires: revalidation sees the token moved and drops the entry
+    pool.sim.clock.advance(0.6)
+    with pool.sim.phase() as ph:
+        got = h0.read_at(0, 11)
+    assert bytes(got) == b"new-new-new"
+    assert p0.stats.revalidations == 1 and p0.stats.reval_misses == 1
+    assert len(ph.reval_flows) == 1          # the token round trip is charged
+
+
+def test_timeout_reval_hit_renews_lease_without_refetch(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=0.5", dfs)
+    h = iface.create("/d/q", client_node=0, process=0)
+    h.write_at(0, b"stable-data")
+    h.fsync()
+    assert bytes(h.read_at(0, 11)) == b"stable-data"
+    misses_before = iface.cache_stats()["read_misses"]
+    pool.sim.clock.advance(1.0)              # expire the lease; no writer
+    with pool.sim.phase() as ph:
+        assert bytes(h.read_at(0, 11)) == b"stable-data"
+    p = iface.cache_for(0).policy
+    assert p.stats.revalidations == 1 and p.stats.reval_hits == 1
+    assert iface.cache_stats()["read_misses"] == misses_before  # no re-fetch
+    assert len(ph.reval_flows) == 1
+
+
+def test_staleness_bounded_by_timeout(world):
+    pool, dfs = world
+    tau = 0.5
+    iface = make_interface(f"posix-cached:timeout={tau}", dfs)
+    h0 = iface.create("/d/b", client_node=0, process=0)
+    h1 = iface.dup(h0, client_node=1, process=9)
+    rng = np.random.default_rng(3)
+    for i in range(12):
+        h1.write_at(0, bytes([i % 251]) * 64)
+        h1.fsync()
+        pool.sim.clock.advance(float(rng.uniform(0.05, 0.3)))
+        h0.read_at(0, 64)
+        pool.sim.clock.advance(float(rng.uniform(0.05, 0.3)))
+    st = iface.cache_for(0).policy.stats
+    assert st.max_staleness_s <= tau + 1e-9
+
+
+def test_timeout_revalidation_is_cheaper_than_refetch(world):
+    """The reval op must cost less simulated time than re-fetching the
+    readahead window it saves."""
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=0.25", dfs)
+    h = iface.create("/d/r", client_node=0, process=0)
+    h.write_at(0, np.zeros(4 << 20, np.uint8))
+    h.fsync()
+    h.read_at(0, 1 << 20)
+    pool.sim.clock.advance(1.0)
+    with pool.sim.phase() as reval_ph:       # lease expired, token unmoved
+        h.read_at(0, 1 << 20)
+    iface.cache_for(0).invalidate(h.obj.name)
+    with pool.sim.phase() as fetch_ph:       # cold re-fetch for contrast
+        h.read_at(0, 1 << 20)
+    setup = pool.sim.hw.setup_time           # per-phase constant, not I/O
+    assert reval_ph.elapsed - setup < (fetch_ph.elapsed - setup) / 5
+
+
+def test_timeout_dentry_lease_and_revalidation(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=0.5", dfs)
+    other = make_interface("dfs", dfs)
+    iface.create("/d/k1", client_node=0, process=0).close()
+    assert iface.stat("/d/k1")["type"] == "file"         # dentry cached
+    p = iface.cache_for(0).policy
+    # a foreign sibling create moves the parent-dir token ...
+    other.create("/d/k2", client_node=1, process=9).close()
+    # ... but within the lease the dentry is served without revalidation
+    assert iface.stat("/d/k1")["type"] == "file"
+    assert iface.cache_stats()["dentry_hits"] >= 1
+    assert p.stats.dentry_revalidations == 0
+    # lease expires: revalidation sees the parent token moved, drops the
+    # dentry (conservative: sibling churn evicts too) and re-looks-up
+    pool.sim.clock.advance(1.0)
+    misses_before = iface.cache_stats()["dentry_misses"]
+    assert iface.stat("/d/k1")["type"] == "file"         # still exists
+    assert p.stats.dentry_revalidations >= 1
+    assert iface.cache_stats()["dentry_misses"] > misses_before
+    # unlink is destructive: the punch drops the dentry eagerly, no lease
+    other.unlink("/d/k1")
+    with pytest.raises(FileNotFoundError):
+        iface.stat("/d/k1")
+
+
+def test_own_flush_does_not_mask_pending_foreign_write(world):
+    """Regression: node A caches [0,N); node B overwrites it; A then
+    writes a *disjoint* range and flushes.  A's own-flush version renewal
+    must NOT adopt the global token (which already covers B's write) —
+    that would turn every later revalidation into a lease renewal and
+    unbound the staleness."""
+    pool, dfs = world
+    tau = 1.0
+    iface = make_interface(f"posix-cached:timeout={tau}", dfs)
+    ha = iface.create("/d/mask", client_node=0, process=0)
+    ha.write_at(0, b"A" * 64)
+    ha.fsync()
+    ha.read_at(0, 64)                        # A's cache holds [0,64)
+    hb = iface.dup(ha, client_node=1, process=9)
+    hb.write_at(0, b"B" * 64)
+    hb.fsync()                               # foreign overwrite, A stale
+    ha.write_at(1024, b"a" * 64)             # A writes a DISJOINT range
+    ha.fsync()                               # ... own flush renews nothing
+    pool.sim.clock.advance(10 * tau)         # far past any lease
+    got = bytes(ha.read_at(0, 64))
+    assert got == b"B" * 64                  # revalidation caught B's write
+    p = iface.cache_for(0).policy
+    assert p.stats.reval_misses >= 1
+
+
+def test_punch_propagates_eagerly_under_timeout(world):
+    """Punches are destructive: even the timeout policy drops the punched
+    object's pages everywhere at once (incl. the puncher's own cache)."""
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=5.0", dfs)
+    h = iface.create("/d/pn", client_node=0, process=0)
+    h.write_at(0, b"doomed!")
+    h.fsync()
+    h.read_at(0, 7)
+    assert iface.cache_for(0).cached_bytes() > 0
+    h.obj.punch()
+    assert iface.cache_for(0).cached_bytes() == 0
+
+
+def test_own_writes_do_not_self_invalidate_under_timeout(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=0.25", dfs)
+    h = iface.create("/d/own", client_node=0, process=0)
+    for i in range(4):
+        h.write_at(i * 64, bytes([65 + i]) * 64)
+        h.fsync()                # own flush renews the remembered token
+        pool.sim.clock.advance(0.5)
+        assert bytes(h.read_at(i * 64, 64)) == bytes([65 + i]) * 64
+    p = iface.cache_for(0).policy
+    assert p.stats.reval_misses == 0         # never dropped our own entry
+
+
+# ---------------- tx semantics are policy-independent ----------------
+@pytest.mark.parametrize("mount", ["posix-cached",
+                                   "posix-cached:timeout=1.0"])
+def test_commit_barrier_flushes_under_every_policy(world, mount):
+    pool, dfs = world
+    iface = make_interface(mount, dfs)
+    h0 = iface.create(f"/d/tx_{mount.replace(':', '_')}",
+                      client_node=0, process=0)
+    tx = dfs.cont.tx_begin()
+    h = iface.dup(h0, client_node=0, process=0, tx=tx)
+    h.write_at(0, b"T" * 128)
+    assert iface.cache_for(0).dirty_bytes() > 0
+    tx.commit()                              # barrier flushes staged bytes
+    assert iface.cache_for(0).dirty_bytes() == 0
+    plain = make_interface("posix", dfs)
+    got = plain.open(f"/d/tx_{mount.replace(':', '_')}",
+                     client_node=1, process=9).read_at(0, 128)
+    np.testing.assert_array_equal(got, np.frombuffer(b"T" * 128, np.uint8))
+
+
+@pytest.mark.parametrize("mount", ["posix-cached",
+                                   "posix-cached:timeout=1.0"])
+def test_abort_drops_staged_state_under_every_policy(world, mount):
+    pool, dfs = world
+    iface = make_interface(mount, dfs)
+    path = f"/d/ab_{mount.replace(':', '_')}"
+    h0 = iface.create(path, client_node=0, process=0)
+    tx = dfs.cont.tx_begin()
+    h = iface.dup(h0, client_node=0, process=0, tx=tx)
+    h.write_at(0, b"garbage")
+    tx.abort()
+    h2 = iface.open(path, client_node=0, process=1)
+    assert bytes(h2.read_at(0, 7)) == b"\0" * 7
+
+
+# ---------------- engine version tokens ----------------
+def test_engine_version_tokens_move_on_mutation(world):
+    pool, dfs = world
+    obj = dfs.cont.open_array("file:/d/tok")
+    t0 = object_token(obj)
+    obj.write(0, b"v1" * 100)
+    t1 = object_token(obj)
+    assert t1 > t0
+    obj.write(0, b"v2" * 100)
+    t2 = object_token(obj)
+    assert t2 > t1
+    obj.punch()
+    assert object_token(obj) != t2

@@ -1,0 +1,76 @@
+"""EventQueue (daos_eq_*) semantics.
+
+The regression pinned here: ``poll()`` used to call ``e.test()`` twice per
+event (once in the "done" comprehension, once in the "retained" one), so an
+event completing *between* the two probes was dropped from both lists and
+lost forever.  ``poll()`` must snapshot each event's completion exactly
+once."""
+import threading
+import time
+
+from repro.core import EventQueue
+
+
+class _RaceEvent:
+    """Completion flips between the first and second ``test()`` probe —
+    the exact interleaving that lost events."""
+
+    def __init__(self) -> None:
+        self.calls = 0
+
+    def test(self) -> bool:
+        self.calls += 1
+        return self.calls >= 2
+
+
+def test_poll_snapshots_test_once_event_never_lost():
+    eq = EventQueue(depth=1)
+    try:
+        ev = _RaceEvent()
+        eq._inflight.append(ev)
+        first = eq.poll()
+        # one probe only: the event read as pending and must be retained
+        assert ev.calls == 1
+        assert first == [] and eq.inflight == 1
+        second = eq.poll()
+        assert second == [ev] and eq.inflight == 0
+    finally:
+        eq._inflight.clear()
+        eq.close()
+
+
+def test_poll_returns_and_retires_completed_events():
+    gate = threading.Event()
+    with EventQueue(depth=2) as eq:
+        fast = eq.submit(lambda: 42)
+        slow = eq.submit(gate.wait, 5.0)
+        fast.wait()
+        done = eq.poll()
+        assert fast in done and slow not in done
+        assert eq.inflight == 1
+        gate.set()
+        slow.wait()
+        # a completed event is returned by exactly one poll
+        for _ in range(50):
+            done2 = eq.poll()
+            if done2:
+                break
+            time.sleep(0.01)
+        assert done2 == [slow]
+        assert eq.poll() == [] and eq.inflight == 0
+
+
+def test_drain_reraises_first_error():
+    def boom():
+        raise RuntimeError("injected")
+
+    eq = EventQueue(depth=1)
+    eq.submit(boom)
+    try:
+        eq.drain()
+    except RuntimeError as e:
+        assert "injected" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("drain() swallowed the error")
+    finally:
+        eq.close()
