@@ -194,38 +194,40 @@ def elastic_table(rows: list[dict]) -> str:
 
 
 def coherence_table(rows: list[dict]) -> str:
-    """The write-sharing policy sweep + single-writer control + CO claims."""
+    """The coherence study: write-sharing policy sweep (incl. the
+    free-oracle contrast), single-writer control, tau frontier,
+    disjoint-stripe granularity study, mixed-policy fleet + CO claims."""
+    out = []
     ws = [r for r in rows if r.get("mode") == "write-share"]
-    if not ws:
-        return ""
-    counts = sorted({r["clients"] for r in ws})
-    policies = ["off", "broadcast", "timeout"]
-    out = [f"### Write-sharing sweep ({ws[0]['block_mib']} MiB/node, "
-           f"{ws[0]['transfer_kib']} KiB transfers, "
-           f"tau={ws[0]['tau_s']}s)", "",
-           "| policy | metric | " + " | ".join(f"N={c}" for c in counts)
-           + " |",
-           "|---|---|" + "---|" * len(counts)]
+    policies = ["off", "broadcast", "broadcast-free", "timeout"]
+    if ws:
+        counts = sorted({r["clients"] for r in ws})
+        out += [f"### Write-sharing sweep ({ws[0]['block_mib']} MiB/node, "
+                f"{ws[0]['transfer_kib']} KiB transfers, "
+                f"tau={ws[0]['tau_s']}s)", "",
+                "| policy | metric | " + " | ".join(f"N={c}" for c in counts)
+                + " |",
+                "|---|---|" + "---|" * len(counts)]
 
-    def cell(policy, clients, metric, fmt):
-        for r in ws:
-            if r["policy"] == policy and r["clients"] == clients:
-                return fmt.format(r[metric])
-        return "-"
+        def cell(policy, clients, metric, fmt):
+            for r in ws:
+                if r["policy"] == policy and r["clients"] == clients:
+                    return fmt.format(r[metric])
+            return "-"
 
-    for p in policies:
-        if not any(r["policy"] == p for r in ws):
-            continue
-        out.append(f"| {p} | GiB/s | " + " | ".join(
-            cell(p, c, "bw_gib_s", "{:.2f}") for c in counts) + " |")
-        out.append(f"| {p} | messages | " + " | ".join(
-            cell(p, c, "messages", "{:,}") for c in counts) + " |")
-    trow = [r for r in ws if r["policy"] == "timeout"]
-    if trow:
-        out.append("| timeout | max staleness (s) | " + " | ".join(
-            cell("timeout", c, "max_staleness_s", "{:.2f}")
-            for c in counts) + " |")
-    out.append("")
+        for p in policies:
+            if not any(r["policy"] == p for r in ws):
+                continue
+            out.append(f"| {p} | GiB/s | " + " | ".join(
+                cell(p, c, "bw_gib_s", "{:.2f}") for c in counts) + " |")
+            out.append(f"| {p} | messages | " + " | ".join(
+                cell(p, c, "messages", "{:,}") for c in counts) + " |")
+        trow = [r for r in ws if r["policy"] == "timeout"]
+        if trow:
+            out.append("| timeout | max staleness (s) | " + " | ".join(
+                cell("timeout", c, "max_staleness_s", "{:.2f}")
+                for c in counts) + " |")
+        out.append("")
     sw = [r for r in rows if r.get("mode") == "single-writer"]
     if sw:
         out.append(f"### Single-writer / many-reader control "
@@ -238,6 +240,51 @@ def coherence_table(rows: list[dict]) -> str:
             out.append(f"| {r['policy']} | {r['re_read_gib_s']:.1f} | "
                        f"{r['messages']:,} | {r['hit_rate']:.2f} |")
         out.append("")
+    trows = sorted((r for r in rows if r.get("mode") == "tau"),
+                   key=lambda r: r["tau_s"])
+    if trows:
+        out.append(f"### Timeout tau frontier (N={trows[0]['clients']} "
+                   "write-sharing nodes)")
+        out.append("")
+        out.append("| tau (s) | GiB/s | messages | max staleness (s) | "
+                   "hit rate |")
+        out.append("|---|---|---|---|---|")
+        for r in trows:
+            out.append(f"| {r['tau_s']} | {r['bw_gib_s']:.2f} | "
+                       f"{r['messages']:,} | {r['max_staleness_s']:.2f} | "
+                       f"{r['hit_rate']:.2f} |")
+        out.append("")
+    drows = [r for r in rows if r.get("mode") == "disjoint"]
+    if drows:
+        out.append("### Disjoint-stripe sharers: invalidation granularity")
+        out.append("")
+        out.append("| N | policy | granularity | GiB/s | messages | "
+                   "hit rate |")
+        out.append("|---|---|---|---|---|---|")
+        for r in sorted(drows, key=lambda r: (r["clients"], r["policy"],
+                                              r.get("inval", ""))):
+            gran = "-" if r["policy"] == "off" else r["inval"]
+            out.append(f"| {r['clients']} | {r['policy']} | {gran} | "
+                       f"{r['bw_gib_s']:.2f} | {r['messages']:,} | "
+                       f"{r['hit_rate']:.2f} |")
+        out.append("")
+    mrows = [r for r in rows if r.get("mode") == "mixed"]
+    if mrows:
+        out.append(f"### Mixed-policy fleet ({mrows[0]['writers']} "
+                   f"direct-I/O writers + {mrows[0]['readers']} cached "
+                   f"readers, tau={mrows[0]['tau_s']}s)")
+        out.append("")
+        out.append("| reader policy | read GiB/s | write GiB/s | messages "
+                   "| max staleness (s) | hit rate |")
+        out.append("|---|---|---|---|---|---|")
+        for r in mrows:
+            out.append(f"| {r['reader_policy']} | {r['read_gib_s']:.1f} | "
+                       f"{r['write_gib_s']:.1f} | {r['messages']:,} | "
+                       f"{r['max_staleness_s']:.2f} | "
+                       f"{r['hit_rate']:.2f} |")
+        out.append("")
+    if not out:
+        return ""
     out.extend(_claims_lines(rows))
     return "\n".join(out)
 
@@ -360,7 +407,8 @@ def main() -> None:
         rows = json.loads(coh_json.read_text())
         body = coherence_table(rows)
         n_coh = sum(1 for r in rows
-                    if r.get("mode") in ("write-share", "single-writer"))
+                    if r.get("mode") in ("write-share", "single-writer",
+                                         "tau", "disjoint", "mixed"))
         if body:
             text = _splice(text, COH_MARK, body)
     exp.write_text(text)

@@ -70,6 +70,32 @@ class CacheStats:
 
 
 # ---------------- interval bookkeeping ----------------
+def _sub_interval(ivs: list[list[int]], s: int, e: int) -> None:
+    """Remove [s, e) from a sorted list of disjoint intervals."""
+    if e <= s:
+        return
+    out: list[list[int]] = []
+    for a, b in ivs:
+        if b <= s or a >= e:         # disjoint: keep
+            out.append([a, b])
+            continue
+        if a < s:                    # head survives
+            out.append([a, s])
+        if e < b:                    # tail survives
+            out.append([e, b])
+    ivs[:] = out
+
+
+def _clip(ivs: list[list[int]], s: int, e: int) -> list[list[int]]:
+    """The parts of the intervals that fall inside [s, e)."""
+    return [[max(a, s), min(b, e)] for a, b in ivs
+            if max(a, s) < min(b, e)]
+
+
+def _overlaps(ivs: list[list[int]], s: int, e: int) -> bool:
+    return any(max(a, s) < min(b, e) for a, b in ivs)
+
+
 def _add_interval(ivs: list[list[int]], s: int, e: int) -> None:
     """Insert [s, e) into a sorted list of disjoint intervals, merging."""
     if e <= s:
@@ -107,7 +133,7 @@ class _ObjEntry:
     """Cached state for one object: bytes (real path) or extents (sized)."""
 
     __slots__ = ("obj", "sized", "data", "valid", "dirty", "ctx", "tx",
-                 "validated_at", "version", "stale_since")
+                 "lease", "pver", "pstale")
 
     def __init__(self, obj, sized: bool) -> None:
         self.obj = obj
@@ -118,10 +144,11 @@ class _ObjEntry:
         self.ctx = None              # last IOCtx, used for flush/evict
         self.tx = None               # open Transaction the dirty data is
                                      # staged under (epoch atomicity)
-        # coherence-policy bookkeeping (timeout leases / version tokens)
-        self.validated_at: float | None = None  # sim time of last validation
-        self.version: int = 0        # engine version token at validation
-        self.stale_since: float | None = None   # first foreign write seen
+        # per-page coherence bookkeeping (timeout leases / version tokens;
+        # page index -> value, page size owned by the ClientCache)
+        self.lease: dict[int, float] = {}   # sim time of last validation
+        self.pver: dict[int, int] = {}      # extent token at validation
+        self.pstale: dict[int, float] = {}  # first foreign write seen
 
     def ensure(self, end: int) -> None:
         if self.data is not None and self.data.size < end:
@@ -137,9 +164,13 @@ class ClientCache:
                  page_bytes: int = MIB, readahead_pages: int = 8,
                  wb_buffer_bytes: int = 16 * MIB,
                  capacity_bytes: int = 1024 * MIB,
-                 policy: CoherencePolicy | None = None) -> None:
+                 policy: CoherencePolicy | None = None,
+                 invalidation: str = "page") -> None:
         if mode not in CACHE_MODES:
             raise ValueError(f"cache mode {mode!r}; known: {CACHE_MODES}")
+        if invalidation not in ("page", "object"):
+            raise ValueError(f"invalidation granularity {invalidation!r}; "
+                             "known: ('page', 'object')")
         self.client_node = client_node
         self.mode = mode
         self.page_bytes = page_bytes
@@ -147,6 +178,11 @@ class ClientCache:
         self.wb_buffer_bytes = wb_buffer_bytes
         self.capacity_bytes = capacity_bytes
         self.policy = policy if policy is not None else BroadcastPolicy()
+        # "object" recovers the pre-page-granular behaviour (any foreign
+        # write drops the whole entry) — kept as a mount option so the
+        # coherence bench can quantify what page granularity buys (CO5)
+        self.invalidation = invalidation
+        self.sim = None              # set by Container.attach_cache
         self.stats = CacheStats()
         self._entries: OrderedDict[str, _ObjEntry] = OrderedDict()
         self._dentries: dict[str, dict] = {}
@@ -219,14 +255,28 @@ class ClientCache:
             e.dirty = []
         e.tx = tx
 
+    def _tx_bypass(self, e: _ObjEntry, tx, offset: int, nbytes: int) -> bool:
+        """Reads under an OPEN transaction are snapshot-isolated at the tx
+        epoch: the cache may only serve them the tx's own staged bytes
+        (entry tagged to this tx, range fully dirty).  Anything else goes
+        to the object layer at the snapshot epoch — a hit could hand the
+        tx newer committed bytes, and a fill would cache HISTORICAL bytes
+        under a fresh lease (current tokens, old data), unbounding the
+        timeout policy's staleness."""
+        return not (e.tx is tx
+                    and _covers(e.dirty, offset, offset + nbytes))
+
     # ---------------- data path: reads ----------------
     def read(self, obj, offset: int, size: int, ctx, tx=None) -> np.ndarray:
         e = self._touch(obj, sized=False)
         if e is None:
             return obj.read(offset, size, epoch=self._tx_epoch(tx), ctx=ctx)
         self._retag(e, tx)
+        snap = self._tx_epoch(tx)
+        if snap is not None and self._tx_bypass(e, tx, offset, size):
+            return obj.read(offset, size, epoch=snap, ctx=ctx)
         if (_covers(e.valid, offset, offset + size)
-                and self.policy.validate(self, e, obj, ctx)):
+                and self.policy.validate(self, e, obj, ctx, offset, size)):
             self.stats.read_hits += 1
             self._record_local(obj, ctx, size, 1)
             return e.data[offset: offset + size].copy()
@@ -234,7 +284,7 @@ class ClientCache:
         e = self._touch(obj, sized=False)   # validate may have dropped it
         self._retag(e, tx)
         lo, hi = self._ra_window(obj, offset, size)
-        raw = obj.read(lo, hi - lo, epoch=self._tx_epoch(tx), ctx=ctx)
+        raw = obj.read(lo, hi - lo, ctx=ctx)
         e.ensure(hi)
         # don't let the backend fill clobber dirty (unflushed) bytes
         dirty_save = [(a, b, e.data[a:b].copy()) for a, b in e.dirty
@@ -245,7 +295,7 @@ class ClientCache:
             e.data[a2:b2] = d[a2 - a: b2 - a]
         _add_interval(e.valid, lo, hi)
         e.ctx = ctx
-        self.policy.note_fill(self, e, obj)
+        self.policy.note_fill(self, e, obj, lo, hi)
         self.stats.readahead_bytes += (hi - lo) - size
         self._evict_if_needed()
         return e.data[offset: offset + size].copy()
@@ -256,8 +306,11 @@ class ClientCache:
             return obj.read_sized(offset, nbytes, epoch=self._tx_epoch(tx),
                                   ctx=ctx)
         self._retag(e, tx)
+        snap = self._tx_epoch(tx)
+        if snap is not None and self._tx_bypass(e, tx, offset, nbytes):
+            return obj.read_sized(offset, nbytes, epoch=snap, ctx=ctx)
         if (_covers(e.valid, offset, offset + nbytes)
-                and self.policy.validate(self, e, obj, ctx)):
+                and self.policy.validate(self, e, obj, ctx, offset, nbytes)):
             self.stats.read_hits += 1
             self._record_local(obj, ctx, nbytes, 1)
             return nbytes
@@ -265,10 +318,10 @@ class ClientCache:
         e = self._touch(obj, sized=True)    # validate may have dropped it
         self._retag(e, tx)
         lo, hi = self._ra_window(obj, offset, nbytes)
-        obj.read_sized(lo, hi - lo, epoch=self._tx_epoch(tx), ctx=ctx)
+        obj.read_sized(lo, hi - lo, ctx=ctx)
         _add_interval(e.valid, lo, hi)
         e.ctx = ctx
-        self.policy.note_fill(self, e, obj)
+        self.policy.note_fill(self, e, obj, lo, hi)
         self.stats.readahead_bytes += (hi - lo) - nbytes
         self._evict_if_needed()
         return nbytes
@@ -431,24 +484,109 @@ class ClientCache:
         self._dentry_meta.pop(path, None)
 
     # ---------------- coherence mechanisms (decisions live in .policy) ----
-    def invalidate(self, name: str) -> bool:
-        """Drop everything cached for an object (dirty data included),
-        plus the dentry of the path a DFS file object is named after.
-        Returns True when an entry was actually dropped."""
-        if name.startswith("file:"):
-            self.drop_dentry(name[len("file:"):])
-        if self._entries.pop(name, None) is not None:
-            self.stats.invalidations += 1
-            return True
-        return False
+    def _page_span(self, offset: int, nbytes: int) -> tuple[int, int]:
+        """Page-align an extent outward: the byte range whose pages
+        [offset, offset+nbytes) touches."""
+        pg = self.page_bytes
+        return (offset // pg) * pg, -(-(offset + nbytes) // pg) * pg
 
-    def trim_to_dirty(self, name: str) -> None:
+    def pages_for(self, entry: _ObjEntry, offset: int = 0,
+                  nbytes: int | None = None) -> list[int]:
+        """Page indices an extent touches; with ``nbytes`` None (extent
+        unknown), every page the entry knows anything about."""
+        pg = self.page_bytes
+        if nbytes is not None:
+            return list(range(offset // pg, -(-(offset + nbytes) // pg)))
+        ps: set[int] = set(entry.lease) | set(entry.pver) | set(entry.pstale)
+        for ivs in (entry.valid, entry.dirty):
+            for a, b in ivs:
+                ps.update(range(a // pg, -(-b // pg)))
+        return sorted(ps)
+
+    def holds_page(self, entry: _ObjEntry, p: int) -> bool:
+        """Whether the cache holds ANY state for page ``p`` of the entry
+        (data, dirty bytes, or lease/version/stale bookkeeping) — an O(
+        intervals) membership test, no page-set materialisation."""
+        if p in entry.lease or p in entry.pver or p in entry.pstale:
+            return True
+        lo = p * self.page_bytes
+        return (_overlaps(entry.valid, lo, lo + self.page_bytes)
+                or _overlaps(entry.dirty, lo, lo + self.page_bytes))
+
+    def has_dentry(self, name: str) -> bool:
+        """Whether this cache holds the dentry of the path a DFS file
+        object is named after (sharer-map check for punch delivery)."""
+        return (name.startswith("file:")
+                and name[len("file:"):] in self._dentries)
+
+    def conflicts(self, entry: _ObjEntry, offset: int = 0,
+                  nbytes: int | None = None) -> bool:
+        """Whether a write to ``[offset, offset+nbytes)`` conflicts with
+        state this cache holds — the extent-lock check that decides if an
+        invalidation message needs delivering at all.  Page-granular
+        caches conflict only when the written extent's pages overlap
+        their valid/dirty ranges (disjoint-stripe sharers never
+        conflict); ``invalidation="object"`` caches hold object-granular
+        locks, so any extent conflicts."""
+        if nbytes is None or self.invalidation == "object":
+            return True
+        lo, hi = self._page_span(offset, nbytes)
+        return _overlaps(entry.valid, lo, hi) or _overlaps(entry.dirty,
+                                                           lo, hi)
+
+    def invalidate(self, name: str, offset: int = 0,
+                   nbytes: int | None = None) -> bool:
+        """Drop cached state for an object (dirty data included —
+        last-writer-wins).  With an extent, only the pages overlapping
+        ``[offset, offset+nbytes)`` drop; without one (punch, unlink,
+        abort — or ``invalidation="object"``), the whole entry goes, plus
+        the dentry of the path a DFS file object is named after.
+        Returns True when something was actually dropped."""
+        if nbytes is None or self.invalidation == "object":
+            if name.startswith("file:"):
+                self.drop_dentry(name[len("file:"):])
+            if self._entries.pop(name, None) is not None:
+                self.stats.invalidations += 1
+                return True
+            return False
+        e = self._entries.get(name)
+        if e is None:
+            return False
+        lo, hi = self._page_span(offset, nbytes)
+        dropped = _overlaps(e.valid, lo, hi) or _overlaps(e.dirty, lo, hi)
+        _sub_interval(e.valid, lo, hi)
+        _sub_interval(e.dirty, lo, hi)
+        pg = self.page_bytes
+        for p in range(lo // pg, hi // pg):
+            e.lease.pop(p, None)
+            e.pver.pop(p, None)
+            e.pstale.pop(p, None)
+        if not e.valid and not e.dirty:
+            self._entries.pop(name, None)   # nothing cached: retire it
+        if dropped:
+            self.stats.invalidations += 1
+        return dropped
+
+    def trim_to_dirty(self, name: str, offset: int = 0,
+                      nbytes: int | None = None) -> None:
         """Shrink an entry's valid ranges to the dirty extents it owns —
         the sibling-rank case (same open transaction): our staged writes
-        stay valid, clean pages outside them may be stale."""
+        stay valid, clean pages outside them may be stale.  With an
+        extent, only the pages the sibling actually wrote are trimmed;
+        valid data elsewhere in the object is untouched."""
         e = self._entries.get(name)
-        if e is not None:
+        if e is None:
+            return
+        if nbytes is None or self.invalidation == "object":
+            # extent unknown — or object-granular mode: the pre-PR-4
+            # whole-entry behaviour (valid collapses to owned dirty)
             e.valid = [iv[:] for iv in e.dirty]
+            return
+        lo, hi = self._page_span(offset, nbytes)
+        keep = _clip(e.dirty, lo, hi)
+        _sub_interval(e.valid, lo, hi)
+        for a, b in keep:
+            _add_interval(e.valid, a, b)
 
     def drop_all(self) -> None:
         """Simulate a remount: flush pending write-back data, then forget

@@ -59,6 +59,15 @@ class Container:
                 flush(tx)
         self._committed = max(self._committed, tx.epoch)
         self.pool.raft.set(("cont_epoch", self.label), self._committed)
+        # commit is when the staged bytes *change what readers see*: replay
+        # the tx's write log as coherence events so foreign caches that
+        # refetched pre-commit bytes during staging drop/destale them now
+        # (sibling caches of this very tx hold the fresh bytes and are
+        # exempted by the policies' _tx_sibling rule as usual)
+        for name, offset, nbytes, ctx in getattr(tx, "write_log", ()):
+            self.notify_write(name, tx.epoch,
+                              origin=getattr(ctx, "cache", None),
+                              offset=offset, nbytes=nbytes, ctx=ctx)
 
     def abort_tx(self, tx: Transaction) -> int:
         # staged cache state for a punched epoch is garbage everywhere
@@ -87,25 +96,43 @@ class Container:
     # no invalidation decision itself.
     def attach_cache(self, cache) -> None:
         if cache not in self._caches:
+            cache.sim = self.pool.sim   # delivery cost accounting
             self._caches.append(cache)
 
     def detach_cache(self, cache) -> None:
         if cache in self._caches:
             self._caches.remove(cache)
 
-    def notify_write(self, name: str, epoch: int, origin=None) -> None:
+    def notify_write(self, name: str, epoch: int, origin=None,
+                     offset: int = 0, nbytes: int | None = None,
+                     ctx=None) -> None:
+        """Fan a write event out to every attached cache's policy.  The
+        event carries the touched extent ``(offset, nbytes)`` (``nbytes``
+        None = unknown: treat as the whole object) and the writer's
+        ``ctx`` so costed delivery can charge the origin process.  Fires
+        for *every* object-layer write — including ones from uncached
+        (coherence=off) mounts, whose ``origin`` is None: off-writers
+        still bump engine tokens and cached mounts still hear about
+        them.  Tx-staged writes notify here too, even though their bytes
+        are not committed-visible yet: the committed watermark is a max,
+        so staged records *leak* into the committed view the moment any
+        later auto-epoch write lands — revoking at staging conservatively
+        covers that window (the conformance harness catches real stale
+        serves if this is skipped), and the commit-time write-log replay
+        covers caches that refetched pre-commit bytes in between."""
         if not self._caches:
             return
         now = self.pool.sim.clock.now
         for c in list(self._caches):
-            c.policy.remote_write(c, name, epoch, origin, now)
+            c.policy.remote_write(c, name, epoch, origin, now,
+                                  offset=offset, nbytes=nbytes, ctx=ctx)
 
-    def notify_punch(self, name: str, origin=None) -> None:
+    def notify_punch(self, name: str, origin=None, ctx=None) -> None:
         if not self._caches:
             return
         now = self.pool.sim.clock.now
         for c in list(self._caches):
-            c.policy.punch(c, name, origin, now)
+            c.policy.punch(c, name, origin, now, ctx=ctx)
 
     # ------------- objects -------------
     def _resolve_class(self, oclass: str | _layout.ObjectClass | None

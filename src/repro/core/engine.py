@@ -65,6 +65,12 @@ class Engine:
         # remembered at fill time against the current one — one tiny RPC
         # (HWProfile.reval_op_time) instead of a full re-fetch.
         self._obj_tokens: dict[tuple, int] = {}
+        # per-extent sub-tokens: the same counters broken down by subkey
+        # ((dkey, akey) — for arrays that is ("arr", cell_no), i.e. one
+        # counter per stripe cell).  A page-granular cache revalidates
+        # only the cells its pages overlap, so a foreign write elsewhere
+        # in the object no longer drops untouched pages.
+        self._sub_tokens: dict[tuple, dict[tuple, int]] = {}
 
     # -- health -------------------------------------------------------------
     def fail(self) -> None:
@@ -81,6 +87,8 @@ class Engine:
     def _bump_token(self, key: Key) -> None:
         k = (key[0], key[1])
         self._obj_tokens[k] = self._obj_tokens.get(k, 0) + 1
+        sub = self._sub_tokens.setdefault(k, {})
+        sub[key[2:]] = sub.get(key[2:], 0) + 1
 
     def version_token(self, cont_label, oid) -> int:
         """Current version token of one object on this engine (0 if the
@@ -88,6 +96,18 @@ class Engine:
         with a remembered token proves no intervening mutation."""
         self._check()
         return self._obj_tokens.get((cont_label, oid), 0)
+
+    def extent_token(self, cont_label, oid, subkeys) -> int:
+        """Sum of this engine's sub-tokens over ``subkeys`` (an iterable of
+        (dkey, akey) pairs).  Same monotonicity argument as
+        :meth:`version_token`, restricted to the touched extent: equality
+        proves no mutation landed inside it, while mutations elsewhere in
+        the object leave it unchanged."""
+        self._check()
+        sub = self._sub_tokens.get((cont_label, oid))
+        if not sub:
+            return 0
+        return sum(sub.get(s, 0) for s in subkeys)
 
     # -- data path ------------------------------------------------------------
     @staticmethod

@@ -16,6 +16,10 @@ real ``dfuse --enable-caching`` / ``attr-timeout`` flags expose:
 ``readahead=``     readahead window, in pages (default 8)
 ``wb_mib=``        write-back buffer watermark, MiB (default 16)
 ``page_kib=``      cache page size, KiB (default 1024)
+``inval=``         invalidation granularity: ``page`` (default; a foreign
+                   write drops only the pages it overlaps) or ``object``
+                   (whole-entry drop — the pre-page-granular behaviour,
+                   kept so the coherence bench can quantify the delta)
 =================  =====================================================
 
 e.g. ``posix-cached:timeout=1.0`` is the dfuse-caching-enabled POSIX
@@ -32,6 +36,19 @@ MIB = 1 << 20
 KIB = 1 << 10
 
 
+def _num(key: str, val: str, conv):
+    """Parse a numeric mount-option value with a diagnosable error."""
+    try:
+        out = conv(val)
+    except (TypeError, ValueError):
+        raise ValueError(f"mount option {key}={val!r}: expected a "
+                         f"{'number' if conv is float else 'count'}") \
+            from None
+    if out < 0:
+        raise ValueError(f"mount option {key}={val!r}: must be >= 0")
+    return out
+
+
 def parse_mount_options(optstr: str) -> dict:
     """``"timeout=1.0,readahead=4"`` -> constructor kwargs
     (``coherence=``/``cache_opts=``) for an AccessInterface."""
@@ -46,17 +63,21 @@ def parse_mount_options(optstr: str) -> dict:
             coherence["policy"] = val
         elif key == "timeout":
             coherence.setdefault("policy", "timeout")
-            coherence["attr_timeout"] = float(val)
-            coherence["dentry_timeout"] = float(val)
+            coherence["attr_timeout"] = _num(key, val, float)
+            coherence["dentry_timeout"] = coherence["attr_timeout"]
         elif key in ("attr_timeout", "dentry_timeout"):
             coherence.setdefault("policy", "timeout")
-            coherence[key] = float(val)
+            coherence[key] = _num(key, val, float)
         elif key == "readahead":
-            cache_opts["readahead_pages"] = int(val)
+            cache_opts["readahead_pages"] = _num(key, val, int)
         elif key == "wb_mib":
-            cache_opts["wb_buffer_bytes"] = int(float(val) * MIB)
+            cache_opts["wb_buffer_bytes"] = int(_num(key, val, float) * MIB)
         elif key == "page_kib":
-            cache_opts["page_bytes"] = int(float(val) * KIB)
+            cache_opts["page_bytes"] = int(_num(key, val, float) * KIB)
+        elif key == "inval":
+            # invalidation granularity: "page" (default) or "object" (the
+            # pre-PR-4 whole-entry behaviour, kept for the CO5 contrast)
+            cache_opts["invalidation"] = val
         else:
             raise ValueError(f"unknown mount option {key!r}")
     kw: dict = {}

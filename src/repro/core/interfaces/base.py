@@ -184,8 +184,26 @@ class AccessInterface(abc.ABC):
         # mount options; "off" means direct I/O — no cache is ever created,
         # so the interface is byte-for-byte its uncached self.
         self.coherence = normalize_coherence(coherence)
+        # a mount that never creates a cache has nothing for a coherence
+        # policy or cache-geometry knob to act on: silently ignoring the
+        # option would let "posix:timeout=1" masquerade as a cached mount
+        # (or "posix-cached:coherence=off,readahead=4" as a tuned one),
+        # so both are errors — "coherence=off" itself is consistent on
+        # any interface (it states what is then true)
+        if (cache_mode == "none" and coherence is not None
+                and self.coherence["policy"] != "off"):
+            raise ValueError(
+                f"coherence={self.coherence['policy']!r} requires a "
+                f"caching interface (e.g. posix-cached/dfs-cached); "
+                f"{type(self).__name__} with cache_mode='none' never "
+                "creates a cache")
         if self.coherence["policy"] == "off":
             cache_mode = "none"
+        if cache_mode == "none" and cache_opts:
+            raise ValueError(
+                f"cache options {sorted(cache_opts)} require a caching "
+                f"interface; this {type(self).__name__} mount never "
+                "creates a cache")
         self.cache_mode = cache_mode
         self.cache_opts = dict(cache_opts or {})
         self._caches: dict[int, ClientCache] = {}
@@ -321,13 +339,27 @@ class AccessInterface(abc.ABC):
         ctx = self.make_ctx(client_node, process)
         return self._handle(handle.obj, ctx, client_node, tx=tx)
 
+    def _unlink_ctx(self, client_node: int, process: int) -> IOCtx:
+        """Ctx of an unlink/punch: carries the caller's cache (if one
+        already exists — never created for this) so the resulting
+        notify_punch doesn't charge the unlinker a revocation of its own
+        pages."""
+        ctx = self.make_ctx(client_node, process)
+        cache = self._caches.get(client_node)
+        if cache is not None:
+            ctx = dataclasses.replace(ctx, cache=cache)
+        return ctx
+
     def unlink(self, path: str, client_node: int = 0, process: int = 0) -> None:
-        # drop every cached view this interface holds (all client nodes):
-        # pages, pending write-back data and the dentry
+        # a file unlink punches the object, and the punch fans out through
+        # every attached cache's coherence policy FIRST (pages, write-back
+        # data and the file's dentry drop there — costed for foreign
+        # sharers, dentry-only holders included; free for the unlinker).
+        # The local sweep afterwards only mops up what no punch covers:
+        # directory dentries (directories have no object to punch).
+        self.dfs.unlink(path, ctx=self._unlink_ctx(client_node, process))
         for cache in self._caches.values():
-            cache.invalidate(f"file:{path}")
             cache.drop_dentry(path)
-        self.dfs.unlink(path, ctx=self.make_ctx(client_node, process))
 
     def stat(self, path: str, client_node: int = 0, process: int = 0) -> dict:
         cache = self.cache_for(client_node)

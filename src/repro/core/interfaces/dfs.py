@@ -97,7 +97,7 @@ class DFS:
         d = self._dentry(path, ctx)
         parent, name = self._split(path)
         if d["type"] == "file":
-            self.open_file(path, ctx).punch()
+            self.open_file(path, ctx).punch(ctx=ctx)
         else:
             # reclaim the directory's own KV object (its "." self-record)
             # along with the dentry, or unlinked dirs leak store space
@@ -165,9 +165,11 @@ class ArrayInterface(AccessInterface):
         return {"type": "array", "size": obj.size}
 
     def unlink(self, path: str, client_node: int = 0, process: int = 0) -> None:
-        # punch broadcasts notify_punch to every attached cache
-        self.dfs.cont.open_array(f"raw:{path}",
-                                 oclass=self.dfs.default_oclass).punch()
+        # punch broadcasts notify_punch to every attached cache, with the
+        # unlinker attributed so its own cache isn't charged a revocation
+        self.dfs.cont.open_array(
+            f"raw:{path}", oclass=self.dfs.default_oclass).punch(
+                ctx=self._unlink_ctx(client_node, process))
 
     def mkdir(self, path: str) -> None:
         pass          # no namespace: directories don't exist at this level

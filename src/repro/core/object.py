@@ -152,7 +152,8 @@ class ArrayObject(_ObjectBase):
         # one RPC per engine per call batches the cells (DAOS IOD semantics):
         self._record_flows(acc.flows(), "write", ctx)
         self._grow(offset + n)
-        self.container.notify_write(self.name, epoch, origin=ctx.cache)
+        self.container.notify_write(self.name, epoch, origin=ctx.cache,
+                                    offset=offset, nbytes=n, ctx=ctx)
         return n
 
     def _rmw_cell(self, lay, cell_no: int, in_cell: int, payload: np.ndarray,
@@ -284,7 +285,8 @@ class ArrayObject(_ObjectBase):
                 acc.add(eid, nb)
         self._record_flows(acc.flows(), "write", ctx)
         self._grow(offset + nbytes)
-        self.container.notify_write(self.name, epoch, origin=ctx.cache)
+        self.container.notify_write(self.name, epoch, origin=ctx.cache,
+                                    offset=offset, nbytes=nbytes, ctx=ctx)
         return nbytes
 
     def read_sized(self, offset: int, nbytes: int,
@@ -300,7 +302,7 @@ class ArrayObject(_ObjectBase):
         self._record_flows(acc.flows(), "read", ctx)
         return nbytes
 
-    def punch(self) -> None:
+    def punch(self, ctx: IOCtx = DEFAULT_CTX) -> None:
         lay = self._layout()
         for eid in set(lay.targets):
             eng = self._engine(eid)
@@ -309,7 +311,7 @@ class ArrayObject(_ObjectBase):
             for key in list(eng.keys((self.container.label, self.oid))):
                 eng.punch(key)
         self.container.set_object_size(self.oid, 0)
-        self.container.notify_punch(self.name)
+        self.container.notify_punch(self.name, origin=ctx.cache, ctx=ctx)
 
 
 class KVObject(_ObjectBase):

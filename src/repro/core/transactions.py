@@ -19,6 +19,13 @@ class Transaction:
         self.epoch = container.alloc_epoch()
         self.state = "open"            # open | committed | aborted
         self.touched_engines: set[int] = set()
+        # (name, offset, nbytes, ctx) per array write staged under this
+        # epoch: the commit replays these as coherence notifications —
+        # staged data only *changes* what readers see at commit, so that
+        # is when foreign caches must drop/destale the extents (the
+        # staging-time notification they also get can only make them
+        # refetch still-current pre-commit bytes)
+        self.write_log: list[tuple] = []
 
     # -- write-side helpers (objects call these through the handle) ----------
     def touch(self, engine_id: int) -> None:
@@ -30,7 +37,9 @@ class Transaction:
         for t in lay.targets:
             self.touch(t)
         kw = {"ctx": ctx} if ctx is not None else {}
-        return obj.write(offset, data, epoch=self.epoch, **kw)
+        n = obj.write(offset, data, epoch=self.epoch, **kw)
+        self.write_log.append((obj.name, offset, n, ctx))
+        return n
 
     def write_sized(self, obj, offset: int, nbytes: int, ctx=None) -> int:
         """Sized (synthetic-payload) write staged under this tx's epoch."""
@@ -39,7 +48,9 @@ class Transaction:
         for t in lay.targets:
             self.touch(t)
         kw = {"ctx": ctx} if ctx is not None else {}
-        return obj.write_sized(offset, nbytes, epoch=self.epoch, **kw)
+        obj.write_sized(offset, nbytes, epoch=self.epoch, **kw)
+        self.write_log.append((obj.name, offset, nbytes, ctx))
+        return nbytes
 
     def put_kv(self, obj, dkey, akey, value, ctx=None) -> None:
         self._check_open()

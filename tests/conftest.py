@@ -1,7 +1,35 @@
 import pathlib
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 for p in (str(ROOT / "src"), str(ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+from repro.core import Pool, Topology              # noqa: E402
+from repro.core.interfaces import DFS              # noqa: E402
+
+
+@pytest.fixture()
+def make_world():
+    """Factory for the cluster/namespace boilerplate the cache, coherence
+    and checkpoint tests all need: a pool on some topology, one container,
+    a DFS namespace, optionally with directories pre-created."""
+    def build(oclass: str = "S2", label: str = "c", topo: Topology = None,
+              materialize: bool = True, dirs: tuple = (), **dfs_kw):
+        pool = Pool(topo or Topology(), materialize=materialize)
+        cont = pool.create_container(label, oclass=oclass)
+        dfs = DFS(cont, **dfs_kw)
+        for d in dirs:
+            dfs.mkdir(d)
+        return pool, dfs
+    return build
+
+
+@pytest.fixture()
+def world(make_world):
+    """The default shared world: 8x2 servers, container "c" (S2), DFS
+    namespace with a /d working directory."""
+    return make_world(dirs=("/d",))

@@ -5,17 +5,9 @@ import numpy as np
 import pytest
 
 from repro.core import Pool, Topology, bandwidth
-from repro.core.cache import ClientCache, _add_interval, _covers, _total
+from repro.core.cache import (ClientCache, _add_interval, _clip, _covers,
+                              _sub_interval, _total)
 from repro.core.interfaces import DFS, make_interface
-
-
-@pytest.fixture()
-def world():
-    pool = Pool(Topology(), materialize=True)
-    cont = pool.create_container("c", oclass="S2")
-    dfs = DFS(cont)
-    dfs.mkdir("/d")
-    return pool, dfs
 
 
 # ---------------- interval helpers ----------------
@@ -29,6 +21,20 @@ def test_interval_merge_and_cover():
     assert _covers(ivs, 5, 25)
     assert not _covers(ivs, 25, 55)
     assert _total(ivs) == 40
+
+
+def test_interval_subtract_and_clip():
+    ivs = [[0, 30], [50, 60]]
+    _sub_interval(ivs, 10, 20)      # punch a hole
+    assert ivs == [[0, 10], [20, 30], [50, 60]]
+    _sub_interval(ivs, 25, 55)      # straddles two intervals
+    assert ivs == [[0, 10], [20, 25], [55, 60]]
+    _sub_interval(ivs, 100, 200)    # disjoint: no-op
+    assert ivs == [[0, 10], [20, 25], [55, 60]]
+    assert _clip(ivs, 5, 22) == [[5, 10], [20, 22]]
+    assert _clip(ivs, 30, 50) == []
+    _sub_interval(ivs, 0, 100)      # swallow everything
+    assert ivs == []
 
 
 # ---------------- hit/miss/readahead ----------------
@@ -244,3 +250,126 @@ def test_local_flows_have_cost():
 def test_cache_mode_validation():
     with pytest.raises(ValueError):
         ClientCache(mode="bogus")
+    with pytest.raises(ValueError):
+        ClientCache(invalidation="bogus")
+
+
+# ---------------- sized (synthetic-payload) path through the cache -------
+def test_sized_path_hits_flushes_and_kind_mismatch(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/sz", client_node=0, process=0)
+    cache = iface.cache_for(0)
+    # write-back absorbs sized writes, fsync flushes them
+    h.write_sized_at(0, 256 << 10)
+    assert cache.dirty_bytes() == 256 << 10
+    h.fsync()
+    assert cache.dirty_bytes() == 0 and iface.cache_stats()["flushes"] == 1
+    # covered sized re-read is a hit; beyond the window is a miss + fill
+    assert h.read_sized_at(0, 64 << 10) == 64 << 10
+    st = iface.cache_stats()
+    assert st["read_hits"] == 1
+    # the entry is sized: a *real* read of the same object bypasses the
+    # cache instead of mixing payload kinds
+    hits_before = st["read_hits"]
+    h.read_at(0, 128)
+    h.write_at(0, b"x" * 16)
+    assert iface.cache_stats()["read_hits"] == hits_before
+    # stats helper
+    assert 0.0 < cache.stats.hit_rate() <= 1.0
+
+
+def test_sized_write_through_readahead_mode(world):
+    pool, dfs = world
+    iface = make_interface("posix-readahead", dfs)
+    h = iface.create("/d/szr", client_node=0, process=0)
+    h.write_sized_at(0, 64 << 10)            # written through, cached valid
+    assert iface.cache_for(0).dirty_bytes() == 0
+    assert h.read_sized_at(0, 32 << 10) == 32 << 10
+    assert iface.cache_stats()["read_hits"] == 1
+
+
+def test_capacity_eviction_flushes_dirty_lru(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:wb_mib=64", dfs)
+    iface.cache_opts["capacity_bytes"] = 2 << 20
+    ha = iface.create("/d/ev_a", client_node=0, process=0)
+    hb = iface.create("/d/ev_b", client_node=0, process=0)
+    cache = iface.cache_for(0)
+    ha.write_at(0, np.zeros(2 << 20, np.uint8))      # fills capacity, dirty
+    hb.write_at(0, np.zeros(1 << 20, np.uint8))      # evicts the LRU entry
+    assert len(cache._entries) == 1                  # /d/ev_a evicted...
+    st = iface.cache_stats()
+    assert st["flush_bytes"] >= 2 << 20              # ...after flushing
+    plain = make_interface("posix", dfs)
+    got = plain.open("/d/ev_a", client_node=1, process=9).read_at(0, 16)
+    np.testing.assert_array_equal(got, np.zeros(16, np.uint8))
+
+
+def test_drop_all_flushes_then_forgets(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/da", client_node=0, process=0)
+    h.write_at(0, b"remount-me")
+    iface.stat("/d/da")
+    cache = iface.cache_for(0)
+    assert cache.cached_bytes() > 0 and cache._dentries
+    inv_before = iface.cache_stats()["invalidations"]
+    iface.drop_caches()
+    assert cache.cached_bytes() == 0 and not cache._dentries
+    assert iface.cache_stats()["invalidations"] == inv_before  # not counted
+    # the flush made the data durable
+    plain = make_interface("posix", dfs)
+    got = plain.open("/d/da", client_node=1, process=9).read_at(0, 10)
+    assert bytes(got) == b"remount-me"
+
+
+def test_trim_to_dirty_extent_keeps_clean_pages_outside(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:page_kib=4", dfs)
+    h = iface.create("/d/trim", client_node=0, process=0)
+    h.write_at(0, b"x" * (16 << 10))          # pages 0-3 valid + dirty
+    h.fsync()                                 # dirty -> clean
+    h.write_at(4 << 10, b"y" * 100)           # page 1 dirty again
+    cache = iface.cache_for(0)
+    e = cache._entries[h.obj.name]
+    cache.trim_to_dirty(h.obj.name, 4 << 10, 8 << 10)   # pages 1-2
+    # page 1's dirty bytes survive, page 2's clean bytes are gone,
+    # pages 0 and 3 (outside the extent) are untouched
+    assert _covers(e.valid, 0, 4 << 10)
+    assert _covers(e.valid, 4 << 10, (4 << 10) + 100)
+    assert not _covers(e.valid, 8 << 10, 12 << 10)
+    assert _covers(e.valid, 12 << 10, 16 << 10)
+    # whole-entry trim: valid collapses to exactly the dirty extents
+    cache.trim_to_dirty(h.obj.name)
+    assert e.valid == e.dirty
+    cache.trim_to_dirty("no-such-entry")      # no-op
+
+
+def test_pages_for_without_extent_covers_known_state(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:page_kib=4", dfs)
+    h = iface.create("/d/pf", client_node=0, process=0)
+    h.write_at(0, b"a" * (4 << 10))           # page 0
+    h.write_at(12 << 10, b"b" * 100)          # page 3
+    cache = iface.cache_for(0)
+    e = cache._entries[h.obj.name]
+    assert cache.pages_for(e) == [0, 3]
+    assert cache.pages_for(e, 4 << 10, 8 << 10) == [1, 2]
+
+
+def test_aborted_tx_dirty_never_flushes(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h0 = iface.create("/d/abf", client_node=0, process=0)
+    tx = dfs.cont.tx_begin()
+    h = iface.dup(h0, client_node=0, process=0, tx=tx)
+    h.write_at(0, b"doomed")
+    # abort via the container only (cache not told): the flush must still
+    # detect the aborted tx and discard, not write punched-epoch data
+    cache = iface.cache_for(0)
+    e = cache._entries[h.obj.name]
+    tx.state = "aborted"
+    cache._flush_entry(e)
+    assert e.dirty == [] and e.tx is None
+    assert iface.cache_stats()["flush_bytes"] == 0

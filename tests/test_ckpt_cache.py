@@ -17,7 +17,6 @@ Three guarantees pinned here:
 import numpy as np
 import pytest
 
-from repro.core import Pool, Topology
 from repro.core.interfaces import DFS, make_interface
 from repro.ckpt import Checkpointer, CheckpointError
 from repro.ckpt import serializer as S
@@ -33,12 +32,6 @@ def make_tree(seed=0, scale=1.0):
         "opt": {"m": np.zeros((32, 64), np.float32),
                 "count": np.asarray(3, np.int32)},
     }
-
-
-def make_world(oclass="S2"):
-    pool = Pool(Topology())
-    cont = pool.create_container("ck", oclass=oclass)
-    return pool, DFS(cont)
 
 
 # ---------------- seed-path reference (PR-1 behaviour, verbatim) ----------
@@ -130,11 +123,11 @@ def _engine_dir_bytes(ph):
 # ---------------- uncached equivalence to the seed path -------------------
 @pytest.mark.parametrize("layout", ["sharded", "shared"])
 @pytest.mark.parametrize("iface_name", ["dfs", "posix"])
-def test_uncached_save_flows_match_seed_path(iface_name, layout):
+def test_uncached_save_flows_match_seed_path(make_world, iface_name, layout):
     tree = make_tree()
 
     def run_seed():
-        pool, dfs = make_world()
+        pool, dfs = make_world(label="ck")
         iface = make_interface(iface_name, dfs)
         dfs.mkdir("/ckpt")
         with pool.sim.phase() as ph:
@@ -143,7 +136,7 @@ def test_uncached_save_flows_match_seed_path(iface_name, layout):
         return pool, dfs, iface, entries, ph
 
     def run_new():
-        pool, dfs = make_world()
+        pool, dfs = make_world(label="ck")
         ck = Checkpointer(dfs, interface=iface_name, layout=layout,
                           n_writers=4)
         with pool.sim.phase() as ph:
@@ -179,8 +172,8 @@ def test_uncached_save_flows_match_seed_path(iface_name, layout):
 @pytest.mark.parametrize("layout", ["sharded", "shared"])
 @pytest.mark.parametrize("iface_name",
                          ["posix-cached", "posix-readahead", "dfs-cached"])
-def test_cached_save_restore_bit_exact(iface_name, layout):
-    pool, dfs = make_world()
+def test_cached_save_restore_bit_exact(make_world, iface_name, layout):
+    pool, dfs = make_world(label="ck")
     ck = Checkpointer(dfs, interface=iface_name, layout=layout, n_writers=4)
     tree = make_tree(seed=11)
     ck.save(1, tree)
@@ -196,9 +189,9 @@ def test_cached_save_restore_bit_exact(iface_name, layout):
     np.testing.assert_array_equal(back2["params"]["w"], tree["params"]["w"])
 
 
-def test_cached_restore_hits_page_cache():
+def test_cached_restore_hits_page_cache(make_world):
     """Restore of a just-written checkpoint is served node-locally."""
-    pool, dfs = make_world()
+    pool, dfs = make_world(label="ck")
     ck = Checkpointer(dfs, interface="posix-cached", layout="sharded",
                       n_writers=4)
     tree = make_tree(seed=2)
@@ -212,10 +205,10 @@ def test_cached_restore_hits_page_cache():
 
 
 # ---------------- torn-save protection under write-back -------------------
-def test_commit_flushes_writeback_before_manifest_visible():
+def test_commit_flushes_writeback_before_manifest_visible(make_world):
     """The naive ordering (manifest visible while leaves sit in a client
     buffer) must be torn; the real save path must not be."""
-    pool, dfs = make_world()
+    pool, dfs = make_world(label="ck")
     ck = Checkpointer(dfs, interface="posix-cached", layout="sharded",
                       n_writers=4)
     tree = make_tree(seed=4)
@@ -253,10 +246,10 @@ def test_commit_flushes_writeback_before_manifest_visible():
     np.testing.assert_array_equal(back["params"]["w"], tree["params"]["w"])
 
 
-def test_aborted_save_leaks_nothing_from_cache():
+def test_aborted_save_leaks_nothing_from_cache(make_world):
     """A crash mid-save aborts the tx: staged cache state is dropped, no
     flush ever lands those bytes, and the next save is unaffected."""
-    pool, dfs = make_world()
+    pool, dfs = make_world(label="ck")
     ck = Checkpointer(dfs, interface="posix-cached", layout="sharded",
                       n_writers=4)
     tree = make_tree(seed=6)
@@ -281,11 +274,11 @@ def test_aborted_save_leaks_nothing_from_cache():
 
 
 # ---------------- multi-client coherence ----------------------------------
-def test_restore_after_foreign_write_sees_new_bytes():
+def test_restore_after_foreign_write_sees_new_bytes(make_world):
     """Client A restores (warming its node caches); client B rewrites the
     same step; A's next restore must see B's bytes — the container
     broadcast invalidated A's cached pages on B's flush."""
-    pool, dfs = make_world()
+    pool, dfs = make_world(label="ck")
     ck_a = Checkpointer(dfs, interface="posix-cached", layout="sharded",
                         n_writers=4)
     ck_b = Checkpointer(dfs, interface="posix-cached", layout="sharded",
@@ -303,10 +296,10 @@ def test_restore_after_foreign_write_sees_new_bytes():
     assert st["invalidations"] > 0
 
 
-def test_gc_through_cached_interface_drops_cached_state():
+def test_gc_through_cached_interface_drops_cached_state(make_world):
     """delete_step through a cached interface invalidates pages + dentries
     for the unlinked files on every client-node cache."""
-    pool, dfs = make_world()
+    pool, dfs = make_world(label="ck")
     ck = Checkpointer(dfs, interface="posix-cached", layout="sharded",
                       n_writers=4)
     tree = make_tree(seed=8)

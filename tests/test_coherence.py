@@ -19,18 +19,9 @@ import pytest
 
 from repro.core import Pool, Topology
 from repro.core.coherence import (BroadcastPolicy, TimeoutPolicy,
-                                  make_policy, normalize_coherence,
-                                  object_token)
+                                  extent_token, make_policy,
+                                  normalize_coherence, object_token)
 from repro.core.interfaces import DFS, make_interface, parse_mount_options
-
-
-@pytest.fixture()
-def world():
-    pool = Pool(Topology(), materialize=True)
-    cont = pool.create_container("c", oclass="S2")
-    dfs = DFS(cont)
-    dfs.mkdir("/d")
-    return pool, dfs
 
 
 # ---------------- mount options / policy construction ----------------
@@ -52,6 +43,42 @@ def test_mount_option_parsing(world):
         make_interface("posix-cached:coherence=bogus", dfs)
     with pytest.raises(KeyError):
         make_interface("not-an-interface:timeout=1", dfs)
+
+
+def test_mount_option_unknown_key_raises(world):
+    pool, dfs = world
+    with pytest.raises(ValueError, match="unknown mount option"):
+        make_interface("posix-cached:refresh=1", dfs)
+    with pytest.raises(ValueError, match="expected key=value"):
+        make_interface("posix-cached:timeout", dfs)
+
+
+def test_mount_option_malformed_numbers_raise(world):
+    pool, dfs = world
+    for opt in ("timeout=fast", "timeout=", "attr_timeout=1s",
+                "readahead=4.5", "wb_mib=big", "page_kib=-1",
+                "timeout=-0.5"):
+        with pytest.raises(ValueError, match="mount option"):
+            make_interface(f"posix-cached:{opt}", dfs)
+
+
+def test_coherence_on_uncached_interface_raises(world):
+    """An interface that never creates a cache must reject coherence and
+    cache-geometry mount options instead of silently ignoring them —
+    except ``coherence=off``, which states what is already true."""
+    pool, dfs = world
+    for name in ("posix:coherence=timeout", "posix:coherence=broadcast",
+                 "posix:timeout=1.0", "dfs:attr_timeout=0.5",
+                 "posix-ioil:coherence=timeout", "mpiio:coherence=broadcast",
+                 "posix:readahead=4", "dfs:wb_mib=8"):
+        with pytest.raises(ValueError, match="caching interface"):
+            make_interface(name, dfs)
+    # consistent spellings still work
+    assert make_interface("posix:coherence=off", dfs).cache_mode == "none"
+    assert make_interface("posix-cached:coherence=off", dfs) \
+        .cache_for(0) is None
+    assert make_interface("posix-cached:readahead=4", dfs) \
+        .cache_for(0).readahead_pages == 4
 
 
 def test_policy_factory():
@@ -102,22 +129,31 @@ def test_broadcast_explicit_equals_default(world):
 
 
 def test_broadcast_counts_storm_messages(world):
-    """One foreign flush delivers one message to every non-origin cache —
-    the write-sharing storm the coherence study quantifies."""
+    """One foreign flush delivers one message to every non-origin *sharer*
+    — the write-sharing storm the coherence study quantifies.  Caches that
+    hold nothing of the object get no message (the engine-side sharer map
+    any real protocol keeps)."""
     pool, dfs = world
     iface = make_interface("posix-cached", dfs)
     handles = [iface.create("/d/s", client_node=0, process=0)]
     for node in range(1, 4):
         handles.append(iface.dup(handles[0], client_node=node, process=node))
-    for h in handles:                        # warm all four node caches
-        h.write_at(0, b"x" * 64)
-        h.fsync()
+    handles[0].write_at(0, b"x" * 64)
+    handles[0].fsync()
+    for h in handles[1:]:                    # warm the sharers' caches
+        h.read_at(0, 64)
     sent_before = iface.coherence_stats()["invalidations_sent"]
     handles[0].write_at(0, b"y" * 64)
     handles[0].fsync()
     st = iface.coherence_stats()
     assert st["policy"] == "broadcast"
-    assert st["invalidations_sent"] - sent_before == 3   # all but origin
+    assert st["invalidations_sent"] - sent_before == 3   # every sharer
+    assert st["invalidations_applied"] >= 3
+    # a write to an object nobody else caches delivers nothing
+    lone = iface.create("/d/lone", client_node=0, process=0)
+    lone.write_at(0, b"z" * 64)
+    lone.fsync()
+    assert iface.coherence_stats()["invalidations_sent"] == sent_before + 3
     # timeout policy: the same event produces zero messages
     iface_t = make_interface("posix-cached:timeout=1.0", dfs)
     ht = [iface_t.create("/d/t", client_node=0, process=0)]
@@ -334,3 +370,291 @@ def test_engine_version_tokens_move_on_mutation(world):
     assert t2 > t1
     obj.punch()
     assert object_token(obj) != t2
+
+
+def test_extent_tokens_move_only_for_touched_cells(world):
+    """Per-extent sub-tokens: a write moves the tokens of the stripe
+    cells it lands in and leaves disjoint extents untouched — the
+    primitive behind page-granular revalidation."""
+    pool, dfs = world
+    obj = dfs.cont.open_array("file:/d/ext")
+    sc = obj.stripe_cell
+    obj.write(0, b"a" * 64)                  # cell 0
+    obj.write(3 * sc, b"b" * 64)             # cell 3
+    t0 = extent_token(obj, 0, sc)
+    t3 = extent_token(obj, 3 * sc, 4 * sc)
+    tmid = extent_token(obj, sc, 3 * sc)     # cells 1-2, untouched
+    obj.write(10, b"A" * 64)                 # cell 0 again
+    assert extent_token(obj, 0, sc) > t0
+    assert extent_token(obj, 3 * sc, 4 * sc) == t3
+    assert extent_token(obj, sc, 3 * sc) == tmid
+    # the whole-object token covers every extent
+    assert object_token(obj) == extent_token(obj, 0, 4 * sc)
+    # punch moves every touched cell
+    obj.punch()
+    assert extent_token(obj, 3 * sc, 4 * sc) > t3
+
+
+# ---------------- page-granular invalidation ----------------
+def test_broadcast_drops_only_overlapping_pages(world):
+    """A foreign write invalidates the pages it overlaps, not the whole
+    entry: disjoint cached ranges keep serving hits."""
+    pool, dfs = world
+    iface = make_interface("posix-cached:page_kib=4,readahead=0", dfs)
+    h0 = iface.create("/d/pg", client_node=0, process=0)
+    h0.write_at(0, bytes(range(256)) * 64)   # 16 KiB = pages 0-3
+    h0.fsync()
+    h0.read_at(0, 16 << 10)                  # cache all four pages
+    cache = iface.cache_for(0)
+    assert cache.cached_bytes() == 16 << 10
+    h1 = iface.dup(h0, client_node=1, process=9)
+    h1.write_at(9 << 10, b"Z" * 1024)        # page 2 only
+    h1.fsync()
+    # pages 0-1 and 3 survive; page 2 dropped
+    assert cache.cached_bytes() == 12 << 10
+    hits = iface.cache_stats()["read_hits"]
+    assert bytes(h0.read_at(0, 4 << 10)) == bytes(range(256)) * 16
+    assert iface.cache_stats()["read_hits"] == hits + 1   # page 0 hit
+    got = h0.read_at(8 << 10, 4 << 10)       # page 2: honest miss
+    assert bytes(got[1024:2048]) == b"Z" * 1024
+    st = iface.coherence_stats()
+    assert st["invalidations_applied"] >= 1
+
+
+def test_whole_object_invalidation_mount_option(world):
+    """``inval=object`` recovers the pre-page-granular behaviour: any
+    foreign write drops the whole entry (the CO5 contrast knob)."""
+    pool, dfs = world
+    iface = make_interface("posix-cached:page_kib=4,inval=object", dfs)
+    assert iface.cache_for(0).invalidation == "object"
+    h0 = iface.create("/d/wo", client_node=0, process=0)
+    h0.write_at(0, b"x" * (16 << 10))
+    h0.fsync()
+    h0.read_at(0, 16 << 10)
+    h1 = iface.dup(h0, client_node=1, process=9)
+    h1.write_at(9 << 10, b"Z" * 16)          # tiny disjoint-page write...
+    h1.fsync()
+    assert iface.cache_for(0).cached_bytes() == 0   # ...drops everything
+    with pytest.raises(ValueError):
+        make_interface("posix-cached:inval=bogus", dfs).cache_for(0)
+
+
+def test_timeout_revalidates_only_touched_pages(world):
+    """Per-page leases + extent tokens: after expiry, a foreign write to
+    a *disjoint* stripe renews our pages (reval hit, no re-fetch); only
+    pages whose cells were touched drop."""
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=0.5,readahead=0", dfs)
+    h0 = iface.create("/d/tp", client_node=0, process=0)
+    sc = h0.obj.stripe_cell
+    h0.write_at(0, b"m" * 1024)              # our stripe: cell 0
+    h0.fsync()
+    h0.read_at(0, 1024)
+    h1 = iface.dup(h0, client_node=1, process=9)
+    h1.write_at(4 * sc, b"f" * 1024)         # foreign stripe: cell 4
+    h1.fsync()
+    pool.sim.clock.advance(1.0)              # expire the lease
+    misses = iface.cache_stats()["read_misses"]
+    assert bytes(h0.read_at(0, 1024)) == b"m" * 1024
+    p0 = iface.cache_for(0).policy
+    assert p0.stats.revalidations == 1 and p0.stats.reval_hits == 1
+    assert p0.stats.reval_misses == 0
+    assert iface.cache_stats()["read_misses"] == misses   # no re-fetch
+    # now a foreign write INTO our stripe: the same expiry path drops it
+    h1.write_at(0, b"F" * 1024)
+    h1.fsync()
+    pool.sim.clock.advance(1.0)
+    assert bytes(h0.read_at(0, 1024)) == b"F" * 1024
+    assert p0.stats.reval_misses == 1
+
+
+def test_timeout_staleness_tracked_per_page(world):
+    """Staleness marks only the written pages: reads of other pages of
+    the same object serve fresh, unstale data."""
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=5.0,page_kib=4,"
+                           "readahead=0", dfs)
+    h0 = iface.create("/d/ps", client_node=0, process=0)
+    h0.write_at(0, b"x" * (8 << 10))         # pages 0-1
+    h0.fsync()
+    h0.read_at(0, 8 << 10)
+    h1 = iface.dup(h0, client_node=1, process=9)
+    h1.write_at(0, b"y" * 16)                # page 0 goes stale
+    h1.fsync()
+    p0 = iface.cache_for(0).policy
+    h0.read_at(4 << 10, 4 << 10)             # page 1: fresh, no stale hit
+    assert p0.stats.stale_hits == 0
+    h0.read_at(0, 16)                        # page 0: stale (within lease)
+    assert p0.stats.stale_hits == 1
+
+
+# ---------------- costed broadcast delivery ----------------
+def test_broadcast_delivery_charges_fabric_time(world):
+    """Invalidation delivery is no longer a free oracle: a flush with a
+    sharer pays per-recipient fabric time inside the phase."""
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h0 = iface.create("/d/cost", client_node=0, process=0)
+    h0.write_at(0, b"w" * 1024)
+    h0.fsync()
+    readers = [iface.dup(h0, client_node=n, process=n) for n in range(1, 8)]
+    for h in readers:
+        h.read_at(0, 1024)                   # 7 sharers now hold the page
+    with pool.sim.phase() as ph:
+        h0.write_at(0, b"W" * 1024)
+        h0.fsync()
+    assert len(ph.coh_flows) == 7
+    hw = pool.sim.hw
+    # the origin blocked for 7 deliveries on top of the write itself
+    assert ph.elapsed >= 7 * (hw.coh_msg_time + 2 * hw.fabric_lat)
+    # free-oracle contrast: zeroing the delivery cost removes the charge
+    import dataclasses as _dc
+    pool.sim.hw = _dc.replace(hw, coh_msg_time=0.0, coh_msg_bytes=0)
+    for h in readers:
+        h.read_at(0, 1024)
+    with pool.sim.phase() as ph2:
+        h0.write_at(0, b"V" * 1024)
+        h0.fsync()
+    assert len(ph2.coh_flows) == 7
+    assert ph2.elapsed < ph.elapsed
+
+
+def test_unlink_does_not_charge_the_unlinker(world):
+    """A punch/unlink with no other sharer delivers no revocation: the
+    unlinker's own cache drops locally, free, and the op is attributed to
+    the calling process — not a phantom message to node 0."""
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h = iface.create("/d/self_rm", client_node=2, process=5)
+    h.write_at(0, b"bye")
+    h.fsync()
+    h.read_at(0, 3)
+    sent_before = iface.coherence_stats()["invalidations_sent"]
+    with pool.sim.phase() as ph:
+        iface.unlink("/d/self_rm", client_node=2, process=5)
+    assert iface.coherence_stats()["invalidations_sent"] == sent_before
+    assert len(ph.coh_flows) == 0
+    assert iface.cache_for(2).cached_bytes() == 0    # still dropped
+    # a real sharer on another node DOES get the (costed) revocation
+    h2 = iface.create("/d/sh_rm", client_node=0, process=0)
+    h2.write_at(0, b"bye")
+    h2.fsync()
+    iface.dup(h2, client_node=1, process=1).read_at(0, 3)
+    with pool.sim.phase() as ph2:
+        iface.unlink("/d/sh_rm", client_node=0, process=0)
+    assert iface.coherence_stats()["invalidations_sent"] == sent_before + 1
+    assert len(ph2.coh_flows) == 1
+
+
+def test_cache_opts_with_coherence_off_raise(world):
+    """Geometry options on a mount that coherence=off turns uncached are
+    rejected, same as on a natively uncached interface."""
+    pool, dfs = world
+    with pytest.raises(ValueError, match="caching interface"):
+        make_interface("posix-cached:coherence=off,readahead=4", dfs)
+
+
+def test_timeout_notifications_charge_nothing(world):
+    pool, dfs = world
+    iface = make_interface("posix-cached:timeout=1.0", dfs)
+    h0 = iface.create("/d/free", client_node=0, process=0)
+    h0.write_at(0, b"w" * 1024)
+    h0.fsync()
+    h1 = iface.dup(h0, client_node=1, process=9)
+    h1.read_at(0, 1024)
+    with pool.sim.phase() as ph:
+        h0.write_at(0, b"W" * 1024)
+        h0.fsync()
+    assert len(ph.coh_flows) == 0            # leases: no write-time traffic
+
+
+def test_tx_snapshot_fill_cannot_launder_stale_bytes(world):
+    """A read-miss under an open transaction fills at the tx's snapshot
+    epoch — those bytes may be historical relative to the committed view,
+    so they must NOT populate the cache with a fresh lease (current
+    tokens over old bytes would renew forever and unbound staleness)."""
+    pool, dfs = world
+    tau = 0.5
+    iface = make_interface(f"posix-cached:timeout={tau}", dfs)
+    h0 = iface.create("/d/ld", client_node=0, process=0)
+    h0.write_at(0, b"AAA-AAA-AAA")
+    h0.fsync()
+    h0.read_at(0, 11)                        # lease granted
+    tx = dfs.cont.tx_begin()                 # snapshot BEFORE the overwrite
+    ht = iface.dup(h0, client_node=0, process=0, tx=tx)
+    h1 = iface.dup(h0, client_node=1, process=9)
+    h1.write_at(0, b"BBB-BBB-BBB")
+    h1.fsync()                               # committed foreign overwrite
+    pool.sim.clock.advance(tau + 0.1)        # expire: reval drops the page
+    # the tx read legitimately sees its snapshot (pre-overwrite bytes)...
+    assert bytes(ht.read_at(0, 11)) == b"AAA-AAA-AAA"
+    tx.commit()
+    pool.sim.clock.advance(10 * tau)         # far past any lease
+    # ...but the committed view must never be stuck on them
+    assert bytes(h0.read_at(0, 11)) == b"BBB-BBB-BBB"
+
+
+def test_commit_invalidates_caches_that_refetched_during_staging(world):
+    """A transaction's staged writes only change what readers see at
+    COMMIT.  A broadcast cache that (re)fetched the still-current bytes
+    while the tx was staging must be invalidated when the commit lands —
+    the staging-time notification alone cannot do it."""
+    pool, dfs = world
+    iface = make_interface("posix-cached", dfs)
+    h0 = iface.create("/d/txc", client_node=0, process=0)
+    h0.write_at(0, b"old-old-old")
+    h0.fsync()
+    ha = iface.dup(h0, client_node=1, process=1)
+    assert bytes(ha.read_at(0, 11)) == b"old-old-old"
+    tx = dfs.cont.tx_begin()
+    hb = iface.dup(h0, client_node=2, process=2, tx=tx)
+    hb.write_at(0, b"new-new-new")
+    hb.fsync()                       # staged at the tx epoch, invisible
+    # node 1 re-reads BETWEEN staging and commit: correctly sees (and
+    # re-caches) the committed pre-tx bytes
+    assert bytes(ha.read_at(0, 11)) == b"old-old-old"
+    tx.commit()
+    # the commit replayed the write log: node 1's re-cached pages dropped
+    assert bytes(ha.read_at(0, 11)) == b"new-new-new"
+    # same hole under timeout coherence: the commit marks pages stale, so
+    # staleness (and with it the tau bound) starts counting at commit
+    it = make_interface("posix-cached:timeout=0.4", dfs)
+    hc = it.open("/d/txc", client_node=3, process=3)
+    assert bytes(hc.read_at(0, 11)) == b"new-new-new"
+    tx2 = dfs.cont.tx_begin()
+    hd = iface.dup(h0, client_node=2, process=2, tx=tx2)
+    hd.write_at(0, b"fin-fin-fin")
+    hd.fsync()
+    tx2.commit()
+    pool.sim.clock.advance(0.5)      # past the lease
+    assert bytes(hc.read_at(0, 11)) == b"fin-fin-fin"
+
+
+# ---------------- mixed-policy fleets ----------------
+def test_off_writers_reach_timeout_and_broadcast_caches(world):
+    """Two mounts of one container with different policies: a direct-I/O
+    (coherence=off) writer still bumps engine tokens — so timeout caches
+    revalidate correctly — and still triggers notify fan-out — so
+    broadcast caches drop the overlapping pages."""
+    pool, dfs = world
+    off = make_interface("posix:coherence=off", dfs)
+    bc = make_interface("posix-cached", dfs)
+    to = make_interface("posix-cached:timeout=0.5", dfs)
+    hw_ = off.create("/d/mx", client_node=0, process=0)
+    hw_.write_at(0, b"v1-v1-v1")
+    hb = bc.open("/d/mx", client_node=1, process=1)
+    ht = to.open("/d/mx", client_node=2, process=2)
+    assert bytes(hb.read_at(0, 8)) == b"v1-v1-v1"
+    assert bytes(ht.read_at(0, 8)) == b"v1-v1-v1"
+    hw_.write_at(0, b"v2-v2-v2")             # direct I/O: visible at once
+    # broadcast mount heard about the uncached writer
+    assert bytes(hb.read_at(0, 8)) == b"v2-v2-v2"
+    assert bc.coherence_stats()["invalidations_sent"] >= 1
+    # timeout mount serves its lease, then the token (bumped by the
+    # off-writer) fails revalidation and the fresh bytes appear
+    assert bytes(ht.read_at(0, 8)) == b"v1-v1-v1"
+    pool.sim.clock.advance(1.0)
+    assert bytes(ht.read_at(0, 8)) == b"v2-v2-v2"
+    st = to.coherence_stats()
+    assert st["reval_misses"] >= 1
+    assert st["max_staleness_s"] <= 0.5 + 1e-9

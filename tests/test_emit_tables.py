@@ -1,0 +1,93 @@
+"""emit_tables splicing must be idempotent: running it N times over
+EXPERIMENTS.md yields byte-identical output, never duplicates a section,
+and leaves the prose between markers alone."""
+import json
+import shutil
+
+import pytest
+
+from benchmarks import emit_tables
+
+
+@pytest.fixture()
+def sandbox(tmp_path, monkeypatch):
+    """Run emit_tables against a copy of the repo's EXPERIMENTS.md and
+    artifacts so the test never mutates the tracked files."""
+    root = emit_tables.ROOT
+    shutil.copy(root / "EXPERIMENTS.md", tmp_path / "EXPERIMENTS.md")
+    art = tmp_path / "artifacts"
+    art.mkdir()
+    for f in (root / "artifacts").glob("*.json"):
+        shutil.copy(f, art / f.name)
+    monkeypatch.setattr(emit_tables, "ROOT", tmp_path)
+    return tmp_path
+
+
+def test_splice_twice_is_byte_identical(sandbox):
+    emit_tables.main()
+    first = (sandbox / "EXPERIMENTS.md").read_bytes()
+    emit_tables.main()
+    second = (sandbox / "EXPERIMENTS.md").read_bytes()
+    assert first == second
+
+
+def test_splice_never_duplicates_sections(sandbox):
+    for _ in range(3):
+        emit_tables.main()
+    text = (sandbox / "EXPERIMENTS.md").read_text()
+    for mark in (emit_tables.CACHE_MARK, emit_tables.SWEEP_MARK,
+                 emit_tables.CKPT_MARK, emit_tables.ELASTIC_MARK,
+                 emit_tables.MDTEST_MARK, emit_tables.COH_MARK,
+                 emit_tables.MARK):
+        assert text.count(mark) == 1, mark
+    # one heading per spliced study, not one per run
+    for heading in ("### Write-sharing sweep", "### Timeout tau frontier",
+                    "### Disjoint-stripe sharers", "### Mixed-policy fleet",
+                    "### IOR small-transfer caching study"):
+        assert text.count(heading) == 1, heading
+
+
+def test_splice_from_bare_skeleton(sandbox):
+    """A fresh EXPERIMENTS.md (skeleton) reaches the same fixed point."""
+    (sandbox / "EXPERIMENTS.md").write_text(emit_tables.SKELETON)
+    emit_tables.main()
+    first = (sandbox / "EXPERIMENTS.md").read_bytes()
+    emit_tables.main()
+    assert (sandbox / "EXPERIMENTS.md").read_bytes() == first
+    text = first.decode()
+    assert text.count("### Write-sharing sweep") == 1
+
+
+def test_splice_replaces_stale_body(sandbox):
+    """Splicing replaces everything between the marker and the next
+    section heading — stale rows from an earlier run never survive."""
+    exp = sandbox / "EXPERIMENTS.md"
+    text = exp.read_text()
+    stale = emit_tables.COH_MARK + "\nSTALE-ROW-FROM-OLD-RUN\n"
+    exp.write_text(text.replace(emit_tables.COH_MARK, stale))
+    emit_tables.main()
+    out = exp.read_text()
+    assert "STALE-ROW-FROM-OLD-RUN" not in out
+    assert out.count(emit_tables.COH_MARK) == 1
+
+
+def test_claims_lines_render_pass_and_fail(sandbox):
+    rows = [{"mode": "claims", "claim": "CO9 fake", "ok": True,
+             "detail": "d1"},
+            {"mode": "claims", "claim": "CO8 fake", "ok": False,
+             "detail": "d2"}]
+    lines = emit_tables._claims_lines(rows)
+    assert any("[PASS]" in ln and "CO9" in ln for ln in lines)
+    assert any("[FAIL]" in ln and "CO8" in ln for ln in lines)
+    assert emit_tables._claims_lines(rows, prefixes=("CO9",))[0].count(
+        "CO9") == 1
+
+
+def test_coherence_table_renders_all_studies(sandbox):
+    rows = json.loads(
+        (sandbox / "artifacts" / "coherence_bench.json").read_text())
+    body = emit_tables.coherence_table(rows)
+    for heading in ("Write-sharing sweep", "tau frontier",
+                    "Disjoint-stripe", "Mixed-policy fleet"):
+        assert heading in body
+    assert "broadcast-free" in body           # the free-oracle contrast row
