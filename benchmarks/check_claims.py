@@ -1,0 +1,87 @@
+"""Validate the claim rows of benchmark artifacts — the one CI claim gate.
+
+Every bench driver appends ``{"mode": "claims", "claim": ..., "ok": ...,
+"detail": ...}`` rows to its artifact JSON.  This script is what CI runs
+after each bench-smoke step (replacing the per-step inline heredocs):
+
+    python benchmarks/check_claims.py artifacts/ckpt_bench.json \
+        --require C8 C9 C10
+
+It fails (exit 1) when an artifact has no claim rows at all, when a
+required claim prefix was never emitted (a driver silently dropping a
+claim must not pass), or when any emitted claim is not ``ok``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def check_file(path: str, require: list[str]) -> list[str]:
+    """-> list of failure messages for one artifact (empty = pass)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return [f"{path}: artifact missing (bench did not run?)"]
+    try:
+        rows = json.loads(p.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path}: unreadable JSON ({e})"]
+    claims = [r for r in rows if isinstance(r, dict)
+              and r.get("mode") == "claims"]
+    errors = []
+    if not claims:
+        errors.append(f"{path}: no claim rows emitted")
+    for prefix in require:
+        if not any(c.get("claim", "").startswith(prefix) for c in claims):
+            errors.append(f"{path}: required claim {prefix!r} not emitted")
+    for c in claims:
+        badge = "PASS" if c.get("ok") else "FAIL"
+        print(f"  [{badge}] {c.get('claim', '?')}")
+    bad = [c.get("claim", "?") for c in claims if not c.get("ok")]
+    if bad:
+        errors.append(f"{path}: failed claims: {bad}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+",
+                    help="bench artifact JSON file(s) with claim rows")
+    ap.add_argument("--require", nargs="*", default=[], metavar="PREFIX",
+                    help="claim-name prefixes that must be present "
+                         "(matched against the union of all artifacts)")
+    args = ap.parse_args(argv)
+
+    errors: list[str] = []
+    per_file_require = args.require if len(args.artifacts) == 1 else []
+    for path in args.artifacts:
+        print(f"{path}:")
+        errors.extend(check_file(path, per_file_require))
+    if len(args.artifacts) > 1 and args.require:
+        all_claims: list[str] = []
+        for path in args.artifacts:
+            p = pathlib.Path(path)
+            if p.exists():
+                try:
+                    all_claims.extend(
+                        r.get("claim", "") for r in json.loads(p.read_text())
+                        if isinstance(r, dict) and r.get("mode") == "claims")
+                except json.JSONDecodeError:
+                    pass
+        for prefix in args.require:
+            if not any(c.startswith(prefix) for c in all_claims):
+                errors.append(f"required claim {prefix!r} not emitted by "
+                              "any artifact")
+    if errors:
+        print("\nclaim gate FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("claim gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,8 +8,10 @@ into EXPERIMENTS.md: the §Roofline tables (dry-run artifacts, at the
 (artifacts/ckpt_bench.json, <!-- CKPT CACHE TABLES -->), the elastic
 restore study (elastic-mode rows of the same file, <!-- ELASTIC
 TABLES -->), the metadata-caching study (artifacts/mdtest.json,
-<!-- MDTEST CACHE TABLES -->) and the multi-client coherence study
-(artifacts/coherence_bench.json, <!-- COHERENCE TABLES -->)."""
+<!-- MDTEST CACHE TABLES -->), the multi-client coherence study
+(artifacts/coherence_bench.json, <!-- COHERENCE TABLES -->) and the
+serving-tier study (artifacts/serve_bench.json, <!-- SERVE
+TABLES -->)."""
 from __future__ import annotations
 
 import json
@@ -27,6 +29,7 @@ CKPT_MARK = "<!-- CKPT CACHE TABLES -->"
 ELASTIC_MARK = "<!-- ELASTIC TABLES -->"
 MDTEST_MARK = "<!-- MDTEST CACHE TABLES -->"
 COH_MARK = "<!-- COHERENCE TABLES -->"
+SERVE_MARK = "<!-- SERVE TABLES -->"
 
 SKELETON = f"""# EXPERIMENTS
 
@@ -53,6 +56,10 @@ SKELETON = f"""# EXPERIMENTS
 ## §Coherence
 
 {COH_MARK}
+
+## §Serving
+
+{SERVE_MARK}
 
 ## §Roofline
 
@@ -289,6 +296,76 @@ def coherence_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def serve_table(rows: list[dict]) -> str:
+    """The serving-tier study: hot-session restore across interface x
+    leaf size, the decode-fleet sweep across policy x reader count, plus
+    the SV claims."""
+    out = []
+    hrows = [r for r in rows if r.get("mode") == "hot"]
+    if hrows:
+        sizes = sorted({r["leaf_kib"] for r in hrows})
+        ifaces = sorted({r["interface"] for r in hrows})
+        out += [f"### Hot-session restore ({hrows[0]['n_leaves']} "
+                "leaves/session, restore GiB/s by leaf size)", "",
+                "| interface | " + " | ".join(f"{s} KiB" for s in sizes)
+                + f" | hit rate @ {sizes[0]} KiB |",
+                "|---|" + "---|" * (len(sizes) + 1)]
+        for iface in ifaces:
+            cells, hit = [], "-"
+            for s in sizes:
+                r = next((r for r in hrows if r["interface"] == iface
+                          and r["leaf_kib"] == s), None)
+                cells.append(f"{r['restore_gib_s']:.2f}" if r else "-")
+                # report the hit rate at the smallest (claim-point) size
+                if r and s == sizes[0] and "hit_rate" in r:
+                    hit = f"{r['hit_rate']:.2f}"
+            out.append(f"| {iface} | " + " | ".join(cells) + f" | {hit} |")
+        out.append("")
+    frows = [r for r in rows if r.get("mode") == "fleet"]
+    if frows:
+        r0 = frows[0]
+        counts = sorted({r["readers"] for r in frows})
+        out += [f"### Serving fleet (1 prefill writer, N decode readers; "
+                f"{r0['n_leaves']} x {r0['leaf_kib']} KiB leaves, "
+                f"{r0['publishes']} publishes x {r0['token_steps']} token "
+                f"steps, tau={r0['tau_s']}s)", "",
+                "| family | policy | metric | "
+                + " | ".join(f"N={c}" for c in counts) + " |",
+                "|---|---|---|" + "---|" * len(counts)]
+
+        def cell(family, policy, clients, metric, fmt):
+            for r in frows:
+                if (r["family"] == family and r["policy"] == policy
+                        and r["readers"] == clients):
+                    return fmt.format(r[metric])
+            return "-"
+
+        for family in sorted({r["family"] for r in frows}):
+            for policy in ("off", "broadcast", "timeout"):
+                if not any(r["family"] == family and r["policy"] == policy
+                           for r in frows):
+                    continue
+                out.append(f"| {family} | {policy} | per-reader GiB/s | "
+                           + " | ".join(cell(family, policy, c,
+                                             "per_reader_gib_s", "{:.2f}")
+                                        for c in counts) + " |")
+                out.append(f"| {family} | {policy} | messages | "
+                           + " | ".join(cell(family, policy, c, "messages",
+                                             "{:,}")
+                                        for c in counts) + " |")
+            if any(r["family"] == family and r["policy"] == "timeout"
+                   for r in frows):
+                out.append(f"| {family} | timeout | max staleness (s) | "
+                           + " | ".join(cell(family, "timeout", c,
+                                             "max_staleness_s", "{:.2f}")
+                                        for c in counts) + " |")
+        out.append("")
+    if not out:
+        return ""
+    out.extend(_claims_lines(rows, prefixes=("SV",)))
+    return "\n".join(out)
+
+
 def ckpt_cache_table(rows: list[dict]) -> str:
     """The cached-vs-uncached checkpoint study, one row per
     interface x layout, plus the validated C8/C9 claims."""
@@ -411,12 +488,20 @@ def main() -> None:
                                          "tau", "disjoint", "mixed"))
         if body:
             text = _splice(text, COH_MARK, body)
+    n_serve = 0
+    serve_json = ROOT / "artifacts" / "serve_bench.json"
+    if serve_json.exists():
+        rows = json.loads(serve_json.read_text())
+        body = serve_table(rows)
+        n_serve = sum(1 for r in rows if r.get("mode") in ("hot", "fleet"))
+        if body:
+            text = _splice(text, SERVE_MARK, body)
     exp.write_text(text)
     print(f"spliced tables: roofline base={len(base)} opt={len(opt)} "
           f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}; "
           f"ior sweep rows={n_sweep}; ckpt cached rows={n_ckpt}; "
           f"elastic rows={n_elastic}; mdtest rows={n_md}; "
-          f"coherence rows={n_coh}")
+          f"coherence rows={n_coh}; serve rows={n_serve}")
 
 
 if __name__ == "__main__":

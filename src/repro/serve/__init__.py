@@ -1,3 +1,5 @@
+from .kvstore import KVCacheStore, KVStoreError
 from .serve_step import make_decode_step, make_prefill_step
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+__all__ = ["KVCacheStore", "KVStoreError", "make_decode_step",
+           "make_prefill_step"]

@@ -1,0 +1,267 @@
+"""Session-oriented KV-cache store: the serving tier on the cached I/O
+pipeline.
+
+Inference serving is the paper's fine-grained-I/O regime embodied: a
+prefill writer publishes a session's KV cache as many small leaves, and a
+fleet of decode readers re-reads them every token step — single writer,
+many readers, small repeated accesses.  Exactly where interface choice and
+client caching dominate (arXiv 2409.18682), and exactly the traffic shape
+the coherence layer's single-writer/many-reader guarantees are for.
+
+Like the checkpoint stack, the store holds no raw per-call I/O context —
+every byte moves through ``AccessInterface``/``FileHandle`` on whatever
+mount string the deployment chose (``dfs``, ``posix-cached:timeout=0.5``,
+``daos-array``, ...), so the whole interface/cache/coherence matrix is a
+live tuning surface for the serving tier.
+
+Layout of one session:
+
+* leaves       — one file per pytree leaf, ``{base}/{session}{path}.leaf``,
+                 placed across client nodes by the interface's
+                 topology-derived ``place_writer`` (leaf ``i`` is written
+                 by rank ``i % n_writers``);
+* manifest     — a 3-way-replicated KV object per session (leaf table:
+                 file, nbytes, checksum, writer rank, dtype/shape; plus
+                 the pytree skeleton and the published ``step``), written
+                 LAST inside the same epoch transaction as the leaves;
+* session index — one KV record per session under the store base, written
+                 in the same transaction, so namespace-less interfaces
+                 (``daos-array``) can still discover and GC sessions.
+
+The transaction is the torn-snapshot guard: the container's commit barrier
+flushes any write-back data staged under the tx *before* the manifest
+becomes visible, and an abort punches the staged epoch — so a writer that
+dies mid-offload leaves the previous snapshot of the session intact and
+restorable, never a half-published one.
+
+``restore`` defaults to reading every leaf on the node that wrote it (a
+hot just-offloaded session restores from warm page caches); a decode
+reader passes its own ``client_node`` instead, pulling every leaf through
+that node's cache tier — the many-reader re-read regime the serve
+benchmark measures.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import NotFoundError
+from ..core.interfaces import AccessInterface, DFS, make_interface
+from ..ckpt import serializer as S
+
+
+class KVStoreError(IOError):
+    pass
+
+
+def _skeleton(tree) -> dict:
+    """JSON-able shape of a pytree (container kinds only), stored in the
+    manifest so ``restore(session)`` needs no caller-side template."""
+    if isinstance(tree, dict):
+        return {"kind": "dict",
+                "children": {k: _skeleton(tree[k]) for k in sorted(tree)}}
+    if isinstance(tree, (list, tuple)):
+        return {"kind": "tuple" if isinstance(tree, tuple) else "list",
+                "children": [_skeleton(v) for v in tree]}
+    return {"kind": "leaf"}
+
+
+def _template(skel: dict):
+    kind = skel["kind"]
+    if kind == "dict":
+        return {k: _template(v) for k, v in skel["children"].items()}
+    if kind in ("list", "tuple"):
+        vals = [_template(v) for v in skel["children"]]
+        return tuple(vals) if kind == "tuple" else vals
+    return None
+
+
+class KVCacheStore:
+    def __init__(self, dfs: DFS, interface: str | AccessInterface = "dfs",
+                 oclass: str | None = None, base: str = "/kvcache",
+                 n_writers: int = 8,
+                 verify_on_restore: bool = True) -> None:
+        self.dfs = dfs
+        self.iface = (interface if isinstance(interface, AccessInterface)
+                      else make_interface(interface, dfs))
+        self.oclass = oclass or dfs.default_oclass
+        self.base = base.rstrip("/")
+        self.n_writers = max(1, n_writers)
+        # serving tolerates bounded staleness by design: a reader mount on
+        # a timeout lease may see the previous step's bytes for up to tau,
+        # which the manifest's (always-fresh) checksums would flag — so
+        # reader-fleet stores run with verification off and rely on the
+        # coherence layer's staleness bound instead
+        self.verify = verify_on_restore
+        try:
+            self.iface.mkdir(self.base)
+        except Exception:
+            pass
+
+    # ------------- paths / manifests -------------
+    def _sess_dir(self, session: str) -> str:
+        return f"{self.base}/{session}"
+
+    def _manifest_kv(self, session: str):
+        # manifests are tiny and precious: always 3-way replicated
+        return self.dfs.cont.open_kv(
+            f"kvsession:{self._sess_dir(session)}", oclass="RP_3GX")
+
+    def _sessions_kv(self):
+        """Session index for discovery/GC — the only enumeration that
+        works on namespace-less interfaces (daos-array)."""
+        return self.dfs.cont.open_kv(f"kvsessions:{self.base}",
+                                     oclass="RP_3GX")
+
+    def manifest(self, session: str) -> dict:
+        try:
+            raw = self._manifest_kv(session).get("manifest", "json")
+        except (NotFoundError, KeyError) as e:
+            raise KVStoreError(f"no manifest for session {session!r}") from e
+        return S.manifest_loads(bytes(raw))
+
+    def step(self, session: str) -> int:
+        """The last published step of a session (manifest-recorded)."""
+        return int(self.manifest(session)["step"])
+
+    def sessions(self) -> list[str]:
+        """Published sessions.  The index KV is the source of truth: it is
+        written inside each offload's transaction, so a torn offload never
+        lists (the session *directory* may predate the tx, but directories
+        are not publications) — and it is the only enumeration that exists
+        on namespace-less interfaces."""
+        try:
+            return sorted(str(d) for d in self._sessions_kv().list_dkeys())
+        except Exception:
+            return []
+
+    def nbytes(self, session: str) -> int:
+        """Total leaf payload of a session's published snapshot."""
+        man = self.manifest(session)
+        return sum(int(e["nbytes"]) for e in man["leaves"].values())
+
+    # ------------- offload -------------
+    def offload(self, session: str, cache, step: int = 0,
+                extra_meta: dict | None = None) -> dict:
+        """Publish one session's KV cache as an atomic snapshot.
+
+        Re-offloading an existing session (a new ``step``) overwrites its
+        leaves in place — through the object layer, so attached reader
+        caches hear about every update via their coherence policy."""
+        cont = self.dfs.cont
+        sdir = self._sess_dir(session)
+        try:
+            self.iface.mkdir(sdir)
+        except Exception:
+            pass
+        try:        # previous snapshot's leaf set, for post-commit GC
+            prior_files = {e["file"] for e in
+                           self.manifest(session)["leaves"].values()}
+        except KVStoreError:
+            prior_files = set()
+        leaves = S.flatten_tree(cache)
+        entries: dict = {}
+        tx = cont.tx_begin()
+        try:
+            for i, (path, leaf) in enumerate(leaves):
+                raw, meta = S.leaf_to_bytes(leaf)
+                writer = i % self.n_writers
+                node, proc = self.iface.place_writer(writer)
+                h = self.iface.create(f"{sdir}{path}.leaf",
+                                      oclass=self.oclass, client_node=node,
+                                      process=proc, tx=tx)
+                h.write_at(0, raw)
+                entries[path] = {**meta, "csum": S.checksum_leaf(raw),
+                                 "file": f"{sdir}{path}.leaf",
+                                 "nbytes": int(raw.size), "writer": writer}
+            manifest = S.manifest_dumps(entries, {
+                "session": str(session), "step": int(step),
+                "n_writers": self.n_writers, "skeleton": _skeleton(cache),
+                **(extra_meta or {})})
+            tx.put_kv(self._manifest_kv(session), "manifest", "json",
+                      manifest)
+            tx.put_kv(self._sessions_kv(), str(session), "step",
+                      str(int(step)).encode())
+            # commit barrier: write-back data staged under this tx reaches
+            # the engines BEFORE the manifest becomes visible — a torn
+            # offload can never be restored
+            tx.commit()
+        except BaseException:
+            tx.abort()
+            raise
+        # a republish with a smaller pytree strands the previous
+        # snapshot's extra leaves: the new manifest no longer names them,
+        # so evict's manifest-driven sweep — the only one that exists on
+        # namespace-less interfaces — would never collect them.  GC them
+        # now, AFTER the commit (an abort above must leave them live:
+        # they still belong to the restorable prior snapshot).
+        stale = prior_files - {e["file"] for e in entries.values()}
+        for f in sorted(stale):
+            try:
+                self.iface.unlink(f)
+            except (FileNotFoundError, KeyError):
+                pass
+        return {"session": str(session), "step": int(step),
+                "leaves": entries}
+
+    # ------------- restore -------------
+    def restore(self, session: str, client_node: int | None = None,
+                process: int | None = None):
+        """Rebuild a session's cache pytree from its published snapshot.
+
+        ``client_node=None`` reads each leaf on the node that wrote it
+        (hot-session restore: warm page caches).  A decode reader passes
+        its own node: every leaf then flows through that node's cache."""
+        man = self.manifest(session)
+        items: dict = {}
+        for path, entry in man["leaves"].items():
+            if client_node is None:
+                node, proc = self.iface.place_writer(entry["writer"])
+            else:
+                node = client_node
+                proc = client_node if process is None else process
+            h = self.iface.open(entry["file"], client_node=node,
+                                process=proc)
+            raw = np.asarray(h.read_at(0, entry["nbytes"]))
+            if self.verify:
+                got = S.checksum_leaf(raw)
+                if got != entry["csum"]:
+                    raise KVStoreError(
+                        f"checksum mismatch for {session!r}{path}: "
+                        f"{got:#x} != {entry['csum']:#x}")
+            items[path] = S.bytes_to_leaf(raw, entry)
+        return S.unflatten_tree(items, _template(man["skeleton"]))
+
+    # ------------- lifecycle (gc) -------------
+    def evict(self, session: str) -> None:
+        """Remove every trace of one session: leaf files (from the
+        manifest, so namespace-less interfaces GC too), stray directory
+        entries, the manifest KV, the session-index record, and the
+        session directory entry itself."""
+        sdir = self._sess_dir(session)
+        files: list[str] = []
+        try:
+            man = self.manifest(session)
+        except KVStoreError:
+            man = None
+        if man is not None:
+            files.extend(e["file"] for e in man["leaves"].values())
+        for f in dict.fromkeys(files):          # dedup, keep order
+            try:
+                self.iface.unlink(f)
+            except (FileNotFoundError, KeyError):
+                pass
+        try:
+            strays = self.iface.readdir(sdir)
+        except Exception:
+            strays = []
+        for name in strays:                     # stray (non-manifest) files
+            try:
+                self.iface.unlink(f"{sdir}/{name}")
+            except (FileNotFoundError, KeyError):
+                pass
+        self._manifest_kv(session).remove("manifest")
+        self._sessions_kv().remove(str(session))
+        try:
+            self.iface.unlink(sdir)             # the session dir entry
+        except (FileNotFoundError, KeyError):
+            pass
