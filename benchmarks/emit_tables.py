@@ -30,6 +30,7 @@ ELASTIC_MARK = "<!-- ELASTIC TABLES -->"
 MDTEST_MARK = "<!-- MDTEST CACHE TABLES -->"
 COH_MARK = "<!-- COHERENCE TABLES -->"
 SERVE_MARK = "<!-- SERVE TABLES -->"
+QD_MARK = "<!-- QD TABLES -->"
 
 SKELETON = f"""# EXPERIMENTS
 
@@ -60,6 +61,10 @@ SKELETON = f"""# EXPERIMENTS
 ## §Serving
 
 {SERVE_MARK}
+
+## §Queue depth
+
+{QD_MARK}
 
 ## §Roofline
 
@@ -366,6 +371,68 @@ def serve_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def qd_table(rows: list[dict]) -> str:
+    """The async-data-path study: queue-depth sweep, multipart restore
+    vs single stream, async readahead under think time, plus the Q
+    claims."""
+    out = []
+    qrows = [r for r in rows if r.get("mode") == "qd"]
+    if qrows:
+        r0 = qrows[0]
+        qds = sorted({r["qd"] for r in qrows})
+        ifaces = []
+        for r in qrows:                     # keep sweep order
+            if r["interface"] not in ifaces:
+                ifaces.append(r["interface"])
+        out += [f"### Queue-depth sweep ({r0['clients']} client nodes, "
+                f"{r0['block_mib']} MiB/process, "
+                f"{r0['transfer_kib']:.0f} KiB transfers, {r0['oclass']}; "
+                f"write GiB/s — fabric ceiling "
+                f"{r0['fabric_ceiling_gib_s']:.1f} GiB/s)", "",
+                "| interface | " + " | ".join(f"qd={q}" for q in qds) + " |",
+                "|---|" + "---|" * len(qds)]
+        for iface in ifaces:
+            cells = []
+            for q in qds:
+                r = next((r for r in qrows if r["interface"] == iface
+                          and r["qd"] == q), None)
+                cells.append(f"{r['write_gib_s']:.1f}" if r else "-")
+            out.append(f"| {iface} | " + " | ".join(cells) + " |")
+        out.append("")
+    mrows = [r for r in rows if r.get("mode") == "qd-multipart"]
+    if mrows:
+        out += [f"### Multipart restore vs single stream "
+                f"({mrows[0]['leaves']} leaves/session, single prefill "
+                "writer, daos-array)", "",
+                "| leaf size | single-stream (ms) | multipart (ms) | "
+                "speedup |",
+                "|---|---|---|---|"]
+        for r in mrows:
+            out.append(f"| {r['leaf_mib']} MiB | "
+                       f"{r['single_stream_s'] * 1e3:.2f} | "
+                       f"{r['multipart_s'] * 1e3:.2f} | "
+                       f"{r['speedup']:.1f}x |")
+        out.append("")
+    prows = [r for r in rows if r.get("mode") == "qd-prefetch"]
+    if prows:
+        p = prows[0]
+        out += ["### Async readahead under think time", "",
+                f"- cold sequential read: {p['file_mib']} MiB in "
+                f"{p['chunk_kib']} KiB chunks, {p['think_ms']} ms of "
+                "compute between chunks",
+                f"- visible read time: serial readahead "
+                f"{p['serial_visible_s'] * 1e3:.1f} ms → async "
+                f"{p['async_visible_s'] * 1e3:.1f} ms",
+                f"- prefetch issued {p['bg_issued_s'] * 1e3:.1f} ms of "
+                f"background I/O, paid visibly "
+                f"{p['bg_paid_s'] * 1e3:.1f} ms — hidden fraction "
+                f"{p['hidden_fraction']:.0%}", ""]
+    if not out:
+        return ""
+    out.extend(_claims_lines(rows, prefixes=("Q",)))
+    return "\n".join(out)
+
+
 def ckpt_cache_table(rows: list[dict]) -> str:
     """The cached-vs-uncached checkpoint study, one row per
     interface x layout, plus the validated C8/C9 claims."""
@@ -496,12 +563,21 @@ def main() -> None:
         n_serve = sum(1 for r in rows if r.get("mode") in ("hot", "fleet"))
         if body:
             text = _splice(text, SERVE_MARK, body)
+    n_qd = 0
+    qd_json = ROOT / "artifacts" / "ior_qd.json"
+    if qd_json.exists():
+        rows = json.loads(qd_json.read_text())
+        body = qd_table(rows)
+        n_qd = sum(1 for r in rows
+                   if r.get("mode") in ("qd", "qd-multipart", "qd-prefetch"))
+        if body:
+            text = _splice(text, QD_MARK, body)
     exp.write_text(text)
     print(f"spliced tables: roofline base={len(base)} opt={len(opt)} "
           f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}; "
           f"ior sweep rows={n_sweep}; ckpt cached rows={n_ckpt}; "
           f"elastic rows={n_elastic}; mdtest rows={n_md}; "
-          f"coherence rows={n_coh}; serve rows={n_serve}")
+          f"coherence rows={n_coh}; serve rows={n_serve}; qd rows={n_qd}")
 
 
 if __name__ == "__main__":

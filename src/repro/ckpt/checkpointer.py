@@ -122,7 +122,10 @@ class Checkpointer:
                 node, proc = self.iface.place_writer(w)
                 h = self.iface.create(fname, oclass=self.oclass,
                                       client_node=node, process=proc, tx=tx)
-                h.write_at(0, raw[lo:hi])
+                # async data path: shard writes queue on the handle's
+                # submission queue (depth = the mount's qd); the tx commit
+                # barrier drains whatever the window hasn't forced out
+                h.write_at_async(0, raw[lo:hi])
                 shards.append({"file": fname, "lo": lo, "hi": hi})
             entries[path] = {**meta, "csum": csum, "shards": shards,
                              "nbytes": int(raw.size)}
@@ -141,7 +144,7 @@ class Checkpointer:
                     S.shard_ranges(raw.size, self.n_writers)):
                 node, proc = self.iface.place_writer(w)
                 hw = self.iface.dup(h0, client_node=node, process=proc, tx=tx)
-                hw.write_at(offset + lo, raw[lo:hi])
+                hw.write_at_async(offset + lo, raw[lo:hi])
             entries[path] = {**meta, "csum": csum, "file": fname,
                              "offset": offset, "nbytes": int(raw.size)}
             offset += int(raw.size)

@@ -7,11 +7,13 @@ from .cache import CacheStats, ClientCache
 from .coherence import (BroadcastPolicy, CoherencePolicy, CoherenceStats,
                         TimeoutPolicy, make_policy, object_token)
 from .engine import Engine, EngineFailedError, NoSpaceError, NotFoundError
-from .events import Event, EventQueue
+from .events import Event, EventQueue, QueuedOp, SubmissionQueue
 from .iopath import CellPlanner, FlowAccumulator, IOD_BATCH, iod_batch
 from .integrity import ChecksumError, checksum, verify
 from .layout import (ObjectClass, StripeLayout, get_class, jump_hash,
                      oid_for, place_object)
+from .multipart import (MP_PART_BYTES, MP_THRESHOLD, multipart_read,
+                        multipart_write, plan_parts, should_multipart)
 from .object import ArrayObject, IOCtx, KVObject
 from .pool import Pool
 from .container import Container
@@ -25,10 +27,13 @@ __all__ = [
     "ChecksumError", "CoherencePolicy", "CoherenceStats",
     "ClientCache", "Container", "DataLossError", "Engine",
     "EngineFailedError", "Event", "EventQueue", "FlowAccumulator",
-    "HWProfile", "IOCtx", "IOD_BATCH", "IOSim", "KVObject", "NoQuorumError",
+    "HWProfile", "IOCtx", "IOD_BATCH", "IOSim", "KVObject",
+    "MP_PART_BYTES", "MP_THRESHOLD", "NoQuorumError",
     "NoSpaceError", "NotFoundError", "NotLeaderError", "ObjectClass",
-    "PROFILES", "Pool", "RaftGroup", "StripeLayout", "TimeoutPolicy",
+    "PROFILES", "Pool", "QueuedOp", "RaftGroup", "StripeLayout",
+    "SubmissionQueue", "TimeoutPolicy",
     "Topology", "Transaction", "TxStateError", "bandwidth", "checksum",
-    "get_class", "iod_batch", "jump_hash", "make_policy", "object_token",
-    "oid_for", "place_object", "verify",
+    "get_class", "iod_batch", "jump_hash", "make_policy",
+    "multipart_read", "multipart_write", "object_token",
+    "oid_for", "place_object", "plan_parts", "should_multipart", "verify",
 ]

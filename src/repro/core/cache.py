@@ -40,6 +40,9 @@ import numpy as np
 from .coherence import BroadcastPolicy, CoherencePolicy, object_token
 
 MIB = 1 << 20
+# per-RPC issue overhead for daemon-originated I/O (write-back flusher,
+# async readahead): native libdaos, regardless of the mount's interface
+DAEMON_LAT_PER_OP = 1e-6
 
 #: Recognised cache modes, weakest to strongest (mirrors dfuse knobs:
 #: ``none`` = direct I/O, ``readahead`` = data/attr caching read-side only
@@ -165,7 +168,8 @@ class ClientCache:
                  wb_buffer_bytes: int = 16 * MIB,
                  capacity_bytes: int = 1024 * MIB,
                  policy: CoherencePolicy | None = None,
-                 invalidation: str = "page") -> None:
+                 invalidation: str = "page",
+                 readahead_async: bool = False) -> None:
         if mode not in CACHE_MODES:
             raise ValueError(f"cache mode {mode!r}; known: {CACHE_MODES}")
         if invalidation not in ("page", "object"):
@@ -175,6 +179,10 @@ class ClientCache:
         self.mode = mode
         self.page_bytes = page_bytes
         self.readahead_pages = readahead_pages
+        # ra_async mount option: prefetch beyond the demand range is issued
+        # as background flows that overlap with compute (IOSim bg debt)
+        # instead of riding the caller's serial chain
+        self.readahead_async = bool(readahead_async)
         self.wb_buffer_bytes = wb_buffer_bytes
         self.capacity_bytes = capacity_bytes
         self.policy = policy if policy is not None else BroadcastPolicy()
@@ -211,8 +219,22 @@ class ClientCache:
         """Write-back flushes are issued by the kernel flusher, not the
         blocked caller: async, extent-sized daemon requests (no per-call
         1 MiB fragmentation), and attributed to this cache so the
-        container's invalidation broadcast skips us."""
-        return dataclasses.replace(ctx, sync=False, frag_bytes=0, cache=self)
+        container's invalidation broadcast skips us.  ``qd=0``: the
+        flusher runs the hardware-default submission window, not the
+        caller's mount ``qd`` (a sync mount's pin must not throttle its
+        own daemon).  ``lat_per_op``: the caller already paid the
+        interface crossing (FUSE round trip, ioctl, ...) when the page
+        was buffered; the daemon issues IODs straight through libdaos,
+        so its per-RPC overhead is the native one, not the mount's."""
+        return dataclasses.replace(ctx, sync=False, frag_bytes=0, qd=0,
+                                   lat_per_op=DAEMON_LAT_PER_OP, cache=self)
+
+    def _bg_ctx(self, ctx):
+        """Prefetch beyond the demand range under ``readahead_async``: the
+        readahead daemon's own async, extent-sized requests — same shape
+        as a write-back flush, opposite direction."""
+        return dataclasses.replace(ctx, sync=False, frag_bytes=0, qd=0,
+                                   lat_per_op=DAEMON_LAT_PER_OP, cache=self)
 
     def _ra_window(self, obj, offset: int, size: int) -> tuple[int, int]:
         pg = self.page_bytes
@@ -284,7 +306,23 @@ class ClientCache:
         e = self._touch(obj, sized=False)   # validate may have dropped it
         self._retag(e, tx)
         lo, hi = self._ra_window(obj, offset, size)
-        raw = obj.read(lo, hi - lo, ctx=ctx)
+        if self.readahead_async and self._tx_epoch(tx) is None:
+            # demand bytes block the caller; the rest of the window is
+            # fetched off the critical path (background debt, drained by
+            # think time / later foreground phases)
+            raw = np.zeros(hi - lo, np.uint8)
+            d0 = offset - lo
+            raw[d0: d0 + size] = obj.read(offset, size, ctx=ctx)
+            bctx = self._bg_ctx(ctx)
+            with obj.pool.sim.background_phase():
+                if lo < offset:
+                    raw[:d0] = obj.read(lo, offset - lo, ctx=bctx)
+                if offset + size < hi:
+                    raw[d0 + size:] = obj.read(offset + size,
+                                               hi - (offset + size),
+                                               ctx=bctx)
+        else:
+            raw = obj.read(lo, hi - lo, ctx=ctx)
         e.ensure(hi)
         # don't let the backend fill clobber dirty (unflushed) bytes
         dirty_save = [(a, b, e.data[a:b].copy()) for a, b in e.dirty
@@ -318,7 +356,17 @@ class ClientCache:
         e = self._touch(obj, sized=True)    # validate may have dropped it
         self._retag(e, tx)
         lo, hi = self._ra_window(obj, offset, nbytes)
-        obj.read_sized(lo, hi - lo, ctx=ctx)
+        if self.readahead_async and self._tx_epoch(tx) is None:
+            obj.read_sized(offset, nbytes, ctx=ctx)
+            bctx = self._bg_ctx(ctx)
+            with obj.pool.sim.background_phase():
+                if lo < offset:
+                    obj.read_sized(lo, offset - lo, ctx=bctx)
+                if offset + nbytes < hi:
+                    obj.read_sized(offset + nbytes, hi - (offset + nbytes),
+                                   ctx=bctx)
+        else:
+            obj.read_sized(lo, hi - lo, ctx=ctx)
         _add_interval(e.valid, lo, hi)
         e.ctx = ctx
         self.policy.note_fill(self, e, obj, lo, hi)

@@ -53,6 +53,10 @@ class Container:
         # before this point leaves the whole epoch invisible (atomic); after
         # it, readers of the committed epoch see every byte.  This is what
         # keeps torn-save protection intact under client-side caching.
+        # Queued async IODs drain first — they may themselves stage dirty
+        # cache data the flush below must then push out.
+        for sq in list(getattr(tx, "subqueues", ())):
+            sq.flush()
         for c in list(self._caches):
             flush = getattr(c, "flush_tx", None)
             if flush is not None:
@@ -70,6 +74,11 @@ class Container:
                               offset=offset, nbytes=nbytes, ctx=ctx)
 
     def abort_tx(self, tx: Transaction) -> int:
+        # queued-but-unexecuted IODs never reach the engines: their bytes
+        # belong to the epoch being punched (each completes with a
+        # TxStateError so waiting callers learn the write was torn away)
+        for sq in list(getattr(tx, "subqueues", ())):
+            sq.discard()
         # staged cache state for a punched epoch is garbage everywhere
         for c in list(self._caches):
             drop = getattr(c, "drop_tx", None)

@@ -20,6 +20,16 @@ real ``dfuse --enable-caching`` / ``attr-timeout`` flags expose:
                    write drops only the pages it overlaps) or ``object``
                    (whole-entry drop — the pre-page-granular behaviour,
                    kept so the coherence bench can quantify the delta)
+``qd=``            submission-queue depth: async IODs in flight per engine
+                   for this mount's handles (default: the hardware
+                   profile's ``queue_depth``).  Synchronous interfaces
+                   (posix/mpiio/hdf5 and friends) are pinned to 1 — a
+                   blocking VFS round trip cannot leave more than one RPC
+                   in flight, which is exactly the concurrency gap the QD
+                   sweep measures
+``ra_async=``      ``1``/``0``: issue readahead beyond the demand range as
+                   *background* flows that overlap with compute instead of
+                   riding the caller's serial chain (cached mounts only)
 =================  =====================================================
 
 e.g. ``posix-cached:timeout=1.0`` is the dfuse-caching-enabled POSIX
@@ -54,6 +64,7 @@ def parse_mount_options(optstr: str) -> dict:
     (``coherence=``/``cache_opts=``) for an AccessInterface."""
     coherence: dict = {}
     cache_opts: dict = {}
+    extra: dict = {}
     for part in filter(None, optstr.split(",")):
         key, sep, val = part.partition("=")
         key = key.strip()
@@ -78,9 +89,19 @@ def parse_mount_options(optstr: str) -> dict:
             # invalidation granularity: "page" (default) or "object" (the
             # pre-PR-4 whole-entry behaviour, kept for the CO5 contrast)
             cache_opts["invalidation"] = val
+        elif key == "qd":
+            qd = _num(key, val, int)
+            if qd < 1:
+                raise ValueError(f"mount option qd={val!r}: must be >= 1")
+            extra["qd"] = qd
+        elif key == "ra_async":
+            if val not in ("0", "1", "true", "false"):
+                raise ValueError(f"mount option ra_async={val!r}: "
+                                 "expected 0/1/true/false")
+            cache_opts["readahead_async"] = val in ("1", "true")
         else:
             raise ValueError(f"unknown mount option {key!r}")
-    kw: dict = {}
+    kw: dict = dict(extra)
     if coherence:
         kw["coherence"] = coherence
     if cache_opts:

@@ -20,6 +20,7 @@ import numpy as np
 
 from ..cache import ClientCache
 from ..coherence import make_policy, normalize_coherence
+from ..events import QueuedOp, SubmissionQueue
 from ..object import ArrayObject, IOCtx
 
 # Interface-layer transfer granularities (shared by the cost table and the
@@ -97,6 +98,13 @@ class FileHandle:
     tier the dirty data carries the tx, so write-back flushes — whether
     triggered by the buffer watermark, ``fsync`` or the container's commit
     barrier — land in the same epoch.
+
+    The ``*_async`` variants queue IODs on a per-handle submission queue
+    (up to the mount's ``qd=`` in flight per engine) and return events with
+    DAOS test/wait semantics.  Synchronous ops, ``fsync`` and ``close`` are
+    ordering barriers: they retire the queue first.  Under a transaction
+    the queue registers with the tx, so the commit barrier drains it before
+    the epoch becomes visible and an abort discards unexecuted IODs.
     """
 
     def __init__(self, iface: "AccessInterface", obj: ArrayObject,
@@ -109,9 +117,67 @@ class FileHandle:
         self.tx = tx
         self.offset = 0
         self.closed = False
+        self._queue: SubmissionQueue | None = None
+
+    # -- submission queue (async data path) ----------------------------------
+    def _subq(self) -> SubmissionQueue:
+        if self._queue is None:
+            self._queue = SubmissionQueue(qd=self.iface.qd)
+            if self.tx is not None:
+                self.tx.register_subq(self._queue)
+        return self._queue
+
+    def _barrier(self) -> None:
+        """Sync ops order after everything already queued."""
+        if self._queue is not None and not self._queue._executing:
+            self._queue.flush()
+
+    def _touched(self, offset: int, nbytes: int, write: bool) -> set[int]:
+        plan = self.obj._planner(self.obj._layout())
+        return plan.touched_engines(offset, nbytes, write=write)
+
+    @staticmethod
+    def _snapshot(data):
+        """Queued writes execute lazily: pin the payload now so the caller
+        may reuse its buffer immediately (daos_event semantics)."""
+        if isinstance(data, (bytes, bytearray, memoryview)):
+            return bytes(data)
+        return np.ascontiguousarray(data).view(np.uint8).reshape(-1).copy()
+
+    def write_at_async(self, offset: int, data) -> QueuedOp:
+        buf = self._snapshot(data)
+        return self._subq().submit(
+            lambda: self.write_at(offset, buf),
+            self._touched(offset, len(buf), write=True))
+
+    def read_at_async(self, offset: int, size: int) -> QueuedOp:
+        return self._subq().submit(
+            lambda: self.read_at(offset, size),
+            self._touched(offset, size, write=False))
+
+    def write_sized_at_async(self, offset: int, nbytes: int) -> QueuedOp:
+        return self._subq().submit(
+            lambda: self.write_sized_at(offset, nbytes),
+            self._touched(offset, nbytes, write=True))
+
+    def read_sized_at_async(self, offset: int, nbytes: int) -> QueuedOp:
+        return self._subq().submit(
+            lambda: self.read_sized_at(offset, nbytes),
+            self._touched(offset, nbytes, write=False))
+
+    def flush_queue(self) -> None:
+        """Retire every queued IOD (submission order); re-raise the first
+        queued error."""
+        if self._queue is not None:
+            self._queue.flush()
+
+    @property
+    def queued(self) -> int:
+        return self._queue.inflight if self._queue is not None else 0
 
     # -- explicit-offset ops (what IOR uses) --------------------------------
     def write_at(self, offset: int, data) -> int:
+        self._barrier()
         if self.cache is not None:
             return self.cache.write(self.obj, offset, data, self.ctx,
                                     tx=self.tx)
@@ -120,6 +186,7 @@ class FileHandle:
         return self.obj.write(offset, data, ctx=self.ctx)
 
     def read_at(self, offset: int, size: int) -> np.ndarray:
+        self._barrier()
         if self.cache is not None:
             return self.cache.read(self.obj, offset, size, self.ctx,
                                    tx=self.tx)
@@ -128,6 +195,7 @@ class FileHandle:
         return self.obj.read(offset, size, ctx=self.ctx)
 
     def write_sized_at(self, offset: int, nbytes: int) -> int:
+        self._barrier()
         if self.cache is not None:
             return self.cache.write_sized(self.obj, offset, nbytes, self.ctx,
                                           tx=self.tx)
@@ -136,6 +204,7 @@ class FileHandle:
         return self.obj.write_sized(offset, nbytes, ctx=self.ctx)
 
     def read_sized_at(self, offset: int, nbytes: int) -> int:
+        self._barrier()
         if self.cache is not None:
             return self.cache.read_sized(self.obj, offset, nbytes, self.ctx,
                                          tx=self.tx)
@@ -158,6 +227,7 @@ class FileHandle:
         return out
 
     def fsync(self) -> None:
+        self.flush_queue()
         if self.cache is not None:
             self.cache.flush(self.obj)
 
@@ -178,8 +248,18 @@ class AccessInterface(abc.ABC):
     has_namespace: bool = True  # False: raw objects, mkdir/readdir are void
 
     def __init__(self, dfs, cache_mode: str = "none", coherence=None,
-                 cache_opts: dict | None = None) -> None:
+                 cache_opts: dict | None = None,
+                 qd: int | None = None) -> None:
         self.dfs = dfs
+        # submission-queue depth (the qd= mount option): async IODs in
+        # flight per engine for this mount's handles.  None = the hardware
+        # profile's default depth.  Synchronous interfaces are pinned to 1
+        # by the `qd` property regardless — a blocking VFS round trip
+        # cannot leave more than one RPC in flight.
+        if qd is not None and int(qd) < 1:
+            raise ValueError(f"qd={qd!r}: submission-queue depth must "
+                             "be >= 1")
+        self._mount_qd = None if qd is None else int(qd)
         # coherence: None/str/dict spec (see core.coherence) selected by
         # mount options; "off" means direct I/O — no cache is ever created,
         # so the interface is byte-for-byte its uncached self.
@@ -213,10 +293,21 @@ class AccessInterface(abc.ABC):
     def profile(self) -> CostProfile:
         return COST_PROFILES[self.profile_name]
 
+    @property
+    def qd(self) -> int:
+        """Effective submission-queue depth of this mount: 1 on sync
+        interfaces (pinned — their per-op chain can't pipeline), else the
+        ``qd=`` mount option or the hardware profile's default."""
+        if self.profile.sync:
+            return 1
+        if self._mount_qd is not None:
+            return self._mount_qd
+        return self.dfs.cont.pool.sim.hw.queue_depth
+
     def make_ctx(self, client_node: int = 0, process: int = 0,
                  transfer_bytes: int = 0) -> IOCtx:
         """The cost profile of one I/O call through this interface."""
-        return self.profile.ctx(client_node, process)
+        return self.profile.ctx(client_node, process, qd=self.qd)
 
     # ---- cache tier --------------------------------------------------------
     def cache_for(self, client_node: int) -> ClientCache | None:

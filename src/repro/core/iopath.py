@@ -113,6 +113,24 @@ class CellPlanner:
             return self.ec_placement(cell_no).data_engine
         return self.replicas(cell_no)[0]
 
+    def touched_engines(self, offset: int, nbytes: int,
+                        write: bool = False) -> set[int]:
+        """Engines a request will send IODs to — the keys a submission
+        queue bounds its per-engine in-flight window by.  Writes touch
+        every replica (or the EC data + parity lanes); reads only the
+        primary of each cell."""
+        out: set[int] = set()
+        for span in self.spans(offset, nbytes):
+            if not write:
+                out.add(self.primary(span.cell_no))
+            elif self.oclass.ec_data:
+                p = self.ec_placement(span.cell_no)
+                out.add(p.data_engine)
+                out.add(p.parity_engine)
+            else:
+                out.update(self.replicas(span.cell_no))
+        return out
+
     def sized_write_homes(self, span: CellSpan) -> tuple[tuple[int, int], ...]:
         """(engine, accounted_bytes) pairs for a synthetic write of ``span``:
         every replica carries the span; EC charges the data lane in full and

@@ -36,6 +36,8 @@ class IOCtx:
     op_multiplier: float = 1.0  # extra RPC inflation (HDF5 metadata chatter)
     via_fuse: bool = False      # routed through the client node's dfuse daemon
     sync: bool = True           # synchronous per-op chain (POSIX-style)
+    qd: int = 0                 # async in-flight window per engine (the qd=
+                                # mount option); 0 = hardware default depth
     frag_bytes: int = 0         # interface fragments transfers (fuse 1 MiB,
                                 # HDF5 chunk size); 0 = no fragmentation
     cache: object | None = None  # originating ClientCache, so the coherence
@@ -78,7 +80,7 @@ class _ObjectBase:
                 nops=max(1, int(round(nops * ctx.op_multiplier))),
                 cell_bytes=cell, client_lat_per_op=ctx.lat_per_op,
                 proc_bw_cap=ctx.proc_bw_cap, via_fuse=ctx.via_fuse,
-                sync=ctx.sync)
+                sync=ctx.sync, qd=ctx.qd)
 
 
 class ArrayObject(_ObjectBase):

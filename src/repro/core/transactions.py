@@ -26,10 +26,19 @@ class Transaction:
         # staging-time notification they also get can only make them
         # refetch still-current pre-commit bytes)
         self.write_log: list[tuple] = []
+        # submission queues of handles opened under this tx: the commit
+        # barrier drains them (queued IODs must hit the engines before the
+        # epoch turns visible); an abort discards their unexecuted ops
+        self.subqueues: list = []
 
     # -- write-side helpers (objects call these through the handle) ----------
     def touch(self, engine_id: int) -> None:
         self.touched_engines.add(engine_id)
+
+    def register_subq(self, sq) -> None:
+        """Attach a handle's submission queue to this tx's barriers."""
+        if sq not in self.subqueues:
+            self.subqueues.append(sq)
 
     def write_array(self, obj, offset: int, data, ctx=None) -> int:
         self._check_open()

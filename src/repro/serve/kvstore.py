@@ -46,6 +46,7 @@ import numpy as np
 
 from ..core import NotFoundError
 from ..core.interfaces import AccessInterface, DFS, make_interface
+from ..core.multipart import MP_THRESHOLD, multipart_read, should_multipart
 from ..ckpt import serializer as S
 
 
@@ -79,13 +80,20 @@ class KVCacheStore:
     def __init__(self, dfs: DFS, interface: str | AccessInterface = "dfs",
                  oclass: str | None = None, base: str = "/kvcache",
                  n_writers: int = 8,
-                 verify_on_restore: bool = True) -> None:
+                 verify_on_restore: bool = True,
+                 multipart: bool = True,
+                 mp_threshold: int = MP_THRESHOLD) -> None:
         self.dfs = dfs
         self.iface = (interface if isinstance(interface, AccessInterface)
                       else make_interface(interface, dfs))
         self.oclass = oclass or dfs.default_oclass
         self.base = base.rstrip("/")
         self.n_writers = max(1, n_writers)
+        # hot-restore multipart: leaves at/above mp_threshold fan across
+        # the writer placement as concurrent parts (ordered reassembly);
+        # serving-size leaves (well under the threshold) are untouched
+        self.multipart = bool(multipart)
+        self.mp_threshold = int(mp_threshold)
         # serving tolerates bounded staleness by design: a reader mount on
         # a timeout lease may see the previous step's bytes for up to tau,
         # which the manifest's (always-fresh) checksums would flag — so
@@ -169,7 +177,9 @@ class KVCacheStore:
                 h = self.iface.create(f"{sdir}{path}.leaf",
                                       oclass=self.oclass, client_node=node,
                                       process=proc, tx=tx)
-                h.write_at(0, raw)
+                # async data path: leaf writes queue on the handle's
+                # submission window; the tx commit barrier drains them
+                h.write_at_async(0, raw)
                 entries[path] = {**meta, "csum": S.checksum_leaf(raw),
                                  "file": f"{sdir}{path}.leaf",
                                  "nbytes": int(raw.size), "writer": writer}
@@ -214,14 +224,21 @@ class KVCacheStore:
         man = self.manifest(session)
         items: dict = {}
         for path, entry in man["leaves"].items():
-            if client_node is None:
-                node, proc = self.iface.place_writer(entry["writer"])
+            if (client_node is None and self.multipart
+                    and should_multipart(entry["nbytes"], self.mp_threshold)):
+                # hot-restore of a big leaf: fan it across the writer
+                # placement as concurrent parts instead of one stream
+                raw = multipart_read(self.iface, entry["file"],
+                                     int(entry["nbytes"]))
             else:
-                node = client_node
-                proc = client_node if process is None else process
-            h = self.iface.open(entry["file"], client_node=node,
-                                process=proc)
-            raw = np.asarray(h.read_at(0, entry["nbytes"]))
+                if client_node is None:
+                    node, proc = self.iface.place_writer(entry["writer"])
+                else:
+                    node = client_node
+                    proc = client_node if process is None else process
+                h = self.iface.open(entry["file"], client_node=node,
+                                    process=proc)
+                raw = np.asarray(h.read_at(0, entry["nbytes"]))
             if self.verify:
                 got = S.checksum_leaf(raw)
                 if got != entry["csum"]:

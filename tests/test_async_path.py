@@ -1,0 +1,455 @@
+"""The async data path: submission queues, pipelined-RPC cost model,
+multipart transfer, background readahead.
+
+The structural guarantees pinned here:
+
+* **flow equivalence** — the ``*_async`` API at ``qd=1`` is byte- and
+  flow-identical to the sync API on every interface (same flows, same
+  solved time): the async path is a scheduling layer, never a second
+  data path;
+* **submission-window semantics** — at most ``qd`` IODs per engine stay
+  queued; overflow force-retires the oldest (backpressure), completion
+  order is submission order (ordered commit);
+* **transaction interplay** — the commit barrier drains queued IODs
+  before the epoch becomes visible; an abort discards them and their
+  events raise ``TxStateError`` (torn-offload semantics);
+* **multipart transfer** — byte-identical round trips, and genuinely
+  faster than a single stream for above-threshold transfers;
+* **cost model** — deeper queues never slow a phase down (monotonicity),
+  saturate rather than divide to zero, and sync interfaces can't ride
+  the window at all;
+* **mixed-direction incast** — each endpoint's fan-in efficiency follows
+  where *most of its bytes* go, not whichever flow was recorded last;
+* **background debt** — async readahead issued inside a phase drains
+  against think time; only the un-hidden remainder extends later phases.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (IOSim, Pool, SubmissionQueue, Topology, Transaction,
+                        TxStateError, multipart_read, multipart_write,
+                        plan_parts, should_multipart)
+from repro.core.multipart import MP_PART_BYTES, MP_THRESHOLD
+from repro.core.interfaces import DFS, INTERFACE_NAMES, make_interface
+
+MIB = 1 << 20
+
+
+def _fresh(iface_name, **topo_kw):
+    pool = Pool(Topology(**topo_kw), materialize=True)
+    cont = pool.create_container("c", oclass="S2")
+    dfs = DFS(cont)
+    dfs.mkdir("/d")
+    return pool, make_interface(iface_name, dfs)
+
+
+# --------------------------------------------------------------------------
+# flow equivalence: async at qd=1 == sync, on every interface
+# --------------------------------------------------------------------------
+def _drive(pool, iface, use_async):
+    payload = (np.arange(300_000) % 251).astype(np.uint8)
+    with pool.sim.phase() as ph:
+        h = iface.create("/d/f", client_node=1, process=2)
+        if use_async:
+            evs = [h.write_at_async(0, payload),
+                   h.write_at_async(payload.size, payload[:1000]),
+                   h.read_at_async(0, payload.size)]
+            got = evs[-1].wait()
+            h.flush_queue()
+        else:
+            h.write_at(0, payload)
+            h.write_at(payload.size, payload[:1000])
+            got = h.read_at(0, payload.size)
+        h.close()
+    np.testing.assert_array_equal(got, payload)
+    return ph
+
+
+@pytest.mark.parametrize("iface_name", INTERFACE_NAMES)
+def test_async_qd1_flow_identical_to_sync(iface_name):
+    """Same mount pinned to qd=1: the async API must record exactly the
+    flows the sync API records — byte for byte, field for field — and
+    therefore solve to exactly the same phase time."""
+    ph_sync = _drive(*_fresh(f"{iface_name}:qd=1"), use_async=False)
+    ph_async = _drive(*_fresh(f"{iface_name}:qd=1"), use_async=True)
+    assert ([dataclasses.astuple(f) for f in ph_async.flows]
+            == [dataclasses.astuple(f) for f in ph_sync.flows])
+    assert ph_async.local_flows == ph_sync.local_flows
+    assert ph_async.md_ops == ph_sync.md_ops
+    assert ph_async.elapsed == ph_sync.elapsed
+
+
+def test_sync_interfaces_pinned_to_qd1():
+    """A blocking VFS round trip can't leave two RPCs in flight: sync
+    profiles ignore the qd= mount option (pinned to 1), async profiles
+    honour it, and unmounted async profiles default to the hw depth."""
+    pool, posix = _fresh("posix:qd=8")
+    assert posix.qd == 1
+    dfs16 = make_interface("dfs", posix.dfs)
+    assert dfs16.qd == pool.sim.hw.queue_depth
+    dfs4 = make_interface("dfs:qd=4", posix.dfs)
+    assert dfs4.qd == 4
+    with pytest.raises(ValueError):
+        make_interface("dfs:qd=0", posix.dfs)
+
+
+# --------------------------------------------------------------------------
+# submission-window semantics
+# --------------------------------------------------------------------------
+def test_window_force_retires_oldest_per_engine():
+    sq = SubmissionQueue(qd=2)
+    ran = []
+    ops = [sq.submit(lambda i=i: ran.append(i) or i, engines={0})
+           for i in range(5)]
+    # window of 2 on engine 0: submitting 5 forces the first 3 out
+    assert ran == [0, 1, 2]
+    assert sq.inflight == 2
+    assert ops[0].test() and not ops[4].test()
+    assert ops[3].wait() == 3           # retires 3 (and everything before)
+    assert ran == [0, 1, 2, 3]
+    sq.flush()
+    assert ran == [0, 1, 2, 3, 4] and sq.inflight == 0
+
+
+def test_window_is_per_engine():
+    sq = SubmissionQueue(qd=2)
+    for e in (0, 0, 1, 1):
+        sq.submit(lambda: None, engines={e})
+    # two engines, two IODs each: all four fit in flight
+    assert sq.inflight == 4
+    sq.submit(lambda: None, engines={0, 1})   # straddles both -> over on both
+    assert sq.inflight < 5
+    sq.flush()
+
+
+def test_queue_errors_surface_at_flush_not_silently():
+    def boom():
+        raise RuntimeError("media error")
+    sq = SubmissionQueue(qd=8)
+    sq.submit(boom, engines={0})
+    ok = sq.submit(lambda: 7, engines={0})
+    assert ok.wait() == 7               # later ops still complete...
+    with pytest.raises(RuntimeError, match="media error"):
+        sq.flush()                      # ...but the error is never dropped
+    sq.flush()                          # re-raised exactly once
+
+
+def test_wait_reraises_own_error():
+    def boom():
+        raise RuntimeError("torn")
+    sq = SubmissionQueue(qd=8)
+    ev = sq.submit(boom, engines={0})
+    with pytest.raises(RuntimeError, match="torn"):
+        ev.wait()
+
+
+def test_async_ops_execute_in_submission_order():
+    """Ordered commit: a queued read after a queued write at the same
+    offset observes the write."""
+    pool, iface = _fresh("dfs:qd=16")
+    h = iface.create("/d/ord")
+    payload = bytes(range(256)) * 16
+    h.write_at_async(0, payload)
+    got = h.read_at_async(0, len(payload)).wait()
+    assert bytes(got) == payload
+
+
+def test_sync_op_is_ordering_barrier():
+    pool, iface = _fresh("dfs:qd=16")
+    h = iface.create("/d/bar")
+    ev = h.write_at_async(0, b"x" * 4096)
+    assert h.queued == 1
+    got = h.read_at(0, 4096)            # sync op retires the queue first
+    assert ev.test() and h.queued == 0
+    assert bytes(got) == b"x" * 4096
+
+
+def test_queued_write_snapshots_payload():
+    """daos_event semantics: the caller may reuse its buffer the moment
+    submit returns — queued lazy execution must not see later mutations."""
+    pool, iface = _fresh("dfs:qd=16")
+    h = iface.create("/d/snap")
+    buf = np.full(8192, 7, np.uint8)
+    h.write_at_async(0, buf)
+    buf[:] = 9                          # reused before the IOD executes
+    h.flush_queue()
+    assert np.all(np.asarray(h.read_at(0, 8192)) == 7)
+
+
+# --------------------------------------------------------------------------
+# transaction interplay (torn-offload semantics under queued submission)
+# --------------------------------------------------------------------------
+def test_commit_barrier_drains_queued_iods():
+    pool, iface = _fresh("dfs:qd=16")
+    cont = iface.dfs.cont
+    iface.create("/d/tx").write_at(0, b"\0" * 4096)
+    tx = cont.tx_begin()
+    h = iface.open("/d/tx", tx=tx)
+    ev = h.write_at_async(0, b"A" * 4096)
+    assert not ev.test()                # still queued when commit starts
+    tx.commit()                         # barrier drains the subqueue
+    assert ev.test() and ev.error is None
+    assert bytes(iface.open("/d/tx").read_at(0, 4096)) == b"A" * 4096
+
+
+def test_abort_discards_queued_iods_with_tx_error():
+    pool, iface = _fresh("dfs:qd=16")
+    cont = iface.dfs.cont
+    iface.create("/d/txa").write_at(0, b"\0" * 4096)
+    tx = cont.tx_begin()
+    h = iface.open("/d/txa", tx=tx)
+    ev = h.write_at_async(0, b"B" * 4096)
+    tx.abort()
+    assert ev.test()
+    with pytest.raises(TxStateError, match="discarded"):
+        ev.wait()
+    # the queued bytes never reached the engines
+    assert bytes(iface.open("/d/txa").read_at(0, 4096)) == b"\0" * 4096
+
+
+# --------------------------------------------------------------------------
+# multipart transfer
+# --------------------------------------------------------------------------
+def test_plan_parts_edges():
+    assert plan_parts(0) == []
+    assert plan_parts(2 * MIB, MIB) == [(0, MIB), (MIB, 2 * MIB)]
+    assert plan_parts(2 * MIB + 5, MIB) == [(0, MIB), (MIB, 2 * MIB),
+                                            (2 * MIB, 2 * MIB + 5)]
+    assert should_multipart(MP_THRESHOLD)
+    assert not should_multipart(MP_THRESHOLD - 1)
+    assert not should_multipart(10 * MIB, threshold=0)   # disabled
+
+
+def test_multipart_roundtrip_byte_identical():
+    pool, iface = _fresh("daos-array")
+    data = (np.arange(5 * MIB + 123) % 253).astype(np.uint8)
+    n = multipart_write(iface, "/d/mp", data)
+    assert n == data.size
+    got = multipart_read(iface, "/d/mp", data.size)
+    np.testing.assert_array_equal(got, data)
+
+
+def test_multipart_write_under_tx_is_atomic():
+    pool, iface = _fresh("dfs")
+    cont = iface.dfs.cont
+    data = np.full(5 * MIB, 3, np.uint8)
+    tx = cont.tx_begin()
+    multipart_write(iface, "/d/mptx", data, tx=tx)
+    tx.commit()
+    got = multipart_read(iface, "/d/mptx", data.size)
+    np.testing.assert_array_equal(got, data)
+
+
+def test_multipart_beats_single_stream():
+    """An above-threshold transfer fanned across nodes must beat one
+    stream through one NIC (the Q2 structure, pinned as a unit test)."""
+    pool, iface = _fresh("daos-array")
+    data = np.ones(8 * MIB, np.uint8)
+    h = iface.create("/d/big", client_node=0, process=0)
+    h.write_at(0, data)
+    with pool.sim.phase() as single:
+        np.asarray(iface.open("/d/big", client_node=0,
+                              process=0).read_at(0, data.size))
+    with pool.sim.phase() as multi:
+        multipart_read(iface, "/d/big", data.size)
+    assert multi.elapsed < single.elapsed
+
+
+# --------------------------------------------------------------------------
+# cost model: queue depth in the solver
+# --------------------------------------------------------------------------
+def _qd_phase_time(qd, nops=128, nbytes=64 << 10):
+    pool, iface = _fresh(f"dfs:qd={qd}")
+    h = iface.create("/d/q", client_node=0, process=0)
+    with pool.sim.phase() as ph:
+        for i in range(nops):
+            h.write_sized_at(i * nbytes, nbytes)
+    return ph.elapsed
+
+
+def test_deeper_queues_never_slower_and_saturate():
+    times = {qd: _qd_phase_time(qd) for qd in (1, 2, 4, 8, 16, 32)}
+    qds = sorted(times)
+    for a, b in zip(qds, qds[1:]):
+        assert times[b] <= times[a] * (1 + 1e-9), (a, b)
+    # real pipelining win at the shallow end...
+    assert times[4] < times[1]
+    # ...but saturation, not latency-divided-to-zero, at the deep end:
+    # issuing an RPC is serial client CPU that no window hides
+    assert times[32] > 0.8 * times[16]
+
+
+def test_sync_interface_flat_across_qd():
+    def t(qd):
+        pool, iface = _fresh(f"posix:qd={qd}")
+        h = iface.create("/d/p", client_node=0, process=0)
+        with pool.sim.phase() as ph:
+            for i in range(32):
+                h.write_sized_at(i * MIB, MIB)
+        return ph.elapsed
+    assert t(1) == t(32)                # pinned: qd= can't buy anything
+
+
+def test_hol_blocking_one_congested_engine_stalls_the_window():
+    """A process with IODs outstanding on a congested engine drains its
+    whole window at that engine's pace: adding deep traffic on a second
+    engine must *lengthen* the first process's phase vs. the same traffic
+    on an uncongested layout."""
+    sim = IOSim(Topology())
+    hw = sim.hw
+
+    def run(windows_on_engine0):
+        s = IOSim(Topology())
+        with s.phase() as ph:
+            # process 0: deep window split across engines 0 and 1
+            for e in (0, 1):
+                ph.record(client_node=0, process=0, engine=e,
+                          direction="write", nbytes=1 << 20, nops=64,
+                          sync=False, qd=32)
+            # background processes pile deep windows onto engine 0 only
+            for p in range(1, windows_on_engine0):
+                ph.record(client_node=p % 8, process=p, engine=0,
+                          direction="write", nbytes=1 << 20, nops=64,
+                          sync=False, qd=32)
+        return ph.elapsed
+
+    quiet, congested = run(1), run(12)
+    assert congested > quiet
+    # the congestion factor the model promises: offered depth over
+    # service streams
+    assert hw.engine_rpc_threads == 16
+
+
+# --------------------------------------------------------------------------
+# mixed-direction incast (the PhaseRecorder.solve regression)
+# --------------------------------------------------------------------------
+def test_incast_direction_is_byte_dominant_not_last_recorded():
+    """A server node moving 2 GB of writes and a handful of read bytes
+    must get the *write* incast efficiency even when a read flow was
+    recorded first (the old code took the direction of an arbitrary
+    flow)."""
+    def run(read_first):
+        sim = IOSim(Topology())
+        hw = sim.hw
+        with sim.phase() as ph:
+            def reads():
+                for p in range(8):      # 8 reader processes, 1 byte each
+                    ph.record(client_node=p, process=p, engine=0,
+                              direction="read", nbytes=1, nops=1)
+            def write():
+                ph.record(client_node=1, process=100, engine=0,
+                          direction="write", nbytes=2_000_000_000, nops=1)
+            if read_first:
+                reads(); write()
+            else:
+                write(); reads()
+        return sim, hw, ph.elapsed
+
+    sim, hw, t_rf = run(read_first=True)
+    _, _, t_wf = run(read_first=False)
+    assert t_rf == t_wf                 # recording order is irrelevant
+    # 8 distinct server-side peers (reader peers are *processes* 0..7,
+    # the writer's peer is its *node* 1, which shares the int space):
+    # the write direction's efficiency must be the one applied
+    eff_w = hw.incast_eff(8, "write", server=True)
+    expect = 2_000_000_000 / (hw.server_nic_bw * eff_w) + hw.setup_time
+    assert t_rf == pytest.approx(expect, rel=1e-6)
+    eff_r = hw.incast_eff(8, "read", server=True)
+    wrong = 2_000_000_000 / (hw.server_nic_bw * eff_r) + hw.setup_time
+    assert t_rf < wrong                 # the old any-direction bug
+
+
+def test_incast_direction_ties_break_to_read():
+    sim = IOSim(Topology())
+    hw = sim.hw
+    with sim.phase() as ph:
+        for p, d in ((0, "read"), (1, "write")):
+            ph.record(client_node=0, process=p, engine=p,
+                      direction=d, nbytes=1_000_000_000, nops=1)
+    # equal bytes both ways on client node 0 -> read efficiency (2 peers)
+    eff = hw.incast_eff(2, "read")
+    expect = 2_000_000_000 / (hw.client_nic_bw * eff) + hw.setup_time
+    assert ph.elapsed == pytest.approx(expect, rel=1e-6)
+
+
+# --------------------------------------------------------------------------
+# background debt: async readahead overlaps with think time
+# --------------------------------------------------------------------------
+def test_background_phase_outside_any_phase_is_noop():
+    sim = IOSim(Topology())
+    with sim.background_phase() as rec:
+        rec.record(client_node=0, process=0, engine=0, direction="read",
+                   nbytes=1 << 20, nops=1)
+    assert sim._bg_debt == 0.0
+    assert sim.bg_hidden_fraction() == 1.0
+
+
+def test_background_debt_drains_against_think_time():
+    def issue(sim):
+        with sim.phase():
+            with sim.background_phase() as bg:
+                bg.record(client_node=0, process=0, engine=0,
+                          direction="read", nbytes=125_000_000, nops=1)
+
+    # hidden: think time between phases absorbs the whole debt
+    sim = IOSim(Topology())
+    issue(sim)
+    assert sim._bg_debt > 0
+    sim.clock.advance(1.0)
+    assert sim._bg_debt == 0.0
+    with sim.phase() as ph:
+        ph.record_md(10)
+    assert sim.bg_hidden_fraction() == 1.0
+
+    # not hidden: the very next (short) phase pays the remainder
+    sim2 = IOSim(Topology())
+    issue(sim2)
+    debt = sim2._bg_debt
+    with sim2.phase() as ph2:
+        ph2.record_md(10)
+    assert ph2.elapsed == pytest.approx(debt, rel=1e-9)
+    assert sim2.bg_stats["paid_s"] > 0
+    assert sim2.bg_hidden_fraction() < 1.0
+
+
+def test_async_readahead_mount_issues_background_flows():
+    """ra_async=1: a cold sequential read costs only its demand window up
+    front; the prefetch beyond it becomes background debt — and returns
+    exactly the same bytes as the serial-readahead mount."""
+    def run(ra_async):
+        pool, iface = _fresh(
+            f"posix-cached:coherence=broadcast,readahead=8,"
+            f"ra_async={ra_async}")
+        payload = (np.arange(2 * MIB) % 241).astype(np.uint8)
+        iface.create("/d/ra").write_at(0, payload)
+        iface.drop_caches()
+        with pool.sim.phase() as ph:
+            got = iface.open("/d/ra").read_at(0, 64 << 10)
+        return pool.sim, ph.elapsed, np.asarray(got), payload
+
+    sim_a, t_async, got_a, payload = run(1)
+    sim_s, t_sync, got_s, _ = run(0)
+    np.testing.assert_array_equal(got_a, payload[:64 << 10])
+    np.testing.assert_array_equal(got_a, got_s)
+    assert sim_a.bg_stats["issued_s"] > 0      # prefetch went to background
+    assert sim_s.bg_stats["issued_s"] == 0
+    assert t_async < t_sync                    # demand window only
+
+
+def test_async_readahead_hidden_behind_think_time():
+    """The Q3 structure: with compute think time between reads, nearly
+    all prefetch cost is hidden."""
+    pool, iface = _fresh("posix-cached:coherence=broadcast,readahead=8,"
+                         "ra_async=1")
+    payload = np.zeros(4 * MIB, np.uint8)
+    iface.create("/d/think").write_at(0, payload)
+    iface.drop_caches()
+    h = iface.open("/d/think")
+    for i in range(16):
+        with pool.sim.phase():
+            h.read_at(i * (256 << 10), 256 << 10)
+        pool.sim.clock.advance(2e-3)           # compute between reads
+    assert pool.sim.bg_stats["issued_s"] > 0
+    assert pool.sim.bg_hidden_fraction() > 0.8

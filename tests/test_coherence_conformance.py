@@ -43,18 +43,27 @@ TAU = 0.5
 EPS = 1e-6
 OPS = 32                  # ops per interleaving
 
-#: fleet configurations: one coherence policy per client node
+#: fleet configurations: one coherence policy per client node.  The
+#: ``-q8`` variants mount an async-capable interface with a deep
+#: submission queue: their writers go through ``write_at_async``-queued
+#: IODs that only reach the cache/engines at an ordering barrier — the
+#: oracle tracks queued-but-unexecuted writes separately, so torn-offload
+#: and commit-barrier guarantees are checked *under* queued submission.
 FLEETS = {
     "all-broadcast": ("broadcast", "broadcast", "broadcast"),
     "all-timeout": ("timeout", "timeout", "timeout"),
     "all-off": ("off", "off", "off"),
     "mixed": ("broadcast", "timeout", "off"),
+    "mixed-async": ("broadcast-q8", "timeout-q8", "off"),
 }
 
 MOUNTS = {
     "broadcast": "posix-cached:coherence=broadcast,page_kib=1,readahead=2",
     "timeout": f"posix-cached:timeout={TAU},page_kib=1,readahead=2",
     "off": "posix-cached:coherence=off",
+    "broadcast-q8":
+        "dfs-cached:coherence=broadcast,page_kib=1,readahead=2,qd=8",
+    "timeout-q8": f"dfs-cached:timeout={TAU},page_kib=1,readahead=2,qd=8",
 }
 
 
@@ -81,6 +90,11 @@ class _World:
         # unflushed-byte overlay per node ({offset: (value, tx)})
         self.history: list[tuple[float, bytes]] = []
         self.overlay: list[dict] = [dict() for _ in policies]
+        # queued-but-unexecuted async writes, per node per handle:
+        # {handle: [(off, ln, val), ...]} in submission order — invisible
+        # to EVERYONE (the IOD hasn't reached even the writer's cache)
+        # until an ordering barrier or window overflow retires it
+        self.pending: list[dict] = [dict() for _ in policies]
         self.txs: list = [None] * n
         self.txh: list = [None] * n
         self.seq = 0
@@ -89,6 +103,10 @@ class _World:
         self.snapshot()
 
     # ---- oracle ----
+    def _pol(self, node: int) -> str:
+        """Base coherence policy of a node ("broadcast-q8" -> "broadcast")."""
+        return self.policies[node].split("-")[0]
+
     @property
     def now(self) -> float:
         return self.pool.sim.clock.now
@@ -110,7 +128,7 @@ class _World:
         ok = {base[b]}
         if b in self.overlay[node]:
             ok.add(self.overlay[node][b][0])
-        if self.policies[node] == "timeout":
+        if self._pol(node) == "timeout":
             # any value still current at some instant in (now - tau, now]:
             # snapshot i is current during [t_i, t_{i+1})
             horizon = self.now - TAU - EPS
@@ -163,29 +181,69 @@ class _World:
             return self.txh[node]
         return self.handles[node]
 
-    def op_write(self, node: int) -> None:
-        off, ln = self._extent()
-        self.seq += 1
-        val = self.seq % 250 + 1             # never 0 (hole byte)
-        h = self._handle(node)
-        h.write_at(off, bytes([val]) * ln)
+    def _apply_write(self, node: int, h, off: int, ln: int,
+                     val: int) -> None:
+        """Oracle effects of one write that has now actually executed
+        through handle ``h`` (sync, or a retired queued IOD)."""
         if h.tx is not None:
             for b in range(off, off + ln):
                 self.overlay[node][b] = (val, h.tx)
-        elif self.policies[node] == "off":
+        elif self._pol(node) == "off":
             self.snapshot()                  # direct I/O: visible at once
         else:
             for b in range(off, off + ln):
                 self.overlay[node][b] = (val, None)
 
+    def _sync_pending(self, node: int, h) -> None:
+        """Queued writes the submission window has already forced out
+        (all of them, at qd=1 mounts) become oracle-visible: the handle's
+        ``queued`` count says how many are still unexecuted."""
+        lst = self.pending[node].get(h)
+        while lst and len(lst) > h.queued:
+            off, ln, val = lst.pop(0)
+            self._apply_write(node, h, off, ln, val)
+
+    def _drain_pending(self, node: int, h) -> None:
+        """A sync op on ``h`` is an ordering barrier: retire the queue
+        and fold every queued write into the oracle before the op runs."""
+        lst = self.pending[node].pop(h, None)
+        if not lst:
+            return
+        h.flush_queue()
+        for off, ln, val in lst:
+            self._apply_write(node, h, off, ln, val)
+        self.snapshot()
+
+    def op_write(self, node: int) -> None:
+        off, ln = self._extent()
+        self.seq += 1
+        val = self.seq % 250 + 1             # never 0 (hole byte)
+        h = self._handle(node)
+        self._drain_pending(node, h)
+        h.write_at(off, bytes([val]) * ln)
+        self._apply_write(node, h, off, ln, val)
+
+    def op_write_async(self, node: int) -> None:
+        """A queued write: submitted now, executed at a barrier / window
+        overflow / tx commit — or torn away by a tx abort."""
+        off, ln = self._extent()
+        self.seq += 1
+        val = self.seq % 250 + 1
+        h = self._handle(node)
+        h.write_at_async(off, bytes([val]) * ln)
+        self.pending[node].setdefault(h, []).append((off, ln, val))
+        self._sync_pending(node, h)
+
     def op_read(self, node: int) -> None:
         off, ln = self._extent()
         h = self._handle(node)
+        self._drain_pending(node, h)
         got = h.read_at(off, ln)
         self.check_read(node, off, got, tx=h.tx)
 
     def op_fsync(self, node: int) -> None:
         h = self._handle(node)
+        self._drain_pending(node, h)
         h.fsync()
         if h.tx is None:
             # non-tx dirty bytes are on the engines now
@@ -207,6 +265,10 @@ class _World:
         tx = self.txs[node]
         if tx is None:
             return
+        # the commit barrier drains the tx handle's submission queue:
+        # still-queued writes land at the tx epoch and commit with it —
+        # the post-commit snapshot() below picks their bytes up
+        self.pending[node].pop(self.txh[node], None)
         tx.commit()
         self.overlay[node] = {b: v for b, v in self.overlay[node].items()
                               if v[1] is not tx}
@@ -217,6 +279,9 @@ class _World:
         tx = self.txs[node]
         if tx is None:
             return
+        # abort discards queued-but-unexecuted IODs — their bytes never
+        # reach any cache or engine (torn-offload under queued submission)
+        self.pending[node].pop(self.txh[node], None)
         tx.abort()
         self.overlay[node] = {b: v for b, v in self.overlay[node].items()
                               if v[1] is not tx}
@@ -231,7 +296,12 @@ class _World:
 
     # ---- driver ----
     def run(self) -> None:
-        ops = [(self.op_write, 10), (self.op_read, 12), (self.op_fsync, 5),
+        # write weight splits 6 sync + 4 async: the totals (and so the
+        # cumulative-weight boundaries of every OTHER op) match the
+        # pre-async harness, keeping the fixed-seed matrix's coverage —
+        # including its known stale-serve interleavings — intact
+        ops = [(self.op_write, 6), (self.op_write_async, 4),
+               (self.op_read, 12), (self.op_fsync, 5),
                (self.op_tx_begin, 3), (self.op_tx_commit, 2),
                (self.op_tx_abort, 1), (self.op_punch, 1)]
         funcs = [f for f, _ in ops]
@@ -256,6 +326,7 @@ class _World:
                     self.op_tx_commit(node)
                 else:
                     self.op_tx_abort(node)
+            self._drain_pending(node, self.handles[node])
             self.op_fsync(node)
         self.pool.sim.clock.advance(TAU + 0.1)   # expire all leases
         cur = self.current()

@@ -7,6 +7,9 @@ lost forever.  ``poll()`` must snapshot each event's completion exactly
 once."""
 import threading
 import time
+from concurrent.futures import TimeoutError as _FutTimeout
+
+import pytest
 
 from repro.core import EventQueue
 
@@ -73,4 +76,66 @@ def test_drain_reraises_first_error():
     else:  # pragma: no cover
         raise AssertionError("drain() swallowed the error")
     finally:
+        eq.close()
+
+
+def test_submit_backpressure_blocks_at_depth():
+    """depth is a real bound: the (depth+1)-th submit blocks until a slot
+    frees — the queue itself is the backpressure, not an unbounded list."""
+    gate = threading.Event()
+    entered = threading.Event()
+    with EventQueue(depth=2) as eq:
+        eq.submit(gate.wait, 5.0)
+        eq.submit(gate.wait, 5.0)
+        third_in = threading.Event()
+
+        def oversubmit():
+            entered.set()
+            eq.submit(lambda: 3)
+            third_in.set()
+
+        t = threading.Thread(target=oversubmit, daemon=True)
+        t.start()
+        entered.wait(1.0)
+        assert not third_in.wait(0.1)       # blocked: queue is full
+        assert eq.inflight == 2
+        gate.set()                          # a slot frees...
+        assert third_in.wait(2.0)           # ...and the submit goes through
+        t.join(2.0)
+
+
+def test_backpressure_never_loses_forced_out_errors():
+    """An event force-retired by a full-queue submit keeps its error: it
+    re-raises at the next drain instead of vanishing."""
+    def boom():
+        raise RuntimeError("forced out")
+
+    eq = EventQueue(depth=1)
+    try:
+        eq.submit(boom)
+        ok = eq.submit(lambda: 1)           # forces boom's retirement
+        assert ok.wait() == 1
+        with pytest.raises(RuntimeError, match="forced out"):
+            eq.drain()
+        eq.drain()                          # raised exactly once
+    finally:
+        eq.close()
+
+
+def test_drain_timeout_is_a_deadline_not_per_event():
+    """Draining several slow events must time out after ~timeout total,
+    not timeout-per-event."""
+    gate = threading.Event()
+    eq = EventQueue(depth=4)
+    try:
+        for _ in range(4):
+            eq.submit(gate.wait, 10.0)
+        t0 = time.monotonic()
+        with pytest.raises(Exception) as ei:
+            eq.drain(timeout=0.2)
+        took = time.monotonic() - t0
+        assert isinstance(ei.value, (TimeoutError, _FutTimeout))
+        assert took < 1.0                   # one deadline, not 4 x 0.2
+    finally:
+        gate.set()
         eq.close()
