@@ -365,6 +365,57 @@ def serve_table(rows: list[dict]) -> str:
                                              "max_staleness_s", "{:.2f}")
                                         for c in counts) + " |")
         out.append("")
+    srows = [r for r in rows if r.get("mode") == "sched"]
+    if srows:
+        r0 = srows[0]
+        out += [f"### Control plane: affinity vs random placement "
+                f"({r0['family']}, {r0['n_leaves']} x {r0['leaf_kib']} KiB "
+                f"leaves, {r0['rounds']} return waves, decode "
+                f"{r0['decode_ms']} ms)", "",
+                "| sessions x nodes | router | per-reader GiB/s | "
+                "wave ms | hit rate | route us/decision | failovers |",
+                "|---|---|---|---|---|---|---|"]
+        for r in sorted(srows, key=lambda r: (r["sessions"], r["nodes"],
+                                              r["router"])):
+            out.append(f"| {r['sessions']} x {r['nodes']} | {r['router']} "
+                       f"| {r['per_reader_gib_s']:.3f} | "
+                       f"{r['wave_ms']:.2f} | {r['hit_rate']:.2f} | "
+                       f"{r['route_us']:.1f} | {r['failovers']} |")
+        out.append("")
+    crows = [r for r in rows if r.get("mode") == "churn"]
+    if crows:
+        out += ["### Bounded store under churn (admission evictions "
+                "costed through the pipeline)", "",
+                "| family | nodes | offered | quota MiB | max store MiB | "
+                "evictions | p50 ms | p95 ms | SLO ms |",
+                "|---|---|---|---|---|---|---|---|---|"]
+        for r in crows:
+            out.append(f"| {r['family']} | {r['nodes']} | {r['offered']} "
+                       f"| {r['quota_mib']:.0f} | "
+                       f"{r['max_store_mib']:.0f} | {r['evictions']} | "
+                       f"{r['p50_ms']:.2f} | {r['p95_ms']:.2f} | "
+                       f"{r['slo_ms']:.0f} |")
+        out.append("")
+    prows = [r for r in rows if r.get("mode") == "partial"]
+    if prows:
+        r0 = prows[0]
+        sizes = sorted({r["leaf_mib"] for r in prows})
+        out += [f"### Paged partial restore ({r0['sessions']} "
+                f"sessions/batch, {r0['n_leaves']} leaves, window "
+                f"{r0['win_kib']} KiB/leaf; full -> window ms, speedup)",
+                "",
+                "| interface | "
+                + " | ".join(f"{s} MiB leaves" for s in sizes) + " |",
+                "|---|" + "---|" * len(sizes)]
+        for iface in sorted({r["interface"] for r in prows}):
+            cells = []
+            for s in sizes:
+                r = next((r for r in prows if r["interface"] == iface
+                          and r["leaf_mib"] == s), None)
+                cells.append(f"{r['full_ms']:.2f} -> {r['window_ms']:.2f} "
+                             f"({r['speedup']:.1f}x)" if r else "-")
+            out.append(f"| {iface} | " + " | ".join(cells) + " |")
+        out.append("")
     if not out:
         return ""
     out.extend(_claims_lines(rows, prefixes=("SV",)))

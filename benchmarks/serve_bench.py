@@ -15,7 +15,28 @@ inference serving — a single-writer/many-reader regime of small leaves:
                      session per token step through their own node's
                      mount.  Swept across reader count and coherence
                      policy per interface family (claims SV2, SV3).
+* ``--mode sched`` — the control plane: thousands of sessions returning
+                     to hundreds of decode nodes each round, placed by
+                     ``ServeScheduler`` affinity routing vs. random
+                     placement.  Each round is one concurrent "return
+                     wave" phase (the fleet restores together, like one
+                     batched decode step), preceded by a costed
+                     control-plane phase of routing decisions (claim
+                     SV4).
+* ``--mode churn`` — the bounded store: sessions keep arriving into a
+                     quota-limited store; admission evicts store-LRU
+                     victims through the real pipeline while returning
+                     sessions restore under a latency SLO (claim SV5).
+* ``--mode partial`` — paged partial restore: a batched decode step
+                     fetches only the recent-token window of every leaf
+                     (``restore_window``) instead of the full session
+                     (claim SV6).
 * ``--mode all``   — everything.
+
+Decode cadence is *measured*, not guessed: unless ``--decode-ms``
+forces a value, one jitted batched decode step of a real (smoke-sized)
+architecture is timed via ``repro.serve.measure_decode_s`` and that
+drives the simulated think/cadence clock between token steps.
 
 Claims validated:
 
@@ -31,6 +52,14 @@ Claims validated:
   size, foreign publishes are observed via token revalidation, and a
   post-publish read outside the lease window returns the new step's
   bytes exactly.
+* **SV4** — affinity routing >= 3x the per-reader restore bandwidth of
+  random placement at the largest fleet point: returning sessions land
+  on the node whose cache already holds them.
+* **SV5** — a bounded store holds the restore-latency SLO under session
+  churn, with admission evictions really costed through the pipeline
+  and the store never exceeding its quota.
+* **SV6** — partial restore of the decode-step window is >= 4x faster
+  than full restore for long sessions at the largest leaf size.
 """
 from __future__ import annotations
 
@@ -45,7 +74,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core import Pool, Topology, bandwidth       # noqa: E402
 from repro.core.interfaces import DFS, make_interface  # noqa: E402
-from repro.serve import KVCacheStore                   # noqa: E402
+from repro.serve import KVCacheStore, ServeScheduler   # noqa: E402
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 MIB = 1 << 20
@@ -133,11 +162,15 @@ def hot_restore(interface: str, n_leaves: int, leaf_kib: int,
 # ---------------------------------------------------------------- fleet --
 def fleet(family: str, policy: str, readers: int, n_leaves: int,
           leaf_kib: int, publishes: int, token_steps: int, tau: float,
-          think: float) -> dict:
+          decode_s: float) -> dict:
     """One serving fleet: a prefill writer on client node 0 publishes the
     session (and republishes a new step every round); ``readers`` decode
     nodes each restore the whole session once per token step through
-    their own mount.  ``policy="off"`` is the uncached-fleet baseline."""
+    their own mount.  ``policy="off"`` is the uncached-fleet baseline.
+    ``decode_s`` — the measured batched decode-step time — is the compute
+    the fleet does between token steps, so the publish cadence
+    (``token_steps * decode_s`` between republishes) comes from the model,
+    not a guess."""
     pool, dfs = make_world(1 + readers)
     writer = KVCacheStore(dfs, interface=family, n_writers=1)
     r_iface = make_interface(reader_mount(family, policy, tau), dfs)
@@ -157,7 +190,7 @@ def fleet(family: str, policy: str, readers: int, n_leaves: int,
                     reader.restore(sess, client_node=1 + r)
             t_read += ph.elapsed
             read_bytes += readers * nbytes
-            pool.sim.clock.advance(think)   # decode compute between steps
+            pool.sim.clock.advance(decode_s)  # measured decode between steps
     # snapshot the reader mount's stats NOW: everything below is
     # verification instrumentation, and its traffic must not leak into
     # the serving-loop measurements
@@ -178,11 +211,202 @@ def fleet(family: str, policy: str, readers: int, n_leaves: int,
             "readers": readers, "n_leaves": n_leaves,
             "leaf_kib": leaf_kib, "tau_s": tau,
             "publishes": publishes, "token_steps": token_steps,
+            "decode_ms": round(decode_s * 1e3, 3),
+            "cadence_s": round(token_steps * decode_s, 4),
             "publish_gib_s": round(bandwidth(publishes * nbytes, t_pub), 3),
             "agg_read_gib_s": round(agg, 3),
             "per_reader_gib_s": round(agg / readers, 3),
             **loop_stats, "fresh_after_tau": True,
             "epilogue_revals": epilogue_revals}
+
+
+# ---------------------------------------------------------------- sched --
+def sched_run(router: str, family: str, sessions: int, nodes: int,
+              n_leaves: int, leaf_kib: int, rounds: int, tau: float,
+              decode_s: float, seed: int = 0) -> dict:
+    """The control plane at fleet scale: ``sessions`` published sessions
+    return once per round to a fleet of ``nodes`` decode nodes.  Each
+    round is two phases — a control-plane phase (every routing decision:
+    one session-index KV read for ``router="affinity"``, none for the
+    ``"random"`` baseline) and one concurrent return-wave phase (every
+    session's restore on its assigned node, like one batched decode
+    step).  A node memoizes the manifest of sessions it has served
+    (invalidated by the index's published step on republish), so the
+    steady path pays leaf reads — round 0 warms the fleet, later rounds
+    are measured."""
+    pool, dfs = make_world(1 + nodes)
+    writer = KVCacheStore(dfs, interface=family, n_writers=1)
+    r_iface = make_interface(reader_mount(family, "timeout", tau), dfs)
+    reader = KVCacheStore(dfs, interface=r_iface, verify_on_restore=False)
+    ids = [f"s{i:05d}" for i in range(sessions)]
+    sess_bytes = n_leaves * (leaf_kib << 10)
+    with pool.sim.phase():
+        for i, s in enumerate(ids):
+            writer.offload(s, synth_cache(n_leaves, leaf_kib, step=i),
+                           step=0)
+    sched = ServeScheduler(reader, nodes=list(range(1, 1 + nodes)))
+    rng = np.random.default_rng(seed)
+    memo: dict = {}              # (node, session) -> manifest memo
+    t_route = t_read = 0.0
+    read_bytes = measured = 0
+    hits0 = misses0 = 0
+    for rnd in range(rounds):
+        if rnd == 1:             # measure warm rounds only
+            st = r_iface.cache_stats()
+            hits0 = st.get("read_hits", 0)
+            misses0 = st.get("read_misses", 0)
+        with pool.sim.phase() as rp:        # control plane: route the wave
+            placed = []
+            for s in ids:
+                node = (sched.begin(s) if router == "affinity"
+                        else sched.begin(
+                            s, node=int(rng.integers(1, 1 + nodes))))
+                placed.append((s, node))
+        with pool.sim.phase() as ph:        # data plane: the return wave
+            for s, node in placed:
+                man = memo.get((node, s))
+                if man is None:             # first visit to this node
+                    man = reader.manifest(s)
+                    memo[(node, s)] = man
+                reader.restore(s, client_node=node, man=man)
+                sched.end(s, node, nbytes=sess_bytes)
+        if rnd >= 1:
+            t_route += rp.elapsed
+            t_read += ph.elapsed
+            read_bytes += sessions * sess_bytes
+            measured += 1
+        pool.sim.clock.advance(decode_s)    # batched decode between waves
+    st = r_iface.cache_stats()
+    hits = st.get("read_hits", 0) - hits0
+    misses = st.get("read_misses", 0) - misses0
+    stats = sched.stats()
+    agg = bandwidth(read_bytes, t_read)
+    return {"mode": "sched", "router": router, "family": family,
+            "sessions": sessions, "nodes": nodes, "rounds": rounds,
+            "n_leaves": n_leaves, "leaf_kib": leaf_kib, "tau_s": tau,
+            "decode_ms": round(decode_s * 1e3, 3),
+            "per_reader_gib_s": round(agg / nodes, 3),
+            "agg_read_gib_s": round(agg, 3),
+            "wave_ms": round(t_read / max(1, measured) * 1e3, 3),
+            "route_us": round(
+                t_route / max(1, measured * sessions) * 1e6, 2),
+            "hit_rate": round(hits / max(1, hits + misses), 3),
+            "decisions": stats["decisions"],
+            "index_reads": stats["index_reads"],
+            "failovers": stats["failovers"]}
+
+
+# ---------------------------------------------------------------- churn --
+def churn_run(family: str, nodes: int, rounds: int, arrivals: int,
+              returns: int, quota_sessions: int, n_leaves: int,
+              leaf_kib: int, tau: float, decode_s: float, slo_ms: float,
+              seed: int = 0) -> dict:
+    """The bounded store under churn: every round, ``arrivals`` new
+    sessions are admitted into a store capped at ``quota_sessions`` worth
+    of payload (admission evicts store-LRU victims through the real
+    pipeline — their phases are costed separately), and ``returns``
+    returning sessions restore through the scheduler under a latency SLO.
+    Restores run one phase each: the latency distribution is the point."""
+    pool, dfs = make_world(1 + nodes)
+    iface = make_interface(reader_mount(family, "timeout", tau), dfs)
+    store = KVCacheStore(dfs, interface=iface, verify_on_restore=False,
+                         n_writers=1)
+    sess_bytes = n_leaves * (leaf_kib << 10)
+    quota = quota_sessions * sess_bytes
+    sched = ServeScheduler(store, nodes=list(range(1, 1 + nodes)),
+                           quota_bytes=quota)
+    rng = np.random.default_rng(seed)
+    memo: dict = {}
+    lat: list[float] = []
+    t_evict = t_offload = 0.0
+    max_store = 0
+    next_id = 0
+    for _rnd in range(rounds):
+        for _ in range(arrivals):
+            s = f"c{next_id:05d}"
+            tree = synth_cache(n_leaves, leaf_kib, step=next_id)
+            next_id += 1
+            with pool.sim.phase() as ep:    # admission: evictions costed
+                sched.reserve(s, sess_bytes)
+            with pool.sim.phase() as op:    # then the publish itself
+                sched.offload(s, tree, step=0)
+            t_evict += ep.elapsed
+            t_offload += op.elapsed
+        live = sched.lru_sessions()
+        picks = rng.choice(len(live), size=min(returns, len(live)),
+                           replace=False)
+        for i in picks:
+            s = live[int(i)]
+            with pool.sim.phase() as ph:    # end-to-end return latency:
+                node = sched.begin(s)       # route + manifest + leaves
+                man = memo.get((node, s))
+                if man is None:
+                    man = store.manifest(s)
+                    memo[(node, s)] = man
+                store.restore(s, client_node=node, man=man)
+            sched.end(s, node, nbytes=sess_bytes)
+            lat.append(ph.elapsed)
+        max_store = max(max_store, sched.store_bytes)
+        pool.sim.clock.advance(decode_s * max(1, returns // nodes))
+    stats = sched.stats()
+    p50, p95 = (float(np.percentile(lat, q)) * 1e3 for q in (50, 95))
+    return {"mode": "churn", "family": family, "nodes": nodes,
+            "rounds": rounds, "arrivals": arrivals, "returns": returns,
+            "n_leaves": n_leaves, "leaf_kib": leaf_kib, "tau_s": tau,
+            "decode_ms": round(decode_s * 1e3, 3),
+            "quota_mib": round(quota / MIB, 2),
+            "max_store_mib": round(max_store / MIB, 2),
+            "sessions_live": stats["sessions"],
+            "offered": next_id,
+            "evictions": stats["evictions"],
+            "evicted_mib": round(stats["evicted_bytes"] / MIB, 2),
+            "evict_ms_total": round(t_evict * 1e3, 3),
+            "offload_ms_mean": round(t_offload / max(1, next_id) * 1e3, 3),
+            "restores": len(lat),
+            "p50_ms": round(p50, 3), "p95_ms": round(p95, 3),
+            "slo_ms": float(slo_ms),
+            "slo_ok": bool(p95 <= slo_ms)}
+
+
+# -------------------------------------------------------------- partial --
+def partial_run(interface: str, sessions: int, n_leaves: int,
+                leaf_mib: int, win_kib: int) -> dict:
+    """Paged partial restore vs. full restore for long sessions: one
+    batched decode step needs the recent-token window (the last
+    ``win_kib`` KiB of every leaf) of each of ``sessions`` concurrent
+    sessions — not their whole KV caches.  Both sides run as one
+    concurrent phase over the batch (manifests pre-memoized for both) and
+    the window bytes are verified identical to the full restore's tail."""
+    pool, dfs = make_world(8)
+    store = KVCacheStore(dfs, interface=interface, n_writers=8)
+    leaf_bytes = leaf_mib << 20
+    ids = [f"p{i:02d}" for i in range(sessions)]
+    with pool.sim.phase():
+        for i, s in enumerate(ids):
+            store.offload(s, synth_cache(n_leaves, leaf_mib << 10, step=i),
+                          step=0)
+    mans = {s: store.manifest(s) for s in ids}
+    lo, hi = leaf_bytes - (win_kib << 10), leaf_bytes
+    with pool.sim.phase() as fp:
+        fulls = {s: store.restore(s, man=mans[s]) for s in ids}
+    with pool.sim.phase() as wp:
+        wins = {s: store.restore_window(s, lo, hi, man=mans[s])
+                for s in ids}
+    for s in ids:                   # windows byte-identical to full tails
+        for path, got in wins[s].items():
+            leaf = np.asarray(fulls[s][path.lstrip("/")]).view(np.uint8)
+            np.testing.assert_array_equal(got, leaf[lo:hi])
+    full_b = sessions * n_leaves * leaf_bytes
+    win_b = sessions * n_leaves * (hi - lo)
+    return {"mode": "partial", "interface": interface,
+            "sessions": sessions, "n_leaves": n_leaves,
+            "leaf_mib": leaf_mib, "win_kib": win_kib,
+            "full_ms": round(fp.elapsed * 1e3, 3),
+            "window_ms": round(wp.elapsed * 1e3, 3),
+            "full_gib_s": round(bandwidth(full_b, fp.elapsed), 3),
+            "window_gib_s": round(bandwidth(win_b, wp.elapsed), 3),
+            "speedup": round(fp.elapsed / max(1e-12, wp.elapsed), 2),
+            "identical": True}
 
 
 # --------------------------------------------------------------- claims --
@@ -269,14 +493,91 @@ def check_claims(rows: list[dict]) -> list[dict]:
                             f"{r['epilogue_revals']:,} + fresh" for r in
                             sorted(trows, key=lambda r: (r["family"],
                                                          r["readers"])))})
+    srows = [r for r in rows if r["mode"] == "sched"]
+    if srows:
+        # the largest fleet point that has both routers
+        pts = sorted({(r["sessions"], r["nodes"]) for r in srows})
+        for sess_n, nodes_n in reversed(pts):
+            pair = {r["router"]: r for r in srows
+                    if (r["sessions"], r["nodes"]) == (sess_n, nodes_n)}
+            if {"affinity", "random"} <= set(pair):
+                aff, rnd_ = pair["affinity"], pair["random"]
+                ratio = aff["per_reader_gib_s"] / max(
+                    1e-9, rnd_["per_reader_gib_s"])
+                out.append({
+                    "claim": "SV4 affinity routing >= 3x the per-reader "
+                             "restore bandwidth of random placement at "
+                             "the largest fleet point",
+                    "ok": bool(ratio >= 3.0),
+                    "detail": f"{sess_n} sessions x {nodes_n} nodes "
+                              f"({aff['family']}): affinity "
+                              f"{aff['per_reader_gib_s']:.3f} vs random "
+                              f"{rnd_['per_reader_gib_s']:.3f} GiB/s per "
+                              f"reader ({ratio:.0f}x); hit rate "
+                              f"{aff['hit_rate']:.2f} vs "
+                              f"{rnd_['hit_rate']:.2f}; route "
+                              f"{aff['route_us']:.0f} us/decision "
+                              f"({aff['decisions']:,} decisions)"})
+                break
+    crows = [r for r in rows if r["mode"] == "churn"]
+    if crows:
+        ok = all(r["slo_ok"] and r["evictions"] > 0
+                 and r["max_store_mib"] <= r["quota_mib"] + 1e-6
+                 and r["evict_ms_total"] > 0 for r in crows)
+        out.append({
+            "claim": "SV5 the bounded store holds the restore-latency "
+                     "SLO under session churn, admission evictions are "
+                     "costed through the pipeline, and the quota is "
+                     "never exceeded",
+            "ok": bool(ok),
+            "detail": "; ".join(
+                f"{r['family']} N={r['nodes']}: p95 {r['p95_ms']:.2f}ms "
+                f"<= SLO {r['slo_ms']:.0f}ms, {r['evictions']} evictions "
+                f"({r['evicted_mib']:.0f} MiB, {r['evict_ms_total']:.1f}ms "
+                f"costed), store <= {r['max_store_mib']:.0f}/"
+                f"{r['quota_mib']:.0f} MiB over {r['offered']} offered"
+                for r in crows)})
+    prows = [r for r in rows if r["mode"] == "partial"]
+    if prows:
+        ok, det = True, []
+        for iface in sorted({r["interface"] for r in prows}):
+            rr = [r for r in prows if r["interface"] == iface]
+            big = max(rr, key=lambda r: r["leaf_mib"])
+            ok = ok and big["speedup"] >= 4.0 and big["identical"]
+            det.append(f"{iface} @ {big['leaf_mib']} MiB leaves: window "
+                       f"{big['window_ms']:.2f}ms vs full "
+                       f"{big['full_ms']:.2f}ms ({big['speedup']:.1f}x, "
+                       f"bytes identical)")
+        out.append({
+            "claim": "SV6 partial restore of the decode-step window is "
+                     ">= 4x full restore for long sessions at the "
+                     "largest leaf size, byte-identical to the full "
+                     "restore's window",
+            "ok": bool(ok),
+            "detail": "; ".join(det)})
     return out
 
 
 # ----------------------------------------------------------------- main --
+def resolve_decode_s(args) -> tuple[float, str]:
+    """The cadence source: a forced ``--decode-ms``, or one measured
+    jitted batched decode step (``repro.serve.measure_decode_s``)."""
+    if args.decode_ms > 0:
+        return args.decode_ms / 1e3, "forced"
+    try:
+        from repro.serve import measure_decode_s
+        s = measure_decode_s(args.decode_arch, args.decode_batch,
+                             iters=args.decode_iters)
+        return s, f"measured:{args.decode_arch} b{args.decode_batch}"
+    except Exception as e:  # minimal env without the model stack
+        return 2e-3, f"fallback({type(e).__name__})"
+
+
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="all",
-                    choices=["hot", "fleet", "all"])
+                    choices=["hot", "fleet", "sched", "churn", "partial",
+                             "all"])
     ap.add_argument("--hot-interfaces", nargs="+",
                     default=["posix", "posix-cached", "posix-readahead",
                              "dfs", "dfs-cached", "daos-array"])
@@ -301,12 +602,47 @@ def main(argv=None) -> list[dict]:
                     help="decode re-reads per publish round")
     ap.add_argument("--tau", type=float, default=1.0,
                     help="timeout-policy lease (s)")
-    ap.add_argument("--think", type=float, default=0.02,
-                    help="decode compute between token steps (s)")
+    ap.add_argument("--decode-ms", type=float, default=0.0,
+                    help="force the decode-step time (ms); <= 0 measures "
+                         "one jitted batched decode step instead")
+    ap.add_argument("--decode-arch", default="deepseek-7b")
+    ap.add_argument("--decode-batch", type=int, default=8)
+    ap.add_argument("--decode-iters", type=int, default=8)
+    # sched: fleet points are zip(--sched-sessions, --sched-nodes)
+    ap.add_argument("--sched-family", default="dfs")
+    ap.add_argument("--sched-sessions", nargs="+", type=int,
+                    default=[512, 2048])
+    ap.add_argument("--sched-nodes", nargs="+", type=int,
+                    default=[32, 256])
+    ap.add_argument("--sched-rounds", type=int, default=3,
+                    help="return waves per point (round 0 warms)")
+    ap.add_argument("--sched-leaves", type=int, default=8)
+    ap.add_argument("--sched-leaf-kib", type=int, default=16)
+    # churn
+    ap.add_argument("--churn-family", default="dfs")
+    ap.add_argument("--churn-nodes", type=int, default=16)
+    ap.add_argument("--churn-rounds", type=int, default=8)
+    ap.add_argument("--churn-arrivals", type=int, default=24)
+    ap.add_argument("--churn-returns", type=int, default=64)
+    ap.add_argument("--churn-quota-sessions", type=int, default=64)
+    ap.add_argument("--slo-ms", type=float, default=5.0,
+                    help="p95 restore-latency SLO for the churn run")
+    # partial
+    ap.add_argument("--partial-interfaces", nargs="+",
+                    default=["dfs", "daos-array"])
+    ap.add_argument("--partial-sessions", type=int, default=4,
+                    help="sessions per batched decode step")
+    ap.add_argument("--partial-leaves", type=int, default=8)
+    ap.add_argument("--partial-leaf-mib", nargs="+", type=int,
+                    default=[1, 4, 8])
+    ap.add_argument("--partial-win-kib", type=int, default=64,
+                    help="decode-step window: last KiB of every leaf")
     ap.add_argument("--out", default=str(ARTIFACTS / "serve_bench.json"))
     args = ap.parse_args(argv)
 
     rows: list[dict] = []
+    decode_s, decode_src = resolve_decode_s(args)
+    print(f"decode step: {decode_s * 1e3:.3f} ms ({decode_src})")
     if args.mode in ("hot", "all"):
         print(f"=== hot-session restore ({args.n_leaves} leaves/session) "
               "===")
@@ -330,13 +666,57 @@ def main(argv=None) -> list[dict]:
                 for policy in args.policies:
                     r = fleet(family, policy, readers, args.n_leaves,
                               leaf_kib, args.publishes, args.token_steps,
-                              args.tau, args.think)
+                              args.tau, decode_s)
                     rows.append(r)
                     print(f"N={readers:3d} {policy:10s} per-reader "
                           f"{r['per_reader_gib_s']:7.2f} GiB/s  "
                           f"msgs {r['messages']:7,}  "
                           f"hit {r['hit_rate']:.2f}  "
                           f"stale<= {r['max_staleness_s']:.2f}s")
+    if args.mode in ("sched", "all"):
+        for sessions, nodes in zip(args.sched_sessions, args.sched_nodes):
+            print(f"\n=== control plane ({args.sched_family}: {sessions} "
+                  f"sessions x {nodes} decode nodes, {args.sched_leaves} "
+                  f"x {args.sched_leaf_kib} KiB leaves, "
+                  f"{args.sched_rounds} waves) ===")
+            for router in ("affinity", "random"):
+                r = sched_run(router, args.sched_family, sessions, nodes,
+                              args.sched_leaves, args.sched_leaf_kib,
+                              args.sched_rounds, args.tau, decode_s)
+                rows.append(r)
+                print(f"{router:9s} per-reader "
+                      f"{r['per_reader_gib_s']:7.3f} GiB/s  wave "
+                      f"{r['wave_ms']:8.2f} ms  hit {r['hit_rate']:.2f}  "
+                      f"route {r['route_us']:5.1f} us/decision")
+    if args.mode in ("churn", "all"):
+        print(f"\n=== bounded store under churn ({args.churn_family}: "
+              f"{args.churn_nodes} nodes, quota "
+              f"{args.churn_quota_sessions} sessions, "
+              f"{args.churn_arrivals} arrivals + {args.churn_returns} "
+              f"returns x {args.churn_rounds} rounds) ===")
+        r = churn_run(args.churn_family, args.churn_nodes,
+                      args.churn_rounds, args.churn_arrivals,
+                      args.churn_returns, args.churn_quota_sessions,
+                      args.sched_leaves, args.sched_leaf_kib, args.tau,
+                      decode_s, args.slo_ms)
+        rows.append(r)
+        print(f"p50 {r['p50_ms']:.2f} ms  p95 {r['p95_ms']:.2f} ms "
+              f"(SLO {r['slo_ms']:.0f} ms)  evictions {r['evictions']} "
+              f"({r['evicted_mib']:.0f} MiB)  store "
+              f"{r['max_store_mib']:.0f}/{r['quota_mib']:.0f} MiB")
+    if args.mode in ("partial", "all"):
+        print(f"\n=== paged partial restore ({args.partial_sessions} "
+              f"sessions/batch, {args.partial_leaves} leaves, window "
+              f"{args.partial_win_kib} KiB/leaf) ===")
+        for iface in args.partial_interfaces:
+            for leaf_mib in args.partial_leaf_mib:
+                r = partial_run(iface, args.partial_sessions,
+                                args.partial_leaves, leaf_mib,
+                                args.partial_win_kib)
+                rows.append(r)
+                print(f"{iface:12s} leaf {leaf_mib:3d} MiB  full "
+                      f"{r['full_ms']:8.2f} ms  window "
+                      f"{r['window_ms']:7.2f} ms  ({r['speedup']:5.1f}x)")
     claims = check_claims(rows)
     if claims:
         print("\n=== Serving claims ===")

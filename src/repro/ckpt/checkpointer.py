@@ -30,6 +30,8 @@ continues (compute/IO overlap, the paper's non-blocking I/O feature).
 """
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from ..core import EventQueue, NotFoundError
@@ -39,6 +41,42 @@ from . import serializer as S
 
 class CheckpointError(IOError):
     pass
+
+
+class _SerialChain:
+    """Pipelined host-side serialisation via completion-callback chaining
+    (ROADMAP async follow-on (d)): leaf ``i``'s serialisation event, on
+    completing, submits leaf ``i+1``'s — so while the save loop queues
+    shard writes for leaf ``i`` on the data path, leaf ``i+1`` is already
+    serialising on the event queue's worker.  ``get(i)`` is the in-order
+    consumer; it also (idempotently) submits ``i`` so an out-of-order or
+    post-error access never deadlocks.  Runs on its own small queue, NOT
+    the checkpointer's save queue: concurrent ``async_save``s could
+    occupy every save slot and a nested submit would then wait on itself.
+    """
+
+    def __init__(self, eq: EventQueue, leaves: list) -> None:
+        self._eq = eq
+        self._leaves = leaves
+        self._events: dict = {}
+        # reentrant: an already-complete event fires its callback on the
+        # submitting thread, inside this very lock
+        self._lock = threading.RLock()
+        self._submit(0)
+
+    def _submit(self, i: int):
+        with self._lock:
+            if i >= len(self._leaves):
+                return None
+            if i not in self._events:
+                self._events[i] = self._eq.submit(
+                    S.leaf_to_bytes, self._leaves[i][1],
+                    on_complete=lambda _ev: self._submit(i + 1))
+            return self._events[i]
+
+    def get(self, i: int):
+        """``(raw, meta)`` of leaf ``i`` (blocks until serialised)."""
+        return self._submit(i).wait()
 
 
 class Checkpointer:
@@ -57,6 +95,14 @@ class Checkpointer:
         self.base = base.rstrip("/")
         self.verify = verify_on_restore
         self.eq = EventQueue(depth=4)
+        # serialisation pipeline (see _SerialChain).  Each chain keeps at
+        # most 2 events in flight (the leaf being consumed + the one
+        # serialising ahead) and there are at most eq.depth concurrent
+        # async saves plus one blocking one — sized so chain callbacks,
+        # which run on this queue's own workers, can never hit its
+        # backpressure path (a callback blocking in submit would starve
+        # the queue of the worker needed to clear it)
+        self._ser_eq = EventQueue(depth=2 * (self.eq.depth + 1))
         try:
             self.iface.mkdir(self.base)
         except Exception:
@@ -112,8 +158,11 @@ class Checkpointer:
         return {"leaves": entries, "step": step}
 
     def _save_sharded(self, tx, sdir, leaves, entries) -> None:
-        for path, leaf in leaves:
-            raw, meta = S.leaf_to_bytes(leaf)
+        # serialise/flush overlap: leaf i+1 serialises on the chain's
+        # worker while leaf i's shard writes queue below
+        chain = _SerialChain(self._ser_eq, leaves)
+        for i, (path, _leaf) in enumerate(leaves):
+            raw, meta = chain.get(i)
             csum = S.checksum_leaf(raw)
             ranges = S.shard_ranges(raw.size, self.n_writers)
             shards = []
@@ -134,8 +183,9 @@ class Checkpointer:
         fname = f"{sdir}/checkpoint.bin"
         h0 = self.iface.create(fname, oclass=self.oclass, tx=tx)
         offset = 0
-        for path, leaf in leaves:
-            raw, meta = S.leaf_to_bytes(leaf)
+        chain = _SerialChain(self._ser_eq, leaves)
+        for i, (path, _leaf) in enumerate(leaves):
+            raw, meta = chain.get(i)
             csum = S.checksum_leaf(raw)
             # hosts write disjoint sub-ranges of this leaf's region, each
             # through its own descriptor on the shared file (dup: no extra

@@ -16,6 +16,7 @@ charged by the simulation's solver, not by host parallelism.
 from __future__ import annotations
 
 import concurrent.futures as _fut
+import threading as _threading
 import time as _time
 from collections import Counter
 from typing import Any, Callable, Iterable
@@ -32,6 +33,18 @@ class Event:
     def wait(self, timeout: float | None = None) -> Any:
         return self._future.result(timeout)
 
+    def on_complete(self, fn: Callable[["Event"], Any]) -> "Event":
+        """Completion-callback chaining (the daos_event callback slot):
+        ``fn(self)`` runs exactly once when this event completes — on the
+        worker thread that completed it, or immediately on the caller if
+        it already has.  Callbacks are allowed to submit follow-on work to
+        the queue; that is the chaining.  The event completes (and
+        ``wait`` returns) regardless of what the callback does — an
+        exception inside ``fn`` is swallowed by the future machinery, so
+        callbacks that can fail must capture their own errors."""
+        self._future.add_done_callback(lambda _f: fn(self))
+        return self
+
     @property
     def error(self) -> BaseException | None:
         return self._future.exception() if self._future.done() else None
@@ -45,6 +58,10 @@ class EventQueue:
     full, blocks on the oldest in-flight event before admitting the new one
     (daos_eq semantics — the queue is the backpressure).  Errors of events
     retired that way are not lost: they re-raise at the next ``drain``.
+
+    The queue is thread-safe: completion callbacks (``on_complete``) run
+    on worker threads and may submit follow-on events, so the in-flight
+    list is guarded by a lock (waits happen outside it).
     """
 
     def __init__(self, depth: int = 8) -> None:
@@ -53,23 +70,37 @@ class EventQueue:
                                              thread_name_prefix="repro-eq")
         self._inflight: list[Event] = []
         self._errors: list[BaseException] = []
+        self._lock = _threading.Lock()
 
-    def submit(self, fn: Callable, /, *args, **kwargs) -> Event:
-        while len(self._inflight) >= self.depth:
+    def submit(self, fn: Callable, /, *args,
+               on_complete: Callable[[Event], Any] | None = None,
+               **kwargs) -> Event:
+        while True:
+            with self._lock:
+                if len(self._inflight) < self.depth:
+                    ev = Event(self._pool.submit(fn, *args, **kwargs))
+                    self._inflight.append(ev)
+                    break
+            # full: poll-retire completions first, then block on the oldest
             for done in self.poll():
                 if done.error is not None:
                     self._errors.append(done.error)
-            if len(self._inflight) < self.depth:
-                break
-            oldest = self._inflight[0]
+            with self._lock:
+                oldest = (self._inflight[0]
+                          if len(self._inflight) >= self.depth else None)
+            if oldest is None:
+                continue
             try:
                 oldest.wait()
             except BaseException as exc:  # noqa: BLE001 — re-raised at drain
                 self._errors.append(exc)
-            if self._inflight and self._inflight[0] is oldest:
-                self._inflight.pop(0)
-        ev = Event(self._pool.submit(fn, *args, **kwargs))
-        self._inflight.append(ev)
+            with self._lock:
+                if self._inflight and self._inflight[0] is oldest:
+                    self._inflight.pop(0)
+        if on_complete is not None:
+            # registered after admission: if the event already completed,
+            # the callback fires right here on the submitting thread
+            ev.on_complete(on_complete)
         return ev
 
     def poll(self) -> list[Event]:
@@ -79,9 +110,10 @@ class EventQueue:
         lists."""
         done: list[Event] = []
         pending: list[Event] = []
-        for e in self._inflight:
-            (done if e.test() else pending).append(e)
-        self._inflight = pending
+        with self._lock:
+            for e in self._inflight:
+                (done if e.test() else pending).append(e)
+            self._inflight[:] = pending
         return done
 
     def drain(self, timeout: float | None = None) -> None:
@@ -93,14 +125,20 @@ class EventQueue:
         deadline = None if timeout is None else _time.monotonic() + timeout
         errs = self._errors
         self._errors = []
-        for e in list(self._inflight):
+        with self._lock:
+            inflight = list(self._inflight)
+        for e in inflight:
             try:
                 left = (None if deadline is None
                         else max(0.0, deadline - _time.monotonic()))
                 e.wait(left)
             except BaseException as exc:  # noqa: BLE001 — surfaced below
                 errs.append(exc)
-        self._inflight.clear()
+        # retire only the snapshot: events chained in by completion
+        # callbacks DURING the drain stay in flight for the next one
+        with self._lock:
+            self._inflight[:] = [e for e in self._inflight
+                                 if e not in inflight]
         if errs:
             raise errs[0]
 

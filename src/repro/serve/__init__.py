@@ -1,5 +1,8 @@
 from .kvstore import KVCacheStore, KVStoreError
-from .serve_step import make_decode_step, make_prefill_step
+from .scheduler import NodeState, SchedulerError, ServeScheduler
+from .serve_step import (make_decode_step, make_prefill_step,
+                         measure_decode_s)
 
-__all__ = ["KVCacheStore", "KVStoreError", "make_decode_step",
-           "make_prefill_step"]
+__all__ = ["KVCacheStore", "KVStoreError", "NodeState", "SchedulerError",
+           "ServeScheduler", "make_decode_step", "make_prefill_step",
+           "measure_decode_s"]

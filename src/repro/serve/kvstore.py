@@ -26,7 +26,13 @@ Layout of one session:
                  LAST inside the same epoch transaction as the leaves;
 * session index — one KV record per session under the store base, written
                  in the same transaction, so namespace-less interfaces
-                 (``daos-array``) can still discover and GC sessions.
+                 (``daos-array``) can still discover and GC sessions.  The
+                 record carries ``{step, nbytes, n_leaves}`` so a scheduler
+                 routing thousands of sessions reads ONE small KV per
+                 decision instead of re-reading every manifest (the index
+                 is a cache; the manifest stays the source of truth and
+                 ``session_meta`` falls back to — and repairs from — it
+                 when the record is stale or unreadable).
 
 The transaction is the torn-snapshot guard: the container's commit barrier
 flushes any write-back data staged under the tx *before* the manifest
@@ -41,6 +47,8 @@ that node's cache tier — the many-reader re-read regime the serve
 benchmark measures.
 """
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
@@ -147,6 +155,38 @@ class KVCacheStore:
         man = self.manifest(session)
         return sum(int(e["nbytes"]) for e in man["leaves"].values())
 
+    @staticmethod
+    def _meta_record(step: int, entries: dict) -> bytes:
+        return json.dumps(
+            {"step": int(step),
+             "nbytes": sum(int(e["nbytes"]) for e in entries.values()),
+             "n_leaves": len(entries)}, sort_keys=True).encode()
+
+    def session_meta(self, session: str) -> dict:
+        """``{step, nbytes, n_leaves}`` from the session-index record — one
+        small KV read, the O(1) scheduler decision path.  A stale or
+        unreadable record (a pre-schema store, a torn index write) falls
+        back to the manifest and repairs the index in passing; only a
+        missing manifest raises."""
+        try:
+            raw = bytes(self._sessions_kv().get(str(session), "meta"))
+            meta = json.loads(raw)
+            return {"step": int(meta["step"]), "nbytes": int(meta["nbytes"]),
+                    "n_leaves": int(meta["n_leaves"])}
+        except (NotFoundError, KeyError, ValueError, TypeError):
+            pass
+        man = self.manifest(session)        # raises KVStoreError if gone
+        entries = man["leaves"]
+        meta = {"step": int(man["step"]),
+                "nbytes": sum(int(e["nbytes"]) for e in entries.values()),
+                "n_leaves": len(entries)}
+        try:                                # repair the index in passing
+            self._sessions_kv().put(str(session), "meta",
+                                    self._meta_record(meta["step"], entries))
+        except Exception:
+            pass
+        return meta
+
     # ------------- offload -------------
     def offload(self, session: str, cache, step: int = 0,
                 extra_meta: dict | None = None) -> dict:
@@ -189,8 +229,11 @@ class KVCacheStore:
                 **(extra_meta or {})})
             tx.put_kv(self._manifest_kv(session), "manifest", "json",
                       manifest)
-            tx.put_kv(self._sessions_kv(), str(session), "step",
-                      str(int(step)).encode())
+            # the scheduler's O(1) decision record: size + published step
+            # ride the same tx as the manifest, so the index can never
+            # list a torn publish (and never lags a committed one)
+            tx.put_kv(self._sessions_kv(), str(session), "meta",
+                      self._meta_record(step, entries))
             # commit barrier: write-back data staged under this tx reaches
             # the engines BEFORE the manifest becomes visible — a torn
             # offload can never be restored
@@ -214,14 +257,31 @@ class KVCacheStore:
                 "leaves": entries}
 
     # ------------- restore -------------
+    def _open_leaf(self, entry: dict, client_node: int | None,
+                   process: int | None):
+        """Open one leaf where its reader runs: the writer's node when no
+        ``client_node`` is given (hot restore, warm page caches), else the
+        caller's node/process (decode reader, its own cache tier)."""
+        if client_node is None:
+            node, proc = self.iface.place_writer(entry["writer"])
+        else:
+            node = client_node
+            proc = client_node if process is None else process
+        return self.iface.open(entry["file"], client_node=node, process=proc)
+
     def restore(self, session: str, client_node: int | None = None,
-                process: int | None = None):
+                process: int | None = None, man: dict | None = None):
         """Rebuild a session's cache pytree from its published snapshot.
 
         ``client_node=None`` reads each leaf on the node that wrote it
         (hot-session restore: warm page caches).  A decode reader passes
-        its own node: every leaf then flows through that node's cache."""
-        man = self.manifest(session)
+        its own node: every leaf then flows through that node's cache.
+        A node serving a resident session memoizes its manifest and passes
+        it as ``man`` — the session index's ``step`` (one small KV via
+        ``session_meta``) says when the memo went stale — so the steady
+        decode path pays leaf reads, not a manifest walk per step."""
+        if man is None:
+            man = self.manifest(session)
         items: dict = {}
         for path, entry in man["leaves"].items():
             if (client_node is None and self.multipart
@@ -231,13 +291,7 @@ class KVCacheStore:
                 raw = multipart_read(self.iface, entry["file"],
                                      int(entry["nbytes"]))
             else:
-                if client_node is None:
-                    node, proc = self.iface.place_writer(entry["writer"])
-                else:
-                    node = client_node
-                    proc = client_node if process is None else process
-                h = self.iface.open(entry["file"], client_node=node,
-                                    process=proc)
+                h = self._open_leaf(entry, client_node, process)
                 raw = np.asarray(h.read_at(0, entry["nbytes"]))
             if self.verify:
                 got = S.checksum_leaf(raw)
@@ -247,6 +301,67 @@ class KVCacheStore:
                         f"{got:#x} != {entry['csum']:#x}")
             items[path] = S.bytes_to_leaf(raw, entry)
         return S.unflatten_tree(items, _template(man["skeleton"]))
+
+    # ------------- paged partial restore -------------
+    def restore_slice(self, session: str, path: str, lo: int, hi: int,
+                      client_node: int | None = None,
+                      process: int | None = None,
+                      man: dict | None = None) -> np.ndarray:
+        """Bytes ``[lo, hi)`` of ONE leaf, clipped to the leaf — the paged
+        analogue of ``Checkpointer.restore_slice`` for the decode path.
+        The range read queues on the handle's async submission window;
+        hot-path windows at/above the multipart threshold fan across the
+        writer placement as ordered parts.  A partial range cannot be
+        checked against the manifest's whole-leaf checksum, so slices skip
+        verification and rely on the coherence layer's staleness bound —
+        the same contract fleet readers already run under.  A caller
+        slicing many leaves loads the manifest once and passes ``man``."""
+        if man is None:
+            man = self.manifest(session)
+        entry = man["leaves"][path]
+        lo = max(0, int(lo))
+        hi = min(int(entry["nbytes"]), int(hi))
+        if hi <= lo:
+            return np.zeros(0, np.uint8)
+        if (client_node is None and self.multipart
+                and should_multipart(hi - lo, self.mp_threshold)):
+            return multipart_read(self.iface, entry["file"], hi - lo,
+                                  offset=lo)
+        h = self._open_leaf(entry, client_node, process)
+        return np.asarray(h.read_at_async(lo, hi - lo).wait())
+
+    def restore_window(self, session: str, lo: int, hi: int,
+                       client_node: int | None = None,
+                       process: int | None = None,
+                       man: dict | None = None) -> dict:
+        """The decode-step window: bytes ``[lo, hi)`` of EVERY leaf (the
+        recent-token tail of each layer's K/V block), returned as
+        ``{leaf path: uint8 array}``.  All range reads are issued on their
+        handles' submission queues before any is awaited, so the window
+        pipelines across leaves and engines instead of fetching leaf by
+        leaf — this is what makes a 64 KiB decode window cheap against a
+        full-session restore."""
+        if man is None:
+            man = self.manifest(session)
+        out: dict = {}
+        pending: list = []
+        for path in sorted(man["leaves"]):
+            entry = man["leaves"][path]
+            a = max(0, int(lo))
+            b = min(int(entry["nbytes"]), int(hi))
+            if b <= a:
+                out[path] = np.zeros(0, np.uint8)
+                continue
+            if (client_node is None and self.multipart
+                    and should_multipart(b - a, self.mp_threshold)):
+                out[path] = multipart_read(self.iface, entry["file"], b - a,
+                                           offset=a)
+                continue
+            h = self._open_leaf(entry, client_node, process)
+            pending.append((path, h.read_at_async(a, b - a)))
+        for path, ev in pending:
+            out[path] = np.asarray(ev.wait())
+        return out
 
     # ------------- lifecycle (gc) -------------
     def evict(self, session: str) -> None:

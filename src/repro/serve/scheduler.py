@@ -1,0 +1,268 @@
+"""Fleet serving control plane: session-affinity routing over the store.
+
+The serving tier's data path (``KVCacheStore`` on the cached interface
+matrix) makes a restore cheap exactly when the session's bytes already sit
+in the target node's ``ClientCache``.  At fleet scale that is a *placement*
+problem, not an interface problem (the ECMWF follow-on papers' system-level
+point): a returning request must land on the node that still holds its
+session, spill to the next-best node when that one is saturated, and the
+store underneath must stay bounded — evicting cold sessions through the
+real pipeline so the cost of staying bounded is measured, not assumed.
+
+``ServeScheduler`` is that control plane, and it is deliberately thin:
+
+* **routing state** — per-node residency books (an LRU mirror of what each
+  node's cache plausibly still holds, trimmed to the node's cache budget)
+  plus live/saturation flags.  Affinity of a session to a node is the
+  resident fraction of the session's bytes; the winner is the warmest
+  non-saturated live node, with failover to the least-loaded node when
+  the whole fleet is busy.
+* **one KV per decision** — a routing decision reads the session's
+  ``{step, nbytes, n_leaves}`` record from the store's session index
+  (written transactionally at offload) instead of its manifest: O(1)
+  small-KV traffic per request where a manifest walk would be
+  O(sessions x leaves).
+* **bounded store** — ``quota_bytes`` caps the sum of published session
+  payloads.  Admission (``reserve``) evicts store-LRU victims through
+  ``KVCacheStore.evict`` — real unlink + KV traffic on the pipeline —
+  until the incoming session fits; a session larger than the quota is
+  refused rather than thrashing the whole store out.
+
+The scheduler holds no raw per-call I/O context and never touches engines
+directly: every byte it causes to move goes through the store's
+``AccessInterface`` pipeline, so its decisions are costed by the same
+solver as the traffic they steer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from ..ckpt import serializer as S
+from .kvstore import KVCacheStore, KVStoreError
+
+
+class SchedulerError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class NodeState:
+    """One decode node's routing book."""
+    node: int
+    alive: bool = True
+    active: int = 0                 # in-flight restores routed here
+    served: int = 0
+    resident_bytes: int = 0
+    # session -> resident payload bytes, LRU order (oldest first): a
+    # mirror of what the node's ClientCache plausibly still holds
+    resident: OrderedDict = dataclasses.field(default_factory=OrderedDict)
+
+
+def _tree_nbytes(cache) -> int:
+    return sum(int(np.asarray(leaf).nbytes)
+               for _path, leaf in S.flatten_tree(cache))
+
+
+class ServeScheduler:
+    def __init__(self, store: KVCacheStore, nodes,
+                 max_active: int = 8,
+                 node_cache_bytes: int = 1 << 30,
+                 quota_bytes: int | None = None) -> None:
+        if not nodes:
+            raise SchedulerError("a fleet needs at least one decode node")
+        self.store = store
+        self.max_active = max(1, int(max_active))
+        self.node_cache_bytes = int(node_cache_bytes)
+        self.quota_bytes = None if quota_bytes is None else int(quota_bytes)
+        self._nodes: dict[int, NodeState] = {
+            int(n): NodeState(int(n)) for n in nodes}
+        # store-level LRU over published sessions (oldest first) + size
+        # book, seeded from the session index so a scheduler attached to a
+        # live store adopts its population
+        self._lru: OrderedDict = OrderedDict()
+        self._size: dict[str, int] = {}
+        self._decisions = 0
+        self._failovers = 0
+        self._evictions = 0
+        self._evicted_bytes = 0
+        self._index_reads = 0
+        for s in store.sessions():
+            try:
+                meta = store.session_meta(s)
+                self._index_reads += 1
+            except KVStoreError:
+                continue            # torn record with no manifest: skip
+            self._size[s] = int(meta["nbytes"])
+            self._lru[s] = True
+
+    # ------------- routing -------------
+    def affinity(self, session: str, node: int) -> float:
+        """Resident fraction of the session's payload on one node."""
+        ns = self._nodes[int(node)]
+        size = max(1, self._size.get(session, 0)
+                   or ns.resident.get(session, 0))
+        return ns.resident.get(session, 0) / size
+
+    def route(self, session: str) -> int:
+        """Pick the decode node for a returning session: the warmest live
+        non-saturated node by resident fraction (ties: least loaded, then
+        lowest id).  One session-index KV read per decision — the O(1)
+        path the index schema exists for.  When every live node is at
+        ``max_active`` the request sheds to the least-loaded one (counted
+        as a failover, like a pick that loses its warmest node to
+        saturation)."""
+        meta = self.store.session_meta(session)     # one small KV read
+        self._index_reads += 1
+        self._decisions += 1
+        size = max(1, int(meta["nbytes"]))
+        alive = [ns for ns in self._nodes.values() if ns.alive]
+        if not alive:
+            raise SchedulerError("no live decode nodes")
+
+        def warmth(ns: NodeState):
+            return (ns.resident.get(session, 0) / size, -ns.active, -ns.node)
+
+        best = max(alive, key=warmth)
+        avail = [ns for ns in alive if ns.active < self.max_active]
+        if not avail:
+            self._failovers += 1
+            return min(alive, key=lambda ns: (ns.active, ns.node)).node
+        pick = max(avail, key=warmth)
+        if pick is not best:
+            self._failovers += 1
+        return pick.node
+
+    def begin(self, session: str, node: int | None = None) -> int:
+        """Admit one restore: route (unless the caller pins ``node``) and
+        claim a slot on the target."""
+        n = self.route(session) if node is None else int(node)
+        ns = self._nodes[n]
+        if not ns.alive:
+            raise SchedulerError(f"decode node {n} is down")
+        ns.active += 1
+        return n
+
+    def end(self, session: str, node: int, nbytes: int | None = None) -> None:
+        """Retire one restore: release the slot and book the session's
+        bytes as resident on the node (trimming the node's book to its
+        cache budget, oldest sessions first — the ClientCache mirror)."""
+        ns = self._nodes[int(node)]
+        ns.active = max(0, ns.active - 1)
+        ns.served += 1
+        if nbytes is None:
+            nbytes = self._size.get(session, 0)
+        self._note_resident(ns, session, int(nbytes))
+        if session in self._lru:
+            self._lru.move_to_end(session)
+
+    def _note_resident(self, ns: NodeState, session: str,
+                       nbytes: int) -> None:
+        ns.resident_bytes -= ns.resident.pop(session, 0)
+        ns.resident[session] = nbytes
+        ns.resident_bytes += nbytes
+        while ns.resident_bytes > self.node_cache_bytes \
+                and len(ns.resident) > 1:
+            _victim, vbytes = ns.resident.popitem(last=False)
+            ns.resident_bytes -= vbytes
+
+    def _drop_resident(self, session: str) -> None:
+        for ns in self._nodes.values():
+            ns.resident_bytes -= ns.resident.pop(session, 0)
+
+    # ------------- bounded store (admission / eviction) -------------
+    @property
+    def store_bytes(self) -> int:
+        """Published payload bytes the store currently holds."""
+        return sum(self._size.values())
+
+    def reserve(self, session: str, nbytes: int) -> list[str]:
+        """Admission control: make room for ``nbytes`` of session payload
+        under the quota by evicting store-LRU victims (never the incoming
+        session itself — a republish reuses its own slot).  Returns the
+        evicted session ids; raises if the session cannot fit even into an
+        empty store."""
+        if self.quota_bytes is None:
+            return []
+        if int(nbytes) > self.quota_bytes:
+            # refuse upfront: evicting victims first and discovering the
+            # session still cannot fit would thrash the store to empty
+            raise SchedulerError(
+                f"session {session!r} ({int(nbytes)} B) cannot fit the "
+                f"store quota ({self.quota_bytes} B)")
+        grow = int(nbytes) - self._size.get(session, 0)
+        evicted: list[str] = []
+        while self.store_bytes + grow > self.quota_bytes:
+            victim = next((s for s in self._lru if s != session), None)
+            if victim is None:
+                raise SchedulerError(
+                    f"session {session!r} ({int(nbytes)} B) cannot fit the "
+                    f"store quota ({self.quota_bytes} B)")
+            self.evict(victim)
+            evicted.append(victim)
+        return evicted
+
+    def evict(self, session: str) -> None:
+        """Drop one session from the store — through the real pipeline
+        (leaf unlinks + manifest/index KV removal), so eviction cost shows
+        up in whatever phase runs it — and from every routing book."""
+        self.store.evict(session)
+        self._evicted_bytes += self._size.pop(session, 0)
+        self._lru.pop(session, None)
+        self._drop_resident(session)
+        self._evictions += 1
+
+    def offload(self, session: str, cache, step: int = 0,
+                extra_meta: dict | None = None) -> list[str]:
+        """Admit-then-publish: reserve quota room (evicting as needed),
+        offload through the store, and book the new snapshot.  A republish
+        drops the session's residency everywhere — readers' cached bytes
+        are the previous step's."""
+        nbytes = _tree_nbytes(cache)
+        evicted = self.reserve(session, nbytes)
+        self.store.offload(session, cache, step=step, extra_meta=extra_meta)
+        self._size[session] = nbytes
+        self._lru[session] = True
+        self._lru.move_to_end(session)
+        self._drop_resident(session)
+        return evicted
+
+    # ------------- membership -------------
+    def mark_down(self, node: int) -> None:
+        """A decode node died: nothing routes there and nothing is warm
+        there — its residency book and in-flight slots are gone."""
+        ns = self._nodes[int(node)]
+        ns.alive = False
+        ns.active = 0
+        ns.resident.clear()
+        ns.resident_bytes = 0
+
+    def mark_up(self, node: int) -> None:
+        """A node (re)joined — cold."""
+        n = int(node)
+        if n in self._nodes:
+            self._nodes[n].alive = True
+        else:
+            self._nodes[n] = NodeState(n)
+
+    # ------------- introspection -------------
+    def lru_sessions(self) -> list[str]:
+        """Published sessions, coldest first."""
+        return list(self._lru)
+
+    def node_state(self, node: int) -> NodeState:
+        return self._nodes[int(node)]
+
+    def stats(self) -> dict:
+        live = [ns for ns in self._nodes.values() if ns.alive]
+        return {"decisions": self._decisions,
+                "failovers": self._failovers,
+                "evictions": self._evictions,
+                "evicted_bytes": self._evicted_bytes,
+                "index_reads": self._index_reads,
+                "sessions": len(self._lru),
+                "store_bytes": self.store_bytes,
+                "live_nodes": len(live),
+                "resident_bytes": sum(ns.resident_bytes for ns in live)}

@@ -122,6 +122,107 @@ def test_backpressure_never_loses_forced_out_errors():
         eq.close()
 
 
+# ------------------------------------------------ completion callbacks --
+def test_on_complete_fires_exactly_once_with_the_event():
+    seen = []
+    with EventQueue(depth=2) as eq:
+        ev = eq.submit(lambda: 7, on_complete=seen.append)
+        assert ev.wait() == 7
+        for _ in range(100):                # callback runs on the worker
+            if seen:
+                break
+            time.sleep(0.01)
+    assert seen == [ev]
+
+
+def test_on_complete_on_already_done_event_fires_inline():
+    with EventQueue(depth=1) as eq:
+        ev = eq.submit(lambda: 1)
+        ev.wait()
+        seen = []
+        assert ev.on_complete(seen.append) is ev
+        # already complete: the callback ran right here, synchronously
+        assert seen == [ev]
+
+
+def test_on_complete_chains_submissions_without_deadlock():
+    """The checkpointer's overlap pattern: each completion callback
+    submits the next stage from a *worker* thread.  Submitting from a
+    callback must not deadlock the queue, and the chain must execute in
+    order."""
+    order = []
+    events = {}
+    lock = threading.Lock()
+    with EventQueue(depth=2) as eq:
+        def work(i):
+            with lock:
+                order.append(i)
+            return i
+
+        def chain(i):
+            def _cb(_ev):
+                if i + 1 < 5:
+                    events[i + 1] = eq.submit(work, i + 1,
+                                              on_complete=chain(i + 1))
+            return _cb
+
+        events[0] = eq.submit(work, 0, on_complete=chain(0))
+        deadline = time.monotonic() + 5.0
+        while len(events) < 5 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert sorted(events) == list(range(5))
+        assert [events[i].wait() for i in range(5)] == list(range(5))
+    assert order == list(range(5))
+
+
+def test_chained_stage_is_in_flight_before_the_consumer_asks():
+    """Overlap, observed: once stage N completes, its callback has
+    already submitted stage N+1 — the consumer finds it in flight
+    without having requested it (shard N+1 serialises while shard N
+    flushes)."""
+    gate = threading.Event()
+    nxt = {}
+    with EventQueue(depth=2) as eq:
+        ev0 = eq.submit(lambda: 0,
+                        on_complete=lambda _e: nxt.setdefault(
+                            1, eq.submit(gate.wait, 5.0)))
+        assert ev0.wait() == 0
+        deadline = time.monotonic() + 2.0
+        while 1 not in nxt and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert 1 in nxt                     # submitted by the callback
+        gate.set()
+        nxt[1].wait()
+
+
+def test_on_complete_fires_on_error_and_wait_still_raises():
+    def boom():
+        raise RuntimeError("injected")
+
+    seen = []
+    eq = EventQueue(depth=1)
+    try:
+        ev = eq.submit(boom, on_complete=lambda e: seen.append(e.error))
+        with pytest.raises(RuntimeError, match="injected"):
+            ev.wait()
+        for _ in range(100):
+            if seen:
+                break
+            time.sleep(0.01)
+        assert isinstance(seen[0], RuntimeError)
+        with pytest.raises(RuntimeError, match="injected"):
+            eq.drain()                      # the error still surfaces
+    finally:
+        eq.close()
+
+
+def test_on_complete_exception_does_not_poison_the_event():
+    with EventQueue(depth=1) as eq:
+        ev = eq.submit(lambda: 5, on_complete=lambda e: 1 / 0)
+        assert ev.wait() == 5               # callback errors are swallowed
+        assert ev.error is None
+
+
 def test_drain_timeout_is_a_deadline_not_per_event():
     """Draining several slow events must time out after ~timeout total,
     not timeout-per-event."""

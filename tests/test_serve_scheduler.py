@@ -1,0 +1,273 @@
+"""ServeScheduler conformance: the fleet control plane over the store.
+
+Pinned here:
+
+* **O(1) decisions** — ``route`` reads exactly one session-index KV
+  record per decision and never walks a manifest when the index is
+  fresh;
+* **affinity** — a returning session lands on the node that served it
+  last; a saturated warm node sheds to the next-best live node and a
+  dead node is never picked;
+* **bounded store** — admission evicts store-LRU victims until the
+  incoming session fits, an oversize session is refused without
+  thrashing the store, and under a randomized churn the quota holds at
+  every step while the index never references an evicted session;
+* **partial == full** — ``restore_window`` is byte-identical to the
+  same window of a full restore, under churn.
+"""
+import numpy as np
+import pytest
+
+from repro.ckpt import serializer as S
+from repro.serve import (KVCacheStore, KVStoreError, SchedulerError,
+                         ServeScheduler)
+
+LEAF_KIB = 4
+N_LEAVES = 4
+SESS_BYTES = N_LEAVES * (LEAF_KIB << 10)
+
+
+def make_cache(seed=0, leaf_kib=LEAF_KIB, n_leaves=N_LEAVES):
+    rng = np.random.default_rng(seed)
+    return {f"l{i:02d}": rng.integers(0, 255, (leaf_kib << 10,), np.uint8)
+            for i in range(n_leaves)}
+
+
+@pytest.fixture
+def sched_world(world):
+    pool, dfs = world
+    store = KVCacheStore(dfs, interface="posix-cached",
+                         verify_on_restore=False)
+    return pool, store
+
+
+# --------------------------------------------------------------- routing --
+def test_returning_session_lands_on_its_last_node(sched_world):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=range(4))
+    sched.offload("a", make_cache(seed=1))
+    sched.offload("b", make_cache(seed=2))
+    na = sched.begin("a")
+    sched.end("a", na)
+    nb = sched.begin("b", node=(na + 1) % 4)
+    sched.end("b", nb)
+    for _ in range(3):
+        assert sched.route("a") == na
+        assert sched.route("b") == nb
+    assert sched.affinity("a", na) == 1.0
+    assert sched.affinity("a", nb) == 0.0
+
+
+def test_route_reads_one_index_record_per_decision(sched_world, monkeypatch):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=range(4))
+    sched.offload("s", make_cache())
+    real_kv = store._sessions_kv()
+    gets = []
+
+    class _CountingKV:
+        def get(self, dkey, akey):
+            gets.append((dkey, akey))
+            return real_kv.get(dkey, akey)
+
+        def __getattr__(self, name):
+            return getattr(real_kv, name)
+
+    monkeypatch.setattr(store, "_sessions_kv", lambda: _CountingKV())
+    monkeypatch.setattr(
+        store, "manifest",
+        lambda s: (_ for _ in ()).throw(AssertionError("manifest walk")))
+    before = sched.stats()
+    for _ in range(5):
+        sched.route("s")
+    after = sched.stats()
+    assert after["decisions"] - before["decisions"] == 5
+    assert after["index_reads"] - before["index_reads"] == 5
+    assert gets == [("s", "meta")] * 5      # one small KV read each
+
+
+def test_saturated_warm_node_sheds_to_next_best_live(sched_world):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=range(3), max_active=2)
+    sched.offload("s", make_cache())
+    n = sched.begin("s")
+    sched.end("s", n)
+    sched.begin("x1", node=n)               # saturate the warm node
+    sched.begin("x2", node=n)
+    f0 = sched.stats()["failovers"]
+    alt = sched.route("s")
+    assert alt != n and sched.node_state(alt).alive
+    assert sched.stats()["failovers"] == f0 + 1
+    # whole fleet saturated: shed to the least-loaded live node
+    for node in range(3):
+        while sched.node_state(node).active < 2:
+            sched.begin("x", node=node)
+    n2 = sched.route("s")
+    assert sched.node_state(n2).alive
+
+
+def test_dead_node_is_never_picked_and_rejoins_cold(sched_world):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=range(3))
+    sched.offload("s", make_cache())
+    n = sched.begin("s")
+    sched.end("s", n)
+    sched.mark_down(n)
+    n2 = sched.route("s")
+    assert n2 != n and sched.node_state(n2).alive
+    with pytest.raises(SchedulerError):
+        sched.begin("s", node=n)            # pinning a dead node refuses
+    sched.mark_up(n)
+    assert sched.node_state(n).alive
+    assert sched.affinity("s", n) == 0.0    # rejoined cold
+    sched.mark_up(9)                        # a brand-new node may join
+    assert sched.node_state(9).alive
+
+
+def test_no_live_nodes_raises(sched_world):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=range(2))
+    sched.offload("s", make_cache())
+    sched.mark_down(0)
+    sched.mark_down(1)
+    with pytest.raises(SchedulerError, match="no live"):
+        sched.route("s")
+
+
+def test_empty_fleet_is_refused(sched_world):
+    _, store = sched_world
+    with pytest.raises(SchedulerError):
+        ServeScheduler(store, nodes=[])
+
+
+# --------------------------------------------------------- bounded store --
+def test_admission_evicts_lru_and_refuses_oversize(sched_world):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=range(2),
+                           quota_bytes=3 * SESS_BYTES)
+    for i in range(3):
+        assert sched.offload(f"s{i}", make_cache(seed=i)) == []
+    assert sched.store_bytes == 3 * SESS_BYTES
+    n = sched.begin("s0")                   # touch s0: s1 is now coldest
+    sched.end("s0", n)
+    evicted = sched.offload("s3", make_cache(seed=3))
+    assert evicted == ["s1"]
+    assert "s1" not in store.sessions()
+    with pytest.raises(KVStoreError):
+        store.manifest("s1")
+    assert sched.store_bytes <= 3 * SESS_BYTES
+    # a session bigger than the whole quota is refused upfront: nothing
+    # already published gets thrashed out on its behalf
+    before = set(store.sessions())
+    with pytest.raises(SchedulerError, match="cannot fit"):
+        sched.offload("huge", make_cache(seed=9, n_leaves=16))
+    assert set(store.sessions()) == before
+
+
+def test_republish_drops_residency_everywhere(sched_world):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=range(2))
+    sched.offload("s", make_cache(seed=0), step=0)
+    n = sched.begin("s")
+    sched.end("s", n)
+    assert sched.affinity("s", n) == 1.0
+    sched.offload("s", make_cache(seed=1), step=1)
+    assert sched.affinity("s", n) == 0.0    # readers' cached bytes stale
+    assert store.step("s") == 1
+
+
+def test_node_residency_book_is_bounded_by_cache_budget(sched_world):
+    _, store = sched_world
+    sched = ServeScheduler(store, nodes=[0],
+                           node_cache_bytes=2 * SESS_BYTES)
+    for i in range(3):
+        sched.offload(f"s{i}", make_cache(seed=i))
+        sched.begin(f"s{i}", node=0)
+        sched.end(f"s{i}", 0)
+    ns = sched.node_state(0)
+    assert ns.resident_bytes <= 2 * SESS_BYTES
+    assert list(ns.resident) == ["s1", "s2"]    # oldest trimmed first
+    assert sched.affinity("s0", 0) == 0.0
+
+
+def test_scheduler_adopts_a_live_store(sched_world):
+    _, store = sched_world
+    store.offload("a", make_cache(seed=0), step=2)
+    store.offload("b", make_cache(seed=1), step=5)
+    sched = ServeScheduler(store, nodes=range(2))
+    assert sched.lru_sessions() == ["a", "b"]
+    assert sched.store_bytes == 2 * SESS_BYTES
+    st = sched.stats()
+    assert st["sessions"] == 2 and st["index_reads"] == 2
+
+
+def test_seed_skips_torn_index_records(sched_world):
+    _, store = sched_world
+    store.offload("a", make_cache(seed=0))
+    # a record with no manifest behind it (a torn pre-schema store)
+    store._sessions_kv().put("ghost", "meta", b"torn")
+    sched = ServeScheduler(store, nodes=[0])
+    assert sched.lru_sessions() == ["a"]
+
+
+# -------------------------------------------------------------- churn ----
+def test_randomized_churn_conformance(sched_world):
+    """Arrivals, returns, partial reads and node failures interleaved at
+    random; after EVERY op the store is within quota, the index lists
+    exactly the live sessions (never an evicted one), routing only ever
+    picks live nodes, and partial windows are byte-identical to the full
+    restore."""
+    _, store = sched_world
+    rng = np.random.default_rng(7)
+    quota = 6 * SESS_BYTES
+    sched = ServeScheduler(store, nodes=range(4), max_active=4,
+                           quota_bytes=quota)
+    live: dict[str, int] = {}               # session -> seed of last publish
+    gone: set[str] = set()
+    step = 0
+    for _ in range(60):
+        op = int(rng.integers(0, 4))
+        if op == 0 or not live:             # arrival / republish
+            s = f"s{int(rng.integers(0, 10)):02d}"
+            seed = step
+            for v in sched.offload(s, make_cache(seed=seed), step=step):
+                gone.add(v)
+                live.pop(v, None)
+            live[s] = seed
+            gone.discard(s)
+            step += 1
+        elif op == 1:                       # return: route + full restore
+            s = str(rng.choice(sorted(live)))
+            n = sched.begin(s)
+            got = store.restore(s, client_node=n)
+            sched.end(s, n)
+            want = make_cache(seed=live[s])
+            for k in want:
+                np.testing.assert_array_equal(got[k], want[k])
+        elif op == 2:                       # decode window: partial == full
+            s = str(rng.choice(sorted(live)))
+            lo = int(rng.integers(0, LEAF_KIB << 10))
+            hi = int(rng.integers(lo, (LEAF_KIB << 10) + 1))
+            win = store.restore_window(s, lo, hi)
+            flat = dict(S.flatten_tree(store.restore(s)))
+            for path, arr in win.items():
+                leaf = np.asarray(flat[path]).view(np.uint8)
+                np.testing.assert_array_equal(arr, leaf[lo:hi])
+        else:                               # node failure: route stays live
+            down = int(rng.integers(0, 4))
+            sched.mark_down(down)
+            if live:
+                s = str(rng.choice(sorted(live)))
+                n = sched.route(s)
+                assert n != down and sched.node_state(n).alive
+            sched.mark_up(down)
+        # invariants, every step
+        assert sched.store_bytes <= quota
+        assert set(store.sessions()) == set(live)
+        for v in gone:
+            assert v not in store.sessions()
+            with pytest.raises(KVStoreError):
+                store.session_meta(v)       # index never resurrects it
+    st = sched.stats()
+    assert st["evictions"] >= 1
+    assert st["sessions"] == len(live)
