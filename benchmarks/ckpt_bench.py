@@ -173,6 +173,60 @@ def bench_elastic(params, interface: str, layout: str = "shared",
     return row
 
 
+def big_leaf_tree(n_leaves: int, leaf_mib: int) -> dict:
+    """Few-big-leaves state (fused attention blocks, embedding tables):
+    the shape where rank-fan runs out of parallelism and part-fan keeps
+    scaling with the leaf."""
+    rng = np.random.default_rng(1)
+    return {f"block{i:02d}": rng.integers(0, 255, size=(leaf_mib << 20,),
+                                          dtype=np.uint8)
+            for i in range(n_leaves)}
+
+
+def bench_partfan(params, interface: str, oclass: str = "SX",
+                  n_writers: int = 4) -> dict:
+    """Part-fan study (Q6): one shared-file save of a big-leaf state, once
+    fanned by rank (each leaf split across ``n_writers`` sub-ranges — the
+    pre-multipart path) and once fanned by fixed 1 MiB part
+    (``core/multipart.py``), where the stream count scales with the leaf
+    size instead of the writer count.  Both restores verify bit-exact."""
+    nbytes = tree_bytes(params)
+    res = {}
+    for mp in (False, True):
+        pool = Pool(Topology(), materialize=True)
+        cont = pool.create_container("ck", oclass=oclass)
+        dfs = DFS(cont)
+        ck = Checkpointer(dfs, interface=interface, oclass=oclass,
+                          layout="shared", n_writers=n_writers,
+                          multipart=mp)
+        with pool.sim.phase() as wph:
+            ck.save(0, params)
+        back = ck.restore(0, params)
+        _check_restore(params, back)
+        res[mp] = wph.elapsed
+    return {"mode": "partfan", "interface": interface, "oclass": oclass,
+            "layout": "shared", "mib": round(nbytes / 2**20, 1),
+            "n_writers": n_writers,
+            "rank_fan_gib_s": round(bandwidth(nbytes, res[False]), 2),
+            "part_fan_gib_s": round(bandwidth(nbytes, res[True]), 2),
+            "speedup": round(res[False] / res[True], 2)}
+
+
+def check_partfan_claims(rows: list[dict]) -> list[dict]:
+    prows = [r for r in rows if r.get("mode") == "partfan"]
+    if not prows:
+        return []
+    ok = all(r["speedup"] >= 1.5 for r in prows)
+    return [{"claim": "Q6 part-fanned shared-file saves of big leaves "
+                      ">= 1.5x rank-fan at fixed writer count",
+             "ok": bool(ok),
+             "detail": "; ".join(
+                 f"{r['interface']} {r['mib']:.0f}MiB/"
+                 f"{r['n_writers']}w: "
+                 f"{r['rank_fan_gib_s']:.2f}->{r['part_fan_gib_s']:.2f} "
+                 f"GiB/s (x{r['speedup']:.1f})" for r in prows)}]
+
+
 def check_elastic_claims(rows: list[dict]) -> list[dict]:
     erows = [r for r in rows if r.get("mode") == "elastic"]
     if not erows:
@@ -255,7 +309,8 @@ def check_ckpt_cache_claims(rows: list[dict]) -> list[dict]:
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
-    ap.add_argument("--mode", choices=["matrix", "cached", "elastic", "all"],
+    ap.add_argument("--mode", choices=["matrix", "cached", "elastic",
+                                       "partfan", "all"],
                     default="matrix")
     ap.add_argument("--interfaces", nargs="+",
                     default=["dfs", "posix", "hdf5", "daos-array"])
@@ -275,6 +330,13 @@ def main(argv=None) -> list[dict]:
     ap.add_argument("--elastic-layout", default="shared")
     ap.add_argument("--elastic-save-writers", type=int, default=8)
     ap.add_argument("--elastic-new-hosts", type=int, default=12)
+    # part-fan study: few big leaves, few writers (the shape where
+    # rank-fan parallelism runs out)
+    ap.add_argument("--partfan-interfaces", nargs="+",
+                    default=["dfs", "daos-array"])
+    ap.add_argument("--partfan-leaves", type=int, default=4)
+    ap.add_argument("--partfan-leaf-mib", type=int, default=16)
+    ap.add_argument("--partfan-writers", type=int, default=4)
     ap.add_argument("--out", default=str(ARTIFACTS / "ckpt_bench.json"))
     args = ap.parse_args(argv)
 
@@ -333,6 +395,25 @@ def main(argv=None) -> list[dict]:
                 print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
                       f"({c['detail']})")
             rows.extend({"mode": "claims", **c} for c in eclaims)
+    if args.mode in ("partfan", "all"):
+        state = big_leaf_tree(args.partfan_leaves, args.partfan_leaf_mib)
+        print(f"\n=== shared-file part-fan study ({args.partfan_leaves} x "
+              f"{args.partfan_leaf_mib} MiB leaves, "
+              f"{args.partfan_writers} writers, SX) ===")
+        for iface in args.partfan_interfaces:
+            r = bench_partfan(state, iface,
+                              n_writers=args.partfan_writers)
+            rows.append(r)
+            print(f"{iface:12s} rank-fan {r['rank_fan_gib_s']:7.2f}  "
+                  f"part-fan {r['part_fan_gib_s']:7.2f} GiB/s  "
+                  f"(x{r['speedup']:.1f})")
+        pclaims = check_partfan_claims(rows)
+        if pclaims:
+            print("\n=== Part-fan claims ===")
+            for c in pclaims:
+                print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
+                      f"({c['detail']})")
+            rows.extend({"mode": "claims", **c} for c in pclaims)
     pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
     return rows

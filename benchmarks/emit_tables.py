@@ -416,6 +416,22 @@ def serve_table(rows: list[dict]) -> str:
                              f"({r['speedup']:.1f}x)" if r else "-")
             out.append(f"| {iface} | " + " | ".join(cells) + " |")
         out.append("")
+    sprows = [r for r in rows if r.get("mode") == "spec"]
+    if sprows:
+        r0 = sprows[0]
+        out += [f"### Speculative restore prefetch on route "
+                f"({r0['n_leaves']} x {r0['leaf_kib']} KiB leaves, "
+                f"{r0['lead_tokens']} tokens x {r0['decode_ms']} ms "
+                "decode lead)", "",
+                "| family | cold restore ms | speculated ms | hidden | "
+                "speculated MiB |",
+                "|---|---|---|---|---|"]
+        for r in sprows:
+            out.append(f"| {r['family']} | {r['cold_restore_ms']:.2f} | "
+                       f"{r['spec_restore_ms']:.2f} | "
+                       f"{r['hidden_fraction']:.0%} | "
+                       f"{r['spec_mib']:.1f} |")
+        out.append("")
     if not out:
         return ""
     out.extend(_claims_lines(rows, prefixes=("SV",)))
@@ -478,6 +494,38 @@ def qd_table(rows: list[dict]) -> str:
                 f"background I/O, paid visibly "
                 f"{p['bg_paid_s'] * 1e3:.1f} ms — hidden fraction "
                 f"{p['hidden_fraction']:.0%}", ""]
+    arows = [r for r in rows if r.get("mode") == "qd-auto"]
+    if arows:
+        r0 = arows[0]
+        out += [f"### Adaptive queue depth ({r0['clients']} client nodes, "
+                f"{r0['block_mib']} MiB/process, "
+                f"{r0['transfer_kib']:.0f} KiB transfers, {r0['oclass']}; "
+                "write GiB/s — qd=auto vs the best fixed depth per "
+                "fan-in)", "",
+                "| interface | ppn | best fixed | auto | auto/best |",
+                "|---|---|---|---|---|"]
+        for r in arows:
+            out.append(f"| {r['interface']} | {r['ppn']} | "
+                       f"{r['best_fixed_gib_s']:.2f} "
+                       f"(qd={r['best_fixed_qd']}) | "
+                       f"{r['auto_gib_s']:.2f} | "
+                       f"{r['auto_over_best']:.0%} |")
+        out.append("")
+    krows = [r for r in rows if r.get("mode") == "qd-kvmeta"]
+    if krows:
+        r0 = krows[0]
+        out += [f"### Batched KV metadata plane ({r0['sessions']} "
+                "sessions offloading: per-session manifest + session-"
+                "index records, serial puts vs one cross-object "
+                "`kv_batch` window)", "",
+                "| interface | records | serial kop/s | batched kop/s | "
+                "speedup |",
+                "|---|---|---|---|---|"]
+        for r in krows:
+            out.append(f"| {r['interface']} | {r['records']} | "
+                       f"{r['serial_kops']:.1f} | {r['batched_kops']:.1f} "
+                       f"| {r['speedup']:.1f}x |")
+        out.append("")
     if not out:
         return ""
     out.extend(_claims_lines(rows, prefixes=("Q",)))
@@ -503,6 +551,26 @@ def ckpt_cache_table(rows: list[dict]) -> str:
             f"{r['re_restore_gib_s']:.2f} | {hit} |")
     out.append("")
     out.extend(_claims_lines(rows, prefixes=("C8", "C9")))
+    return "\n".join(out)
+
+
+def partfan_table(rows: list[dict]) -> str:
+    """The shared-file part-fan study (Q6): rank-fan vs 1 MiB part-fan
+    saves of a big-leaf state."""
+    prows = [r for r in rows if r.get("mode") == "partfan"]
+    if not prows:
+        return ""
+    r0 = prows[0]
+    out = [f"### Shared-file part-fan saves ({r0['mib']:.0f} MiB "
+           f"big-leaf state, {r0['n_writers']} writers, {r0['oclass']})",
+           "",
+           "| interface | rank-fan GiB/s | part-fan GiB/s | speedup |",
+           "|---|---|---|---|"]
+    for r in prows:
+        out.append(f"| {r['interface']} | {r['rank_fan_gib_s']:.2f} | "
+                   f"{r['part_fan_gib_s']:.2f} | {r['speedup']:.1f}x |")
+    out.append("")
+    out.extend(_claims_lines(rows, prefixes=("Q6",)))
     return "\n".join(out)
 
 
@@ -582,8 +650,10 @@ def main() -> None:
     ckpt_json = ROOT / "artifacts" / "ckpt_bench.json"
     if ckpt_json.exists():
         rows = json.loads(ckpt_json.read_text())
-        body = ckpt_cache_table(rows)
-        n_ckpt = sum(1 for r in rows if r.get("mode") == "cached")
+        body = "\n\n".join(b for b in (ckpt_cache_table(rows),
+                                       partfan_table(rows)) if b)
+        n_ckpt = sum(1 for r in rows
+                     if r.get("mode") in ("cached", "partfan"))
         if body:
             text = _splice(text, CKPT_MARK, body)
         body = elastic_table(rows)
@@ -620,7 +690,8 @@ def main() -> None:
         rows = json.loads(qd_json.read_text())
         body = qd_table(rows)
         n_qd = sum(1 for r in rows
-                   if r.get("mode") in ("qd", "qd-multipart", "qd-prefetch"))
+                   if r.get("mode") in ("qd", "qd-multipart", "qd-prefetch",
+                                        "qd-auto", "qd-kvmeta"))
         if body:
             text = _splice(text, QD_MARK, body)
     exp.write_text(text)

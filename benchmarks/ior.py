@@ -40,6 +40,11 @@ DEFAULT_CACHED_IFACES = ["posix", "posix-cached", "posix-readahead",
 # synchronous ones whose blocking per-op chain can't ride the window
 DEFAULT_QD_IFACES = ["daos-array", "dfs", "posix", "posix-ioil"]
 DEFAULT_QDS = [1, 2, 4, 8, 16, 32]
+# adaptive-qd study (Q4): async mounts only — sync profiles reject
+# qd=auto by contract.  ppn shifts the fan-in, which shifts which fixed
+# depth wins, which is the point: auto must track the winner everywhere.
+DEFAULT_AUTO_IFACES = ["daos-array", "dfs"]
+DEFAULT_AUTO_PPNS = [1, 4, 12]
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 
 
@@ -322,6 +327,82 @@ def ior_qd_sweep(ifaces, qds, clients: int, ppn: int, block: int,
     return rows
 
 
+def ior_qd_auto(ifaces, qds, clients: int, ppns, block: int,
+                transfer: int, oclass: str) -> list[dict]:
+    """Adaptive-qd study (Q4): at every sweep point (interface x fan-in),
+    run the full fixed-depth sweep AND one ``qd=auto`` cell.  Low fan-in
+    wants a deep window (ramped up AIMD-style from congestion feedback);
+    high fan-in overcommits the engine RPC threads and wants it trimmed.
+    The claim is that the feedback loop finds the winner at every point
+    with zero per-run tuning."""
+    rows = []
+    for name in ifaces:
+        for ppn in ppns:
+            fixed = {}
+            for qd in qds:
+                res = ior_qd_cell(name, qd, clients, ppn, block, transfer,
+                                  oclass)
+                fixed[qd] = res["write_gib_s"]
+            auto = ior_qd_cell(name, "auto", clients, ppn, block, transfer,
+                               oclass)
+            best_qd = max(fixed, key=fixed.get)
+            best = fixed[best_qd]
+            rows.append({"mode": "qd-auto", "interface": name,
+                         "clients": clients, "ppn": ppn, "oclass": oclass,
+                         "block_mib": block // MIB,
+                         "transfer_kib": transfer / KIB,
+                         "best_fixed_qd": best_qd,
+                         "best_fixed_gib_s": round(best, 3),
+                         "auto_gib_s": round(auto["write_gib_s"], 3),
+                         "auto_read_gib_s": round(auto["read_gib_s"], 3),
+                         "auto_over_best": round(
+                             auto["write_gib_s"] / best, 4),
+                         "fixed_gib_s": {str(q): round(v, 3)
+                                         for q, v in fixed.items()}})
+    return rows
+
+
+def ior_kvmeta(sessions: int, clients: int, ifaces=None) -> list[dict]:
+    """Batched-KV metadata study (Q5): the offload metadata plane of a
+    many-session serving tier — per-session manifest records plus the
+    shared session-index record — issued once serially (each put blocks
+    on its round trip) and once through one cross-object ``kv_batch``
+    window (pipelined IODs, engine-side batch coalescing)."""
+    rows = []
+    for name in ifaces or ("daos-array", "dfs"):
+        pool, dfs = make_world("SX", 1, clients)
+        cont = dfs.cont
+        iface = make_interface(name, dfs)
+        mans = [cont.open_kv(f"kv:man:{i}", oclass="RP_2GX")
+                for i in range(sessions)]
+        idx = cont.open_kv("kv:sessions", oclass="RP_2GX")
+        payloads = [json.dumps({"session": f"s{i:05d}", "step": 0,
+                                "n_leaves": 64,
+                                "nbytes": 64 * 64 * KIB}).encode()
+                    for i in range(sessions)]
+        meta = json.dumps({"step": 0, "state": "published"}).encode()
+        ctx = iface.make_ctx(0, 0)
+        with pool.sim.phase() as sp:        # serial: one RPC chain per put
+            for i, mo in enumerate(mans):
+                mo.put("manifest", "json", payloads[i], ctx=ctx)
+                idx.put(f"s{i:05d}", "meta", meta, ctx=ctx)
+        with pool.sim.phase() as bp:        # one pipelined window
+            with iface.kv_batch(idx) as kvb:
+                for i, mo in enumerate(mans):
+                    kvb.put("manifest", "json", payloads[i], obj=mo)
+                    kvb.put(f"s{i:05d}", "meta", meta)
+        n = 2 * sessions
+        rows.append({"mode": "qd-kvmeta", "interface": name,
+                     "sessions": sessions, "records": n,
+                     "clients": clients,
+                     "serial_ms": round(sp.elapsed * 1e3, 3),
+                     "batched_ms": round(bp.elapsed * 1e3, 3),
+                     "serial_kops": round(n / sp.elapsed / 1e3, 2),
+                     "batched_kops": round(n / bp.elapsed / 1e3, 2),
+                     "speedup": round(sp.elapsed / bp.elapsed, 2)})
+    return rows
+
+
 def _materialized_world(oclass: str, clients: int):
     topo = Topology(n_server_nodes=8, engines_per_node=2,
                     n_client_nodes=clients, procs_per_client_node=1)
@@ -459,6 +540,29 @@ def check_qd_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
                     f"hidden {p['hidden_fraction']:.0%}; visible "
                     f"{p['serial_visible_s'] * 1e3:.1f}ms -> "
                     f"{p['async_visible_s'] * 1e3:.1f}ms"))
+
+    arows = [r for r in rows if r.get("mode") == "qd-auto"]
+    if arows:
+        ok = all(r["auto_over_best"] >= 0.95 for r in arows)
+        out.append(("Q4 qd=auto reaches >=95% of the best fixed-qd write "
+                    "bandwidth at every sweep point, no per-run tuning",
+                    bool(ok),
+                    "; ".join(f"{r['interface']} ppn{r['ppn']} "
+                              f"{r['auto_over_best']:.0%} of "
+                              f"qd{r['best_fixed_qd']}"
+                              for r in arows)))
+
+    krows = [r for r in rows if r.get("mode") == "qd-kvmeta"]
+    if krows:
+        ok = all(r["speedup"] >= 2.0 for r in krows)
+        out.append(("Q5 batched KV plan >= 2x many-session offload "
+                    "metadata throughput vs serial",
+                    bool(ok),
+                    "; ".join(f"{r['interface']} {r['records']} records "
+                              f"{r['serial_kops']:.1f}->"
+                              f"{r['batched_kops']:.1f} kop/s "
+                              f"(x{r['speedup']:.1f})"
+                              for r in krows)))
     return out
 
 
@@ -672,6 +776,13 @@ def main(argv=None) -> list[dict]:
     # SX: deterministically balanced placement — the sweep measures queue
     # depth, not jump-hash collision luck
     ap.add_argument("--qd-oclass", default="SX")
+    # adaptive-qd study (Q4) and batched-KV metadata study (Q5)
+    ap.add_argument("--auto-interfaces", nargs="+",
+                    default=DEFAULT_AUTO_IFACES)
+    ap.add_argument("--auto-ppns", nargs="+", type=int,
+                    default=DEFAULT_AUTO_PPNS)
+    ap.add_argument("--auto-block-mib", type=int, default=32)
+    ap.add_argument("--kvmeta-sessions", type=int, default=64)
     ap.add_argument("--mp-leaf-mib", nargs="+", type=int, default=[4, 8, 16])
     ap.add_argument("--mp-leaves", type=int, default=4)
     ap.add_argument("--mp-clients", type=int, default=8)
@@ -702,8 +813,30 @@ def main(argv=None) -> list[dict]:
                                   args.mp_clients)
             rows += ior_prefetch(args.pf_file_mib, args.pf_chunk_kib,
                                  args.pf_think_ms)
+            rows += ior_qd_auto(args.auto_interfaces, args.qd_depths,
+                                args.qd_clients, args.auto_ppns,
+                                args.auto_block_mib * MIB,
+                                args.qd_transfer_kib * KIB, args.qd_oclass)
+            rows += ior_kvmeta(args.kvmeta_sessions, args.qd_clients)
             all_rows.extend(rows)
             print_qd(rows)
+            arows = [r for r in rows if r.get("mode") == "qd-auto"]
+            if arows:
+                print("\n=== Adaptive queue depth (write GiB/s) ===")
+                for r in arows:
+                    print(f"{r['interface']:12s} ppn={r['ppn']:3d}  "
+                          f"best qd{r['best_fixed_qd']:<3d} "
+                          f"{r['best_fixed_gib_s']:7.2f}  auto "
+                          f"{r['auto_gib_s']:7.2f}  "
+                          f"({r['auto_over_best']:.0%})")
+            krows = [r for r in rows if r.get("mode") == "qd-kvmeta"]
+            if krows:
+                print("\n=== Batched KV metadata plane (kop/s) ===")
+                for r in krows:
+                    print(f"{r['interface']:12s} {r['records']:4d} records  "
+                          f"serial {r['serial_kops']:7.1f}  batched "
+                          f"{r['batched_kops']:7.1f}  "
+                          f"(x{r['speedup']:.1f})")
             print("\n=== Async-data-path claims (Q1-Q3) ===")
             for name, ok, detail in check_qd_claims(rows):
                 print(f"  [{'PASS' if ok else 'FAIL'}] {name}   ({detail})")

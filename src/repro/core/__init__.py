@@ -13,27 +13,29 @@ from .integrity import ChecksumError, checksum, verify
 from .layout import (ObjectClass, StripeLayout, get_class, jump_hash,
                      oid_for, place_object)
 from .multipart import (MP_PART_BYTES, MP_THRESHOLD, multipart_read,
-                        multipart_write, plan_parts, should_multipart)
-from .object import ArrayObject, IOCtx, KVObject
+                        multipart_write, multipart_write_at, plan_parts,
+                        should_multipart)
+from .object import ArrayObject, IOCtx, KVBatch, KVObject
 from .pool import Pool
 from .container import Container
 from .raft import NoQuorumError, NotLeaderError, RaftGroup
 from .redundancy import DataLossError
-from .simnet import HWProfile, IOSim, PROFILES, Topology, bandwidth
+from .simnet import AUTO_QD, HWProfile, IOSim, PROFILES, Topology, bandwidth
 from .transactions import Transaction, TxStateError
 
 __all__ = [
-    "ArrayObject", "BroadcastPolicy", "CacheStats", "CellPlanner",
+    "AUTO_QD", "ArrayObject", "BroadcastPolicy", "CacheStats", "CellPlanner",
     "ChecksumError", "CoherencePolicy", "CoherenceStats",
     "ClientCache", "Container", "DataLossError", "Engine",
     "EngineFailedError", "Event", "EventQueue", "FlowAccumulator",
-    "HWProfile", "IOCtx", "IOD_BATCH", "IOSim", "KVObject",
+    "HWProfile", "IOCtx", "IOD_BATCH", "IOSim", "KVBatch", "KVObject",
     "MP_PART_BYTES", "MP_THRESHOLD", "NoQuorumError",
     "NoSpaceError", "NotFoundError", "NotLeaderError", "ObjectClass",
     "PROFILES", "Pool", "QueuedOp", "RaftGroup", "StripeLayout",
     "SubmissionQueue", "TimeoutPolicy",
     "Topology", "Transaction", "TxStateError", "bandwidth", "checksum",
     "get_class", "iod_batch", "jump_hash", "make_policy",
-    "multipart_read", "multipart_write", "object_token",
+    "multipart_read", "multipart_write", "multipart_write_at",
+    "object_token",
     "oid_for", "place_object", "plan_parts", "should_multipart", "verify",
 ]

@@ -22,11 +22,15 @@ real ``dfuse --enable-caching`` / ``attr-timeout`` flags expose:
                    kept so the coherence bench can quantify the delta)
 ``qd=``            submission-queue depth: async IODs in flight per engine
                    for this mount's handles (default: the hardware
-                   profile's ``queue_depth``).  Synchronous interfaces
-                   (posix/mpiio/hdf5 and friends) are pinned to 1 — a
-                   blocking VFS round trip cannot leave more than one RPC
-                   in flight, which is exactly the concurrency gap the QD
-                   sweep measures
+                   profile's ``queue_depth``), or ``auto`` — the solver
+                   picks each (process, engine) window from measured
+                   engine congestion, ramping AIMD-style instead of using
+                   a mount constant.  Synchronous interfaces (posix/mpiio/
+                   hdf5 and friends) are pinned to 1 — a blocking VFS
+                   round trip cannot leave more than one RPC in flight,
+                   which is exactly the concurrency gap the QD sweep
+                   measures — and reject ``qd=auto`` outright (there is
+                   no window to adapt)
 ``ra_async=``      ``1``/``0``: issue readahead beyond the demand range as
                    *background* flows that overlap with compute instead of
                    riding the caller's serial chain (cached mounts only)
@@ -90,10 +94,17 @@ def parse_mount_options(optstr: str) -> dict:
             # pre-PR-4 whole-entry behaviour, kept for the CO5 contrast)
             cache_opts["invalidation"] = val
         elif key == "qd":
-            qd = _num(key, val, int)
-            if qd < 1:
-                raise ValueError(f"mount option qd={val!r}: must be >= 1")
-            extra["qd"] = qd
+            if val == "auto":
+                # adaptive depth: the solver picks the window from measured
+                # engine congestion (AccessInterface rejects this on sync
+                # profiles — there is no window to adapt)
+                extra["qd"] = "auto"
+            else:
+                qd = _num(key, val, int)
+                if qd < 1:
+                    raise ValueError(f"mount option qd={val!r}: must be "
+                                     ">= 1 (or 'auto')")
+                extra["qd"] = qd
         elif key == "ra_async":
             if val not in ("0", "1", "true", "false"):
                 raise ValueError(f"mount option ra_async={val!r}: "

@@ -22,6 +22,7 @@ from ..cache import ClientCache
 from ..coherence import make_policy, normalize_coherence
 from ..events import QueuedOp, SubmissionQueue
 from ..object import ArrayObject, IOCtx
+from ..simnet import AUTO_QD
 
 # Interface-layer transfer granularities (shared by the cost table and the
 # interface modules that historically defined them).
@@ -122,7 +123,7 @@ class FileHandle:
     # -- submission queue (async data path) ----------------------------------
     def _subq(self) -> SubmissionQueue:
         if self._queue is None:
-            self._queue = SubmissionQueue(qd=self.iface.qd)
+            self._queue = SubmissionQueue(qd=self.iface.exec_qd)
             if self.tx is not None:
                 self.tx.register_subq(self._queue)
         return self._queue
@@ -249,17 +250,30 @@ class AccessInterface(abc.ABC):
 
     def __init__(self, dfs, cache_mode: str = "none", coherence=None,
                  cache_opts: dict | None = None,
-                 qd: int | None = None) -> None:
+                 qd: int | str | None = None) -> None:
         self.dfs = dfs
         # submission-queue depth (the qd= mount option): async IODs in
         # flight per engine for this mount's handles.  None = the hardware
-        # profile's default depth.  Synchronous interfaces are pinned to 1
-        # by the `qd` property regardless — a blocking VFS round trip
-        # cannot leave more than one RPC in flight.
-        if qd is not None and int(qd) < 1:
+        # profile's default depth; "auto" = the solver picks the window
+        # from measured engine congestion.  Synchronous interfaces are
+        # pinned to 1 by the `qd` property regardless — a blocking VFS
+        # round trip cannot leave more than one RPC in flight — and a
+        # sync mount asking for the adaptive window is a contradiction,
+        # not a silent pin, so it errors like any malformed option.
+        if isinstance(qd, str):
+            if qd != "auto":
+                raise ValueError(f"qd={qd!r}: submission-queue depth must "
+                                 "be an integer >= 1 or 'auto'")
+            if self.profile.sync:
+                raise ValueError(
+                    f"qd=auto requires an asynchronous interface; "
+                    f"{type(self).__name__} ({self.profile_name!r}) issues "
+                    "blocking per-op round trips, so its window is pinned "
+                    "to 1 and there is nothing to adapt")
+        elif qd is not None and int(qd) < 1:
             raise ValueError(f"qd={qd!r}: submission-queue depth must "
                              "be >= 1")
-        self._mount_qd = None if qd is None else int(qd)
+        self._mount_qd = qd if isinstance(qd, str) or qd is None else int(qd)
         # coherence: None/str/dict spec (see core.coherence) selected by
         # mount options; "off" means direct I/O — no cache is ever created,
         # so the interface is byte-for-byte its uncached self.
@@ -296,18 +310,45 @@ class AccessInterface(abc.ABC):
     @property
     def qd(self) -> int:
         """Effective submission-queue depth of this mount: 1 on sync
-        interfaces (pinned — their per-op chain can't pipeline), else the
+        interfaces (pinned — their per-op chain can't pipeline),
+        ``AUTO_QD`` (-1) when the mount said ``qd=auto`` (the solver picks
+        each (process, engine) window from measured congestion), else the
         ``qd=`` mount option or the hardware profile's default."""
         if self.profile.sync:
             return 1
+        if self._mount_qd == "auto":
+            return AUTO_QD
         if self._mount_qd is not None:
             return self._mount_qd
         return self.dfs.cont.pool.sim.hw.queue_depth
+
+    @property
+    def exec_qd(self) -> int:
+        """The positive client-side window a ``SubmissionQueue`` is built
+        with: an auto mount queues up to the solver's auto cap (2x the
+        hardware default depth) and lets the congestion feedback set the
+        charged window; fixed mounts use their depth directly."""
+        q = self.qd
+        if q == AUTO_QD:
+            return 2 * self.dfs.cont.pool.sim.hw.queue_depth
+        return q
 
     def make_ctx(self, client_node: int = 0, process: int = 0,
                  transfer_bytes: int = 0) -> IOCtx:
         """The cost profile of one I/O call through this interface."""
         return self.profile.ctx(client_node, process, qd=self.qd)
+
+    def kv_batch(self, obj, tx=None, client_node: int = 0, process: int = 0,
+                 qd: int | None = None):
+        """Open a pipelined KV window through this mount's cost profile —
+        the metadata-plane analogue of the handles' submission queues, so
+        manifest/index records cost what this interface costs and pipeline
+        as deep as its ``qd`` allows (window 1 on sync profiles).  With
+        ``tx=`` the batch joins the tx's commit/abort barriers."""
+        ctx = self.make_ctx(client_node, process)
+        if tx is not None:
+            return tx.kv_batch(obj, ctx=ctx, qd=qd)
+        return obj.batch(ctx=ctx, qd=qd)
 
     # ---- cache tier --------------------------------------------------------
     def cache_for(self, client_node: int) -> ClientCache | None:

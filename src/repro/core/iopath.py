@@ -131,6 +131,20 @@ class CellPlanner:
                 out.update(self.replicas(span.cell_no))
         return out
 
+    # ---------------- kv placement ----------------
+    def kv_replicas(self, dkey) -> tuple[int, ...]:
+        """Engines holding one dkey's record (daos_obj_update fan-out):
+        the dkey hashes onto a stripe chunk and rides its replica set —
+        the KV analogue of :meth:`replicas`, so batched KV submission can
+        bound its per-engine windows exactly like extent IODs."""
+        h = _layout.oid_for(str(dkey), container_seq=17)
+        return self.lay.replicas_for_chunk(h % self.lay.width)
+
+    def kv_shard(self, dkey) -> int:
+        """The shard a single-replica KV op (listing, primary read)
+        targets first."""
+        return self.kv_replicas(dkey)[0]
+
     def sized_write_homes(self, span: CellSpan) -> tuple[tuple[int, int], ...]:
         """(engine, accounted_bytes) pairs for a synthetic write of ``span``:
         every replica carries the span; EC charges the data lane in full and

@@ -86,6 +86,37 @@ def multipart_read(iface, path: str, nbytes: int, *, offset: int = 0,
     return out
 
 
+def multipart_write_at(iface, handle, offset: int, data, *, tx=None,
+                       part_bytes: int = MP_PART_BYTES,
+                       placer=None) -> int:
+    """Write ``data`` at ``offset`` of an *already-open* handle as
+    concurrent parts fanned across client nodes (``iface.dup`` per part —
+    no namespace traffic at all).
+
+    Without a transaction the parts retire in order before returning.
+    Under ``tx=`` the parts stay queued on their handles' submission
+    queues: the tx commit barrier is the completion point, so parts from
+    successive calls (e.g. the leaves of one checkpoint step) pipeline
+    together until the epoch turns visible.
+    """
+    placer = placer or iface.place_writer
+    buf = np.asarray(
+        np.frombuffer(data, np.uint8)
+        if isinstance(data, (bytes, bytearray, memoryview))
+        else np.ascontiguousarray(data).view(np.uint8).reshape(-1))
+    parts = plan_parts(buf.size, part_bytes)
+    events = []
+    for i, (lo, hi) in enumerate(parts):
+        node, proc = placer(i)
+        h = iface.dup(handle, client_node=node, process=proc, tx=tx)
+        events.append((h, h.write_at_async(offset + lo, buf[lo:hi])))
+    if tx is None:
+        for h, ev in events:    # ordered commit
+            ev.wait()
+            h.close()
+    return int(buf.size)
+
+
 def multipart_write(iface, path: str, data, *, offset: int = 0,
                     oclass=None, tx=None,
                     part_bytes: int = MP_PART_BYTES,

@@ -23,7 +23,9 @@ import numpy as np
 from . import layout as _layout
 from . import redundancy
 from .engine import Engine, EngineFailedError, NotFoundError
+from .events import SubmissionQueue
 from .iopath import CellPlanner, FlowAccumulator
+from .simnet import AUTO_QD
 
 
 @dataclasses.dataclass
@@ -37,7 +39,8 @@ class IOCtx:
     via_fuse: bool = False      # routed through the client node's dfuse daemon
     sync: bool = True           # synchronous per-op chain (POSIX-style)
     qd: int = 0                 # async in-flight window per engine (the qd=
-                                # mount option); 0 = hardware default depth
+                                # mount option); 0 = hardware default depth;
+                                # AUTO_QD (-1) = solver-adapted window
     frag_bytes: int = 0         # interface fragments transfers (fuse 1 MiB,
                                 # HDF5 chunk size); 0 = no fragmentation
     cache: object | None = None  # originating ClientCache, so the coherence
@@ -319,13 +322,14 @@ class ArrayObject(_ObjectBase):
 class KVObject(_ObjectBase):
     """daos_kv_*: dkey/akey records hashed across the object's shards."""
 
+    def _planner(self) -> CellPlanner:
+        return CellPlanner(self._layout(), self.oclass, self.stripe_cell)
+
     def _replicas_for(self, dkey) -> tuple[int, ...]:
-        lay = self._layout()
-        h = _layout.oid_for(str(dkey), container_seq=17)
-        return lay.replicas_for_chunk(h % lay.width)
+        return self._planner().kv_replicas(dkey)
 
     def _shard_for(self, dkey) -> int:
-        return self._replicas_for(dkey)[0]
+        return self._planner().kv_shard(dkey)
 
     def put(self, dkey, akey, value, epoch: int | None = None,
             ctx: IOCtx = DEFAULT_CTX) -> None:
@@ -377,6 +381,35 @@ class KVObject(_ObjectBase):
             f"kv {self.name}: all replicas of dkey {dkey!r} down") \
             from last_err
 
+    # ---------------- async batch API ----------------
+    def batch(self, ctx: IOCtx = DEFAULT_CTX, tx=None,
+              qd: int | None = None) -> "KVBatch":
+        """Open a pipelined submission window over this object's records.
+
+        Returned ``KVBatch`` is a context manager; ops submitted through it
+        return ``QueuedOp`` events on a ``SubmissionQueue`` whose depth
+        follows the caller's mount qd (``auto`` maps to the solver's
+        overdrive window) — so manifest/index traffic rides the same
+        cost-true in-flight model as extent I/O.
+        """
+        return KVBatch(self, ctx=ctx, tx=tx, qd=qd)
+
+    def put_async(self, dkey, akey, value, ctx: IOCtx = DEFAULT_CTX,
+                  batch: "KVBatch | None" = None):
+        """Single-shot async put: queue on ``batch`` if given, else open a
+        one-op window (flow-identical to the serial ``put``)."""
+        if batch is not None:
+            return batch.put(dkey, akey, value, obj=self)
+        with self.batch(ctx=ctx) as b:
+            return b.put(dkey, akey, value)
+
+    def get_async(self, dkey, akey, ctx: IOCtx = DEFAULT_CTX,
+                  batch: "KVBatch | None" = None):
+        if batch is not None:
+            return batch.get(dkey, akey, obj=self)
+        with self.batch(ctx=ctx) as b:
+            return b.get(dkey, akey)
+
     def remove(self, dkey, akey=None) -> None:
         for eid in self._replicas_for(dkey):
             eng = self._engine(eid)
@@ -406,3 +439,166 @@ class KVObject(_ObjectBase):
             for key in eng.keys((self.container.label, self.oid)):
                 out.add(key[2])
         return sorted(out)
+
+
+class KVBatch:
+    """Pipelined dkey/akey operations over one (or more) ``KVObject``.
+
+    The serial KV path charges every record as its own RPC chain; a batch
+    queues ops on a ``SubmissionQueue`` bounded per engine and renders the
+    accumulated per-engine flows *once*, with DAOS IOD descriptor batching
+    applied — one RPC carries ~``IOD_BATCH`` record descriptors — exactly
+    like ``ArrayObject`` extent writes.  With a window of 1 (sync mounts,
+    or ``qd=1``) every op executes immediately through the serial
+    ``put``/``get``, so the batch is byte- and flow-identical to not using
+    it at all.
+
+    Under a transaction the batch registers itself as one of the tx's
+    submission queues: ``commit`` drains it (queued records must reach the
+    engines before the epoch turns visible) and ``abort`` discards the
+    unexecuted tail, the same barriers extent handles get.  Cross-object
+    puts (``obj=`` on each op) let one window pipeline manifest + session
+    index records together.
+    """
+
+    def __init__(self, obj: KVObject, ctx: IOCtx = DEFAULT_CTX,
+                 tx=None, qd: int | None = None) -> None:
+        self.obj = obj
+        self.ctx = ctx
+        self.tx = tx
+        self.window = self._resolve_window(ctx, qd)
+        self._sq = SubmissionQueue(qd=self.window)
+        self._accs: dict[str, FlowAccumulator] = {}
+        if tx is not None:
+            tx.register_subq(self)
+
+    def _resolve_window(self, ctx: IOCtx, qd: int | None) -> int:
+        if qd is not None:
+            return max(1, int(qd))
+        if ctx.sync:
+            return 1  # blocking per-op round trips: nothing to pipeline
+        hw_qd = self.obj.pool.sim.hw.queue_depth
+        if ctx.qd == AUTO_QD:
+            # offer the overdrive ceiling; the solver trims each
+            # (process, engine) window to its useful share
+            return 2 * hw_qd
+        return int(ctx.qd) if ctx.qd > 0 else hw_qd
+
+    # -- submission ----------------------------------------------------------
+    def _acc(self, direction: str) -> FlowAccumulator:
+        acc = self._accs.get(direction)
+        if acc is None:
+            acc = self._accs[direction] = FlowAccumulator(0)
+        return acc
+
+    def put(self, dkey, akey, value, obj: KVObject | None = None):
+        o = self.obj if obj is None else obj
+        raw = value if isinstance(value, (bytes, bytearray)) else bytes(value)
+        engines = o._replicas_for(dkey)
+        if self.tx is not None:
+            self.tx._check_open()
+            for eid in engines:
+                self.tx.touch(eid)
+        if self.window <= 1:
+            if self.tx is not None:
+                fn = lambda: self.tx.put_kv(o, dkey, akey, raw, ctx=self.ctx)
+            else:
+                fn = lambda: o.put(dkey, akey, raw, ctx=self.ctx)
+        else:
+            fn = lambda: self._exec_put(o, dkey, akey, raw, engines)
+        return self._sq.submit(fn, engines)
+
+    def _exec_put(self, o: KVObject, dkey, akey, raw: bytes,
+                  engines) -> int:
+        epoch = (self.tx.epoch if self.tx is not None
+                 else o.container.auto_epoch())
+        acc = self._acc("write")
+        wrote = 0
+        last_err: Exception | None = None
+        for eid in engines:
+            try:  # degraded write: surviving replicas only
+                o._engine(eid).update(o._key(dkey, akey), raw, epoch)
+            except EngineFailedError as e:
+                last_err = e
+                continue
+            wrote += 1
+            acc.add(eid, len(raw))
+        if not wrote:
+            raise redundancy.DataLossError(
+                f"kv {o.name}: no live replica for dkey {dkey!r}") \
+                from last_err
+        return len(raw)
+
+    def get(self, dkey, akey, obj: KVObject | None = None):
+        o = self.obj if obj is None else obj
+        engines = o._replicas_for(dkey)
+        if self.window <= 1:
+            epoch = float(self.tx.epoch) if self.tx is not None else None
+            fn = lambda: o.get(dkey, akey, epoch=epoch, ctx=self.ctx)
+        else:
+            fn = lambda: self._exec_get(o, dkey, akey, engines)
+        return self._sq.submit(fn, engines[:1])
+
+    def _exec_get(self, o: KVObject, dkey, akey, engines) -> bytes:
+        epoch = (float(self.tx.epoch) if self.tx is not None
+                 else float(o.container.committed_epoch))
+        last_err: Exception | None = None
+        not_found = 0
+        for eid in engines:  # degraded read: next replica
+            try:
+                rec = o._engine(eid).fetch(o._key(dkey, akey), epoch)
+            except EngineFailedError as e:
+                last_err = e
+                continue
+            except NotFoundError as e:
+                last_err = e
+                not_found += 1
+                continue
+            self._acc("read").add(eid, rec.length)
+            return rec.data if rec.data is not None else b"\0" * rec.length
+        if not_found == len(engines):
+            raise NotFoundError((o.oid, dkey, akey))
+        raise redundancy.DataLossError(
+            f"kv {o.name}: all replicas of dkey {dkey!r} down") \
+            from last_err
+
+    def remove(self, dkey, akey=None, obj: KVObject | None = None):
+        o = self.obj if obj is None else obj
+        engines = o._replicas_for(dkey)
+        return self._sq.submit(lambda: o.remove(dkey, akey), engines)
+
+    # -- completion (tx barriers call these like any submission queue) -------
+    def flush(self) -> None:
+        """Retire every queued op, then render the accumulated flows as one
+        IOD-batched recording per direction."""
+        try:
+            self._sq.flush()
+        finally:
+            self._record()
+
+    def discard(self) -> None:
+        """Abort path: drop the unexecuted tail, but ops that already ran
+        hit the engines — their RPC flows still happened and stay
+        recorded."""
+        self._sq.discard()
+        self._record()
+
+    def _record(self) -> None:
+        accs, self._accs = self._accs, {}
+        for direction, acc in accs.items():
+            if acc:
+                self.obj._record_flows(acc.flows(batch=True), direction,
+                                       self.ctx)
+
+    @property
+    def inflight(self) -> int:
+        return self._sq.inflight
+
+    def __enter__(self) -> "KVBatch":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.flush()
+        else:
+            self.discard()

@@ -31,6 +31,11 @@ from typing import Iterator
 
 import contextlib
 
+#: Sentinel queue depth carried by flows from a ``qd=auto`` mount: the
+#: solver picks the window from measured engine congestion instead of a
+#: mount constant (see ``PhaseRecorder.solve``).
+AUTO_QD = -1
+
 
 @dataclasses.dataclass
 class HWProfile:
@@ -84,6 +89,15 @@ class HWProfile:
     incast_alpha_write: float = 0.003
     srv_incast_alpha_read: float = 0.006
     srv_incast_alpha_write: float = 0.001
+    # Useful-concurrency ceiling for submission windows: an engine keeps
+    # at most qd_overdrive_limit x engine_rpc_threads in-flight slots
+    # doing useful work, shared by however many (process, engine) windows
+    # target it.  Windows offered beyond that share still congest the
+    # service streams (the RPCs really sit in the engine's queues) but
+    # complete over the capped *effective* window — overdriving a fixed
+    # deep queue under fan-in buys nothing, which is the feedback signal
+    # qd=auto mounts pick their steady window from.
+    qd_overdrive_limit: float = 8.0
 
     def incast_eff(self, peers: int, direction: str, server: bool = False
                    ) -> float:
@@ -163,7 +177,8 @@ class _Flow:
     proc_bw_cap: float      # per-process stream cap (0 = uncapped)
     via_fuse: bool = False  # passes through the client node's dfuse daemon
     sync: bool = True       # False => async qd; True => serialized per-op
-    qd: int = 0             # async in-flight window; 0 = hw.queue_depth
+    qd: int = 0             # async in-flight window; 0 = hw.queue_depth,
+                            # AUTO_QD (-1) = solver-picked adaptive window
 
 
 class PhaseRecorder:
@@ -254,8 +269,9 @@ class PhaseRecorder:
         fuse = defaultdict(lambda: [0.0, 0])  # client node -> [bytes, ops]
         # async submission windows, grouped per (process, engine): every
         # IOD a process has outstanding at one engine pipelines through the
-        # same in-flight window — [total ops, deepest qd offered]
-        win_grp = defaultdict(lambda: [0, 0])
+        # same in-flight window — [total ops, deepest fixed qd offered,
+        # whether any flow asked for the adaptive (qd=auto) window]
+        win_grp = defaultdict(lambda: [0, 0, False])
 
         # server-side fan-in: reads interleave per requesting *process*
         # (response streams), writes land per client *node* (the NIC-level
@@ -290,7 +306,10 @@ class PhaseRecorder:
                                                    + f.client_lat_per_op)
                 g = win_grp[(f.process, f.engine)]
                 g[0] += f.nops
-                g[1] = max(g[1], f.qd if f.qd > 0 else hw.queue_depth)
+                if f.qd == AUTO_QD:
+                    g[2] = True
+                else:
+                    g[1] = max(g[1], f.qd if f.qd > 0 else hw.queue_depth)
             if f.proc_bw_cap:
                 s = proc_stream[f.process]
                 s[0] += f.nbytes
@@ -300,13 +319,47 @@ class PhaseRecorder:
                 fu[0] += f.nbytes
                 fu[1] += f.nops
 
+        # window resolution.  An engine's *useful* concurrency is
+        # qd_overdrive_limit x engine_rpc_threads in-flight slots, shared
+        # equally by the (process, engine) windows targeting it.  A fixed
+        # window keeps its offered depth for the congestion tally (those
+        # RPCs really occupy the engine's queues) but completes over the
+        # capped effective window — overdriving past the useful share
+        # only adds queue-sitting RPCs.  A qd=auto window reads the same
+        # feedback upfront: its steady window is the useful share, capped
+        # by the client-side auto window (2x the hardware default depth)
+        # and the ops it actually has, so auto never overdrives.  Cold
+        # auto windows slow-start: one windowed feedback round trip per
+        # doubling from the remembered (process, engine) window, then the
+        # steady window carries the rest of the phase.
+        n_grp = defaultdict(int)
+        for (_p, e) in win_grp:
+            n_grp[e] += 1
+        w_useful = {e: max(1, math.ceil(hw.engine_rpc_threads
+                                        * hw.qd_overdrive_limit / n))
+                    for e, n in n_grp.items()}
+        auto_cap = 2 * hw.queue_depth
+        win = {}                 # (p, e) -> (nops, offered, effective)
+        ramp_rounds = defaultdict(int)
+        for (p, e), (nops, qd, is_auto) in win_grp.items():
+            offered = min(qd, max(1, nops)) if qd else 0
+            if is_auto:
+                steady = min(auto_cap, w_useful[e], max(1, nops))
+                offered = max(offered, steady)
+                prev_w = self.sim.qd_state.get((p, e), 1)
+                if steady > prev_w:
+                    ramp_rounds[p] = max(
+                        ramp_rounds[p],
+                        math.ceil(math.log2(steady / prev_w)))
+                self.sim.qd_state[(p, e)] = steady
+            win[(p, e)] = (nops, offered, min(offered, w_useful[e]))
         # per-engine service concurrency: the in-flight windows offered to
         # an engine compete for its RPC service streams; once the offered
         # depth exceeds engine_rpc_threads every completion slot stretches
         # proportionally (service-time dilation under load)
         eng_win = defaultdict(int)
-        for (p, e), (nops, qd) in win_grp.items():
-            eng_win[e] += min(qd, max(1, nops))
+        for (_p, e), (_n, offered, _w) in win.items():
+            eng_win[e] += offered
         cong = {e: max(1.0, w / hw.engine_rpc_threads)
                 for e, w in eng_win.items()}
         # head-of-line blocking: a process's windows drain at the pace of
@@ -315,10 +368,15 @@ class PhaseRecorder:
         proc_hol = defaultdict(lambda: 1.0)
         for (p, e) in win_grp:
             proc_hol[p] = max(proc_hol[p], cong[e])
-        for (p, e), (nops, qd) in win_grp.items():
-            w = min(qd, max(1, nops))
+        for (p, e), (nops, _offered, w_eff) in win.items():
             wait = 2 * hw.fabric_lat + hw.engine_op_time * proc_hol[p]
-            proc_chain[p] += nops * wait / w
+            proc_chain[p] += nops * wait / w_eff
+        # slow-start surcharge: each doubling of a cold auto window waits
+        # one feedback round trip before widening (AIMD additive phases
+        # are folded into the steady window above — congestion here is
+        # static within a phase, so only the ramp-in is visible)
+        for p, rounds in ramp_rounds.items():
+            proc_chain[p] += rounds * (2 * hw.fabric_lat + hw.engine_op_time)
 
         # cache-local traffic: per-node memory bandwidth + per-op syscall
         # cost on the calling process's serial chain
@@ -434,6 +492,10 @@ class IOSim:
         self._bg_debt = 0.0
         self.bg_stats = {"issued_s": 0.0, "paid_s": 0.0}
         self.clock.on_advance.append(self._drain_bg)
+        # adaptive-qd memory: (process, engine) -> last converged window.
+        # Persists across phases, so a process that already ramped re-enters
+        # at its steady window instead of slow-starting from 1 every phase.
+        self.qd_state: dict[tuple[int, int], int] = {}
 
     def _drain_bg(self, dt: float) -> None:
         self._bg_debt = max(0.0, self._bg_debt - dt)

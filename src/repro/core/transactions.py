@@ -61,6 +61,17 @@ class Transaction:
         self.write_log.append((obj.name, offset, nbytes, ctx))
         return nbytes
 
+    def kv_batch(self, obj, ctx=None, qd=None):
+        """Open a pipelined KV window staged under this tx's epoch.
+
+        The batch registers itself in ``subqueues``: the commit barrier
+        drains it exactly as it drains extent submission queues, and abort
+        discards its unexecuted tail."""
+        from .object import DEFAULT_CTX, KVBatch
+        self._check_open()
+        return KVBatch(obj, ctx=DEFAULT_CTX if ctx is None else ctx,
+                       tx=self, qd=qd)
+
     def put_kv(self, obj, dkey, akey, value, ctx=None) -> None:
         self._check_open()
         for eid in obj._replicas_for(dkey):

@@ -227,13 +227,18 @@ class KVCacheStore:
                 "session": str(session), "step": int(step),
                 "n_writers": self.n_writers, "skeleton": _skeleton(cache),
                 **(extra_meta or {})})
-            tx.put_kv(self._manifest_kv(session), "manifest", "json",
-                      manifest)
+            # metadata rides the pipelined KV plane: manifest + index
+            # records queue on one batch window (the interface's qd) and
+            # the commit barrier below drains it with the data queues
+            node0, proc0 = self.iface.place_writer(0)
+            kvb = self.iface.kv_batch(self._manifest_kv(session), tx=tx,
+                                      client_node=node0, process=proc0)
+            kvb.put("manifest", "json", manifest)
             # the scheduler's O(1) decision record: size + published step
             # ride the same tx as the manifest, so the index can never
             # list a torn publish (and never lags a committed one)
-            tx.put_kv(self._sessions_kv(), str(session), "meta",
-                      self._meta_record(step, entries))
+            kvb.put(str(session), "meta", self._meta_record(step, entries),
+                    obj=self._sessions_kv())
             # commit barrier: write-back data staged under this tx reaches
             # the engines BEFORE the manifest becomes visible — a torn
             # offload can never be restored
@@ -391,8 +396,10 @@ class KVCacheStore:
                 self.iface.unlink(f"{sdir}/{name}")
             except (FileNotFoundError, KeyError):
                 pass
-        self._manifest_kv(session).remove("manifest")
-        self._sessions_kv().remove(str(session))
+        # manifest + index removals pipeline on one batch window
+        with self.iface.kv_batch(self._manifest_kv(session)) as kvb:
+            kvb.remove("manifest")
+            kvb.remove(str(session), obj=self._sessions_kv())
         try:
             self.iface.unlink(sdir)             # the session dir entry
         except (FileNotFoundError, KeyError):

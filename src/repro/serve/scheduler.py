@@ -70,13 +70,27 @@ class ServeScheduler:
     def __init__(self, store: KVCacheStore, nodes,
                  max_active: int = 8,
                  node_cache_bytes: int = 1 << 30,
-                 quota_bytes: int | None = None) -> None:
+                 quota_bytes: int | None = None,
+                 speculate_window: int = 0) -> None:
         if not nodes:
             raise SchedulerError("a fleet needs at least one decode node")
         self.store = store
         self.max_active = max(1, int(max_active))
         self.node_cache_bytes = int(node_cache_bytes)
         self.quota_bytes = None if quota_bytes is None else int(quota_bytes)
+        # speculative restore prefetch: when > 0, every routing decision
+        # issues a readahead of the session's hot window (the last
+        # ``speculate_window`` bytes of each leaf) to the routed node as
+        # *background* flows (the ra_async machinery) — the prefetch cost
+        # becomes debt that drains behind the fleet's decode cadence, so
+        # the bytes sit in the node's ClientCache before the request lands
+        self.speculate_window = max(0, int(speculate_window))
+        self._speculations = 0
+        self._spec_bytes = 0
+        # manifests read by the speculative prefetch, held for the routed
+        # node: the foreground restore collects one instead of re-paying
+        # the manifest KV read the speculation already made
+        self._spec_manifests: dict[tuple[str, int], dict] = {}
         self._nodes: dict[int, NodeState] = {
             int(n): NodeState(int(n)) for n in nodes}
         # store-level LRU over published sessions (oldest first) + size
@@ -129,11 +143,48 @@ class ServeScheduler:
         avail = [ns for ns in alive if ns.active < self.max_active]
         if not avail:
             self._failovers += 1
-            return min(alive, key=lambda ns: (ns.active, ns.node)).node
+            shed = min(alive, key=lambda ns: (ns.active, ns.node)).node
+            self._maybe_speculate(session, shed, meta)
+            return shed
         pick = max(avail, key=warmth)
         if pick is not best:
             self._failovers += 1
+        self._maybe_speculate(session, pick.node, meta)
         return pick.node
+
+    def _maybe_speculate(self, session: str, node: int, meta: dict) -> None:
+        """Prefetch the session's hot window to the routed node as
+        background debt, so the bytes are (ideally) cache-resident before
+        the request's foreground restore issues.  A fully-warm target is
+        skipped — there is nothing to hide.  Prefetch is best-effort:
+        failures never fail the routing decision."""
+        if self.speculate_window <= 0:
+            return
+        if self.affinity(session, node) >= 1.0:
+            return
+        leaf_bytes = int(meta["nbytes"]) // max(1, int(meta["n_leaves"]))
+        hi = leaf_bytes
+        lo = max(0, hi - self.speculate_window)
+        if hi <= lo:
+            return
+        sim = self.store.dfs.cont.pool.sim
+        try:
+            with sim.background_phase():
+                man = self.store.manifest(session)
+                out = self.store.restore_window(session, lo, hi,
+                                                client_node=node, man=man)
+        except Exception:
+            return                  # best-effort: the request still lands
+        self._spec_manifests[(session, int(node))] = man
+        self._speculations += 1
+        self._spec_bytes += sum(int(a.nbytes) for a in out.values())
+
+    def speculated_manifest(self, session: str, node: int) -> dict | None:
+        """Collect (and consume) the manifest the speculative prefetch
+        read while warming ``node`` — the foreground restore passes it as
+        ``man=`` instead of re-reading the manifest KV.  None when no
+        speculation reached that node."""
+        return self._spec_manifests.pop((session, int(node)), None)
 
     def begin(self, session: str, node: int | None = None) -> int:
         """Admit one restore: route (unless the caller pins ``node``) and
@@ -259,6 +310,8 @@ class ServeScheduler:
         live = [ns for ns in self._nodes.values() if ns.alive]
         return {"decisions": self._decisions,
                 "failovers": self._failovers,
+                "speculations": self._speculations,
+                "spec_bytes": self._spec_bytes,
                 "evictions": self._evictions,
                 "evicted_bytes": self._evicted_bytes,
                 "index_reads": self._index_reads,

@@ -374,6 +374,193 @@ def test_broadcast_and_off_never_serve_stale():
             assert w.stale_served == 0, (fleet, seed)
 
 
+# ---------------- async-KV-writer interleavings --------------------------
+class _KVWorld:
+    """Seeded interleavings of batched (queued) and serial KV writers
+    over one shared KVObject, checked against a value oracle.
+
+    This is the metadata-plane sibling of the file harness above, with its
+    OWN op table (the file matrix's cumulative-weight boundaries stay
+    untouched).  The oracle mirrors the container's epoch machine rather
+    than keeping a last-write-wins dict, because visibility is decided by
+    epochs, not wall-clock execution order: every non-tx put is stamped at
+    the moment it *executes* (window overflow, an explicit flush, or a tx
+    commit barrier), while a tx's records are all stamped with the epoch
+    allocated at tx *begin*.  A reader sees the highest stamp at or below
+    the committed watermark, so a committed tx loses any dkey that a
+    non-tx writer touched after the tx began — and because the watermark
+    is a max, a tx's executed records leak into the committed view as soon
+    as any later auto-epoch put lands, even before commit.  An abort
+    punches the tx epoch: the queued tail is discarded, the executed
+    prefix vanishes.  Execution order is deterministic — per-queue
+    submission order, folded into the oracle in the order batches retire
+    ops — so the expected value of every dkey is exact, not a set.
+    """
+
+    DKEYS = 6
+
+    def __init__(self, seed: int) -> None:
+        self.rng = random.Random(seed)
+        self.pool = Pool(Topology(n_server_nodes=2, engines_per_node=2,
+                                  n_client_nodes=2), materialize=True)
+        cont = self.pool.create_container("kvconf", oclass="S2")
+        self.cont = cont
+        dfs = DFS(cont)
+        self.iface = make_interface("dfs:qd=4", dfs)
+        self.kv = cont.open_kv("kv:conf", oclass="RP_2GX")
+        # oracle mirror of the engines' version store: dkey -> {stamp: val}
+        # (stamps share one counter with tx-begin, like the real allocator)
+        self.records: dict[str, dict[int, bytes]] = {}
+        self.stamp = 0
+        self.watermark = 0
+        # open non-tx batches: [(batch, unfolded [(dkey, val), ...])]
+        self.batches: list = []
+        # one optional open tx batch: (tx, tx_stamp, batch, unfolded)
+        self.txb = None
+        self.seq = 0
+        self.checked = 0
+
+    def _val(self) -> bytes:
+        self.seq += 1
+        return b"%06d" % self.seq
+
+    def _auto(self) -> int:
+        """Mirror ``auto_epoch``: allocate a stamp and advance the
+        watermark past it (independent puts are immediately visible)."""
+        self.stamp += 1
+        self.watermark = max(self.watermark, self.stamp)
+        return self.stamp
+
+    def _visible(self, dkey: str) -> bytes | None:
+        """Mirror ``fetch`` at the committed watermark: newest stamp at
+        or below it wins."""
+        versions = self.records.get(dkey, {})
+        live = [s for s in versions if s <= self.watermark]
+        return versions[max(live)] if live else None
+
+    def _fold(self, entry) -> None:
+        """Fold executed (retired) puts of one batch into the oracle —
+        everything the queue no longer holds has hit the engines.  Each
+        one consumed an auto epoch at execution time."""
+        batch, unfolded = entry
+        while unfolded and len(unfolded) > batch.inflight:
+            dkey, val = unfolded.pop(0)
+            self.records.setdefault(dkey, {})[self._auto()] = val
+
+    def _fold_tx(self) -> None:
+        """Executed tx puts reach the engines stamped with the epoch fixed
+        at tx begin (no allocation at execution time)."""
+        _tx, tx_stamp, batch, unfolded = self.txb
+        while unfolded and len(unfolded) > batch.inflight:
+            dkey, val = unfolded.pop(0)
+            self.records.setdefault(dkey, {})[tx_stamp] = val
+
+    def op_batch_put(self) -> None:
+        if not self.batches or (len(self.batches) < 2
+                                and self.rng.random() < 0.4):
+            self.batches.append(
+                (self.iface.kv_batch(self.kv), []))
+        entry = self.rng.choice(self.batches)
+        dkey = f"d{self.rng.randrange(self.DKEYS)}"
+        val = self._val()
+        entry[0].put(dkey, "a", val)
+        entry[1].append((dkey, val))
+        self._fold(entry)
+
+    def op_serial_put(self) -> None:
+        dkey = f"d{self.rng.randrange(self.DKEYS)}"
+        val = self._val()
+        self.kv.put(dkey, "a", val, ctx=self.iface.make_ctx())
+        self.records.setdefault(dkey, {})[self._auto()] = val
+
+    def op_flush(self) -> None:
+        if not self.batches:
+            return
+        entry = self.batches.pop(self.rng.randrange(len(self.batches)))
+        entry[0].flush()
+        for dkey, val in entry[1]:
+            self.records.setdefault(dkey, {})[self._auto()] = val
+
+    def op_read(self) -> None:
+        dkey = f"d{self.rng.randrange(self.DKEYS)}"
+        self.checked += 1
+        try:
+            got = bytes(self.kv.get(dkey, "a"))
+        except Exception:
+            got = None
+        assert got == self._visible(dkey), (
+            f"dkey {dkey}: read {got!r}, oracle "
+            f"{self._visible(dkey)!r}")
+
+    def op_tx_begin(self) -> None:
+        if self.txb is not None:
+            return
+        tx = self.cont.tx_begin()
+        self.stamp += 1                  # alloc_epoch: watermark untouched
+        self.txb = (tx, self.stamp, self.iface.kv_batch(self.kv, tx=tx), [])
+
+    def op_tx_put(self) -> None:
+        if self.txb is None:
+            return
+        dkey = f"d{self.rng.randrange(self.DKEYS)}"
+        val = self._val()
+        self.txb[2].put(dkey, "a", val)
+        self.txb[3].append((dkey, val))
+        self._fold_tx()
+
+    def op_tx_commit(self) -> None:
+        if self.txb is None:
+            return
+        tx, tx_stamp, _batch, unfolded = self.txb
+        tx.commit()                      # barrier drains the batch
+        for dkey, val in unfolded:
+            self.records.setdefault(dkey, {})[tx_stamp] = val
+        self.watermark = max(self.watermark, tx_stamp)
+        self.txb = None
+
+    def op_tx_abort(self) -> None:
+        if self.txb is None:
+            return
+        tx, tx_stamp, _batch, _unfolded = self.txb
+        tx.abort()                       # queued tail discarded, epoch
+        for versions in self.records.values():   # punched everywhere
+            versions.pop(tx_stamp, None)
+        self.txb = None
+
+    def run(self, n_ops: int = 40) -> None:
+        ops = [(self.op_batch_put, 10), (self.op_serial_put, 6),
+               (self.op_read, 12), (self.op_flush, 5),
+               (self.op_tx_begin, 3), (self.op_tx_put, 4),
+               (self.op_tx_commit, 2), (self.op_tx_abort, 1)]
+        funcs = [f for f, _ in ops]
+        weights = [w for _, w in ops]
+        for _ in range(n_ops):
+            self.rng.choices(funcs, weights)[0]()
+        # quiesce: resolve the tx, flush every open batch, re-check all
+        if self.txb is not None:
+            if self.rng.random() < 0.5:
+                self.op_tx_commit()
+            else:
+                self.op_tx_abort()
+        while self.batches:
+            self.op_flush()
+        for i in range(self.DKEYS):
+            dkey = f"d{i}"
+            try:
+                got = bytes(self.kv.get(dkey, "a"))
+            except Exception:
+                got = None
+            assert got == self._visible(dkey), dkey
+            self.checked += 1
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_async_kv_writer_conformance(seed):
+    w = _KVWorld(seed)
+    w.run()
+    assert w.checked > 0
+
+
 # ---------------- hypothesis front-end (shrinks when available) ----------
 try:
     from hypothesis import HealthCheck, given, settings

@@ -1,0 +1,432 @@
+"""The pipelined metadata plane: KV batches, adaptive queue depth,
+speculative restore prefetch.
+
+Structural guarantees pinned here:
+
+* **flow equivalence** — a ``KVBatch`` at window 1 is byte- and
+  flow-identical to the serial ``put``/``get`` path on every interface
+  (same flows, same solved time): the batch is a scheduling layer, never
+  a second KV path;
+* **pipelining wins** — a deep batch window really is cheaper than the
+  serial chain for many-record metadata traffic (the Q5 structure);
+* **transaction interplay** — tx commit drains a registered KV batch
+  (records become visible with the epoch), abort discards the queued
+  tail and punches the staged records;
+* **adaptive depth** — ``qd=auto`` is rejected by sync mounts, resolves
+  to the solver's congestion-fed window on async mounts, never loses to
+  the best fixed depth by more than the ramp surcharge (the Q4
+  structure), and trims fan-in congestion a deep fixed window causes;
+* **part-fan shared saves** — ``multipart_write_at`` round-trips bytes
+  exactly, and a shared-layout checkpoint with above-threshold leaves
+  stays restorable bit-for-bit (C8 revalidation under the change);
+* **speculative prefetch** — a routing decision with
+  ``speculate_window`` issues background debt that warms the routed
+  node, making the foreground window restore cheaper (the SV7
+  structure).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AUTO_QD, IOSim, KVBatch, Pool, Topology,
+                        TxStateError, multipart_write_at)
+from repro.core.interfaces import DFS, INTERFACE_NAMES, make_interface
+from repro.ckpt import Checkpointer
+
+MIB = 1 << 20
+
+
+def _fresh(iface_name, **topo_kw):
+    pool = Pool(Topology(**topo_kw), materialize=True)
+    cont = pool.create_container("c", oclass="S2")
+    dfs = DFS(cont)
+    dfs.mkdir("/d")
+    return pool, make_interface(iface_name, dfs)
+
+
+def _kv(iface, name="m"):
+    return iface.dfs.cont.open_kv(f"kv:{name}", oclass="RP_3GX")
+
+
+# --------------------------------------------------------------------------
+# flow equivalence: batched at window 1 == serial, on every interface
+# --------------------------------------------------------------------------
+def _drive_kv(pool, iface, use_batch, n=12):
+    kv = _kv(iface)
+    ctx = iface.make_ctx(1, 2)
+    with pool.sim.phase() as ph:
+        if use_batch:
+            with kv.batch(ctx=ctx, qd=1) as b:
+                for i in range(n):
+                    b.put(f"k{i}", "v", bytes([i]) * (50 + i))
+                got = [b.get(f"k{i}", "v").wait() for i in range(n)]
+        else:
+            for i in range(n):
+                kv.put(f"k{i}", "v", bytes([i]) * (50 + i), ctx=ctx)
+            got = [kv.get(f"k{i}", "v", ctx=ctx) for i in range(n)]
+    assert [bytes(g) for g in got] == [bytes([i]) * (50 + i)
+                                       for i in range(n)]
+    return ph
+
+
+@pytest.mark.parametrize("iface_name", INTERFACE_NAMES)
+def test_kv_batch_qd1_flow_identical_to_serial(iface_name):
+    """Window pinned to 1: the batch must record exactly the flows the
+    serial path records — field for field — and solve identically."""
+    ph_ser = _drive_kv(*_fresh(iface_name), use_batch=False)
+    ph_bat = _drive_kv(*_fresh(iface_name), use_batch=True)
+    assert ([dataclasses.astuple(f) for f in ph_bat.flows]
+            == [dataclasses.astuple(f) for f in ph_ser.flows])
+    assert ph_bat.md_ops == ph_ser.md_ops
+    assert ph_bat.elapsed == ph_ser.elapsed
+
+
+def test_kv_batch_window1_on_sync_mounts():
+    """A sync cost profile pins the batch window to 1 even when the
+    object's pool would default deeper."""
+    pool, posix = _fresh("posix")
+    b = _kv(posix).batch(ctx=posix.make_ctx())
+    assert b.window == 1
+    pool2, dfs = _fresh("dfs")
+    assert _kv(dfs).batch(ctx=dfs.make_ctx()).window \
+        == pool2.sim.hw.queue_depth
+
+
+def test_kv_batch_pipelines_many_records_faster():
+    """The Q5 structure as a unit test: a deep window over many small
+    records beats the serial chain (IOD descriptor coalescing + window)."""
+    def run(use_batch):
+        pool, iface = _fresh("daos-array")
+        kv = _kv(iface)
+        ctx = iface.make_ctx(0, 0)
+        with pool.sim.phase() as ph:
+            if use_batch:
+                with kv.batch(ctx=ctx) as b:
+                    for i in range(64):
+                        b.put(f"s{i:03d}", "meta", b"x" * 200)
+            else:
+                for i in range(64):
+                    kv.put(f"s{i:03d}", "meta", b"x" * 200, ctx=ctx)
+        return ph.elapsed
+
+    serial, batched = run(False), run(True)
+    assert batched < serial / 2
+
+
+def test_kv_batch_byte_identical_roundtrip():
+    pool, iface = _fresh("daos-array")
+    kv = _kv(iface)
+    ctx = iface.make_ctx(0, 0)
+    vals = {f"d{i}": bytes([i * 3 % 251]) * (i + 1) for i in range(40)}
+    with kv.batch(ctx=ctx) as b:
+        for k, v in vals.items():
+            b.put(k, "a", v)
+    for k, v in vals.items():
+        assert bytes(kv.get(k, "a")) == v
+    # batched gets return the same bytes
+    with kv.batch(ctx=ctx) as b:
+        evs = {k: b.get(k, "a") for k in vals}
+        got = {k: bytes(ev.wait()) for k, ev in evs.items()}
+    assert got == vals
+
+
+def test_kv_batch_cross_object_puts_share_one_window():
+    pool, iface = _fresh("daos-array")
+    kv_a, kv_b = _kv(iface, "a"), _kv(iface, "b")
+    with kv_a.batch(ctx=iface.make_ctx()) as b:
+        b.put("k", "v", b"AA")
+        b.put("k", "v", b"BB", obj=kv_b)
+    assert bytes(kv_a.get("k", "v")) == b"AA"
+    assert bytes(kv_b.get("k", "v")) == b"BB"
+
+
+def test_put_async_and_get_async_single_shot():
+    pool, iface = _fresh("dfs")
+    kv = _kv(iface)
+    ctx = iface.make_ctx(0, 0)
+    ev = kv.put_async("k", "v", b"solo", ctx=ctx)
+    assert ev.test() and ev.error is None
+    assert bytes(kv.get_async("k", "v", ctx=ctx).wait()) == b"solo"
+
+
+# --------------------------------------------------------------------------
+# transaction interplay
+# --------------------------------------------------------------------------
+def test_tx_commit_drains_kv_batch():
+    pool, iface = _fresh("dfs:qd=16")
+    cont = iface.dfs.cont
+    kv = _kv(iface)
+    tx = cont.tx_begin()
+    b = iface.kv_batch(kv, tx=tx)
+    ev = b.put("k", "v", b"staged")
+    assert not ev.test()                 # queued when commit starts
+    # invisible pre-commit: the record is staged above the watermark
+    with pytest.raises(Exception):
+        kv.get("k", "v")
+    tx.commit()                          # barrier drains the batch
+    assert ev.test() and ev.error is None
+    assert bytes(kv.get("k", "v")) == b"staged"
+
+
+def test_tx_abort_discards_kv_batch_with_tx_error():
+    pool, iface = _fresh("dfs:qd=16")
+    cont = iface.dfs.cont
+    kv = _kv(iface)
+    tx = cont.tx_begin()
+    b = iface.kv_batch(kv, tx=tx)
+    ev = b.put("k", "v", b"torn")
+    tx.abort()
+    assert ev.test()
+    with pytest.raises(TxStateError, match="discarded"):
+        ev.wait()
+    with pytest.raises(Exception):       # never reached the engines
+        kv.get("k", "v")
+
+
+def test_kv_batch_error_surfaces_at_flush():
+    pool, iface = _fresh("dfs:qd=8")
+    kv = _kv(iface)
+    # kill every engine holding this dkey -> DataLossError at execution
+    for eid in kv._replicas_for("dead"):
+        pool.engines[eid].fail()
+    b = kv.batch(ctx=iface.make_ctx())
+    b.put("dead", "v", b"x")
+    with pytest.raises(Exception, match="no live replica"):
+        b.flush()
+
+
+# --------------------------------------------------------------------------
+# adaptive queue depth (qd=auto)
+# --------------------------------------------------------------------------
+def test_qd_auto_rejected_on_sync_profiles():
+    pool, iface = _fresh("dfs")
+    for name in ("posix", "posix-ioil", "posix-cached", "mpiio", "hdf5",
+                 "hdf5-coll"):
+        with pytest.raises(ValueError, match="asynchronous"):
+            make_interface(f"{name}:qd=auto", iface.dfs)
+
+
+def test_qd_auto_accepted_on_async_profiles():
+    pool, iface = _fresh("daos-array:qd=auto")
+    assert iface.qd == AUTO_QD
+    assert iface.exec_qd == 2 * pool.sim.hw.queue_depth
+    ctx = iface.make_ctx(0, 0)
+    assert ctx.qd == AUTO_QD
+    pool2, dfsiface = _fresh("dfs-cached:qd=auto,coherence=off")
+    assert dfsiface.qd == AUTO_QD
+
+
+def test_qd_auto_malformed_variants_raise():
+    pool, iface = _fresh("dfs")
+    for bad in ("dfs:qd=aut0", "dfs:qd=-1", "dfs:qd=0", "dfs:qd="):
+        with pytest.raises(ValueError):
+            make_interface(bad, iface.dfs)
+
+
+def _sweep_elapsed(qd_opt, procs=2, nops=256, nbytes=64 << 10):
+    """One fixed-or-auto sweep point: ``procs`` writers fan over the
+    engines through one mount."""
+    pool, iface = _fresh(f"daos-array:qd={qd_opt}")
+    handles = [iface.create(f"/d/q{p}", client_node=p % 4, process=p)
+               for p in range(procs)]
+    with pool.sim.phase() as ph:
+        for i in range(nops):
+            for p, h in enumerate(handles):
+                h.write_sized_at(i * nbytes, nbytes)
+    return ph.elapsed
+
+
+def test_qd_auto_tracks_best_fixed_depth():
+    """The Q4 structure: at a representative sweep point, auto reaches
+    >= 95% of the best fixed depth's bandwidth without naming one."""
+    fixed = {qd: _sweep_elapsed(qd) for qd in (1, 4, 16, 32)}
+    auto = _sweep_elapsed("auto")
+    best = min(fixed.values())
+    assert auto <= best / 0.95
+
+
+def test_qd_auto_state_persists_and_ramps_once():
+    """AIMD slow start: the first auto phase pays doubling rounds, a
+    steady-state repeat of the same traffic does not."""
+    pool, iface = _fresh("daos-array:qd=auto")
+    h = iface.create("/d/ramp", client_node=0, process=0)
+
+    def phase():
+        with pool.sim.phase() as ph:
+            for i in range(128):
+                h.write_sized_at(i * (64 << 10), 64 << 10)
+        return ph.elapsed
+
+    first, second = phase(), phase()
+    assert pool.sim.qd_state                  # per (process, engine) state
+    assert all(w >= 1 for w in pool.sim.qd_state.values())
+    assert second <= first                    # ramp surcharge paid once
+
+
+def test_qd_auto_trims_fan_in_congestion():
+    """Many processes hammering few engines: a greedy fixed deep window
+    congests (eng_win >> rpc threads); auto's useful-share cap must not
+    lose to it."""
+    def run(qd_opt, procs=12):
+        pool, iface = _fresh(f"daos-array:qd={qd_opt}",
+                             n_client_nodes=4)
+        handles = [iface.create(f"/d/f{p}", client_node=p % 4, process=p)
+                   for p in range(procs)]
+        with pool.sim.phase() as ph:
+            for i in range(64):
+                for h in handles:
+                    h.write_sized_at(i * (64 << 10), 64 << 10)
+        return ph.elapsed
+
+    assert run("auto") <= run(32) * (1 + 1e-9)
+
+
+# --------------------------------------------------------------------------
+# part-fan shared checkpoint saves (multipart_write_at)
+# --------------------------------------------------------------------------
+def test_multipart_write_at_roundtrip():
+    pool, iface = _fresh("daos-array")
+    data = (np.arange(5 * MIB + 7) % 249).astype(np.uint8)
+    h = iface.create("/d/mpa", client_node=0, process=0)
+    n = multipart_write_at(iface, h, 64, data)
+    assert n == data.size
+    got = np.asarray(iface.open("/d/mpa").read_at(64, data.size))
+    np.testing.assert_array_equal(got, data)
+
+
+def test_multipart_write_at_under_tx_commit_barrier():
+    pool, iface = _fresh("dfs:qd=16")
+    cont = iface.dfs.cont
+    data = np.full(5 * MIB, 9, np.uint8)
+    tx = cont.tx_begin()
+    h = iface.create("/d/mptx", client_node=0, process=0, tx=tx)
+    multipart_write_at(iface, h, 0, data, tx=tx)
+    tx.commit()                          # completion point for the parts
+    got = np.asarray(iface.open("/d/mptx").read_at(0, data.size))
+    np.testing.assert_array_equal(got, data)
+
+
+def test_shared_ckpt_with_big_leaves_restores_bit_exact():
+    """C8 revalidation: a shared-layout save whose leaves cross the
+    multipart threshold fans by part — and restores bit-for-bit through
+    the unchanged reader."""
+    pool, iface = _fresh("dfs")
+    ck = Checkpointer(iface.dfs, interface=iface, layout="shared",
+                      n_writers=4)
+    rng = np.random.default_rng(3)
+    tree = {"big": rng.integers(0, 255, (5 * MIB,), dtype=np.uint8),
+            "small": rng.integers(0, 255, (64 << 10,), dtype=np.uint8)}
+    ck.save(1, tree)
+    back = ck.restore(1, {"big": None, "small": None})
+    np.testing.assert_array_equal(back["big"], tree["big"])
+    np.testing.assert_array_equal(back["small"], tree["small"])
+
+
+def test_shared_ckpt_part_fan_beats_rank_fan_for_big_leaves():
+    """The Q6 structure: with few writers and big leaves, fanning by
+    1 MiB part engages more client nodes than fanning by rank."""
+    def save_time(n_writers, leaf_mib, force_rank_fan):
+        pool, iface = _fresh("daos-array", n_client_nodes=8)
+        ck = Checkpointer(iface.dfs, interface=iface, layout="shared",
+                          n_writers=n_writers, oclass="SX")
+        tree = {"w": np.ones(leaf_mib * MIB, np.uint8)}
+        if force_rank_fan:
+            import repro.ckpt.checkpointer as C
+            orig = C.should_multipart
+            C.should_multipart = lambda *a, **k: False
+            try:
+                with pool.sim.phase() as ph:
+                    ck.save(1, tree)
+            finally:
+                C.should_multipart = orig
+        else:
+            with pool.sim.phase() as ph:
+                ck.save(1, tree)
+        return ph.elapsed
+
+    rank = save_time(2, 16, force_rank_fan=True)
+    part = save_time(2, 16, force_rank_fan=False)
+    assert part < rank
+
+
+# --------------------------------------------------------------------------
+# speculative restore prefetch (scheduler)
+# --------------------------------------------------------------------------
+def _serve_world():
+    from repro.serve import KVCacheStore, ServeScheduler
+    pool = Pool(Topology(n_server_nodes=4, engines_per_node=2,
+                         n_client_nodes=8, procs_per_client_node=1),
+                materialize=True)
+    cont = pool.create_container("serve", oclass="SX")
+    dfs = DFS(cont, dir_oclass="S1")
+    store = KVCacheStore(dfs, interface="posix-cached:timeout=1.0,"
+                                        "readahead=4,page_kib=64",
+                         n_writers=4, verify_on_restore=False)
+    rng = np.random.default_rng(7)
+    cache = {f"layer{i:02d}": rng.integers(0, 255, (64 << 10,),
+                                           dtype=np.uint8)
+             for i in range(8)}
+    store.offload("sess", cache, step=0)
+    return pool, store, cache
+
+
+def test_speculation_issues_background_debt_and_warms_node():
+    from repro.serve import ServeScheduler
+    pool, store, cache = _serve_world()
+    win = 16 << 10
+    sched = ServeScheduler(store, nodes=range(4), speculate_window=win)
+    with pool.sim.phase():               # the control-plane phase
+        node = sched.begin("sess")
+    assert pool.sim.bg_stats["issued_s"] > 0
+    st = sched.stats()
+    assert st["speculations"] == 1
+    assert st["spec_bytes"] > 0
+    pool.sim.clock.advance(0.05)         # decode cadence drains the debt
+    assert pool.sim._bg_debt == 0.0
+
+    # the foreground window restore now lands on the warmed cache
+    leaf = 64 << 10
+    with pool.sim.phase() as fg:
+        out = store.restore_window("sess", leaf - win, leaf,
+                                   client_node=node)
+    # baseline: same restore on a cold fleet, no speculation
+    pool2, store2, _ = _serve_world()
+    sched2 = ServeScheduler(store2, nodes=range(4))
+    with pool2.sim.phase():
+        node2 = sched2.begin("sess")
+    assert sched2.stats()["speculations"] == 0
+    with pool2.sim.phase() as fg2:
+        out2 = store2.restore_window("sess", leaf - win, leaf,
+                                     client_node=node2)
+    for k in out:
+        np.testing.assert_array_equal(out[k], out2[k])   # same bytes
+        np.testing.assert_array_equal(                   # leaf path "/name"
+            out[k], cache[k.lstrip("/")][leaf - win: leaf])
+    assert fg.elapsed < fg2.elapsed      # prefetch hid the fetch
+
+
+def test_speculation_skips_fully_warm_node():
+    from repro.serve import ServeScheduler
+    pool, store, cache = _serve_world()
+    sched = ServeScheduler(store, nodes=range(4),
+                           speculate_window=16 << 10)
+    meta = store.session_meta("sess")
+    with pool.sim.phase():
+        node = sched.begin("sess")
+    sched.end("sess", node, nbytes=meta["nbytes"])   # fully resident now
+    before = sched.stats()["speculations"]
+    with pool.sim.phase():
+        n2 = sched.begin("sess")
+    assert n2 == node                    # affinity routing holds
+    assert sched.stats()["speculations"] == before   # nothing to hide
+
+
+def test_speculation_disabled_by_default():
+    from repro.serve import ServeScheduler
+    pool, store, _ = _serve_world()
+    sched = ServeScheduler(store, nodes=range(4))
+    with pool.sim.phase():
+        sched.begin("sess")
+    assert pool.sim.bg_stats["issued_s"] == 0.0
+    assert sched.stats()["speculations"] == 0
