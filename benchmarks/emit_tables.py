@@ -31,6 +31,7 @@ MDTEST_MARK = "<!-- MDTEST CACHE TABLES -->"
 COH_MARK = "<!-- COHERENCE TABLES -->"
 SERVE_MARK = "<!-- SERVE TABLES -->"
 QD_MARK = "<!-- QD TABLES -->"
+FT_MARK = "<!-- FT TABLES -->"
 
 SKELETON = f"""# EXPERIMENTS
 
@@ -65,6 +66,10 @@ SKELETON = f"""# EXPERIMENTS
 ## §Queue depth
 
 {QD_MARK}
+
+## §Failure
+
+{FT_MARK}
 
 ## §Roofline
 
@@ -438,6 +443,65 @@ def serve_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def ft_table(rows: list[dict]) -> str:
+    """The failure & rebuild tier: degraded reads per object class,
+    rebuild-vs-foreground contention, the serving failover SLO, and the
+    failure-schedule conformance coverage, plus the F claims."""
+    out = []
+    drows = [r for r in rows if r.get("mode") == "degraded"]
+    if drows:
+        out += [f"### Degraded reads (one engine down, "
+                f"{drows[0]['mib']} MiB object)", "",
+                "| oclass | healthy GiB/s | degraded GiB/s | kept | "
+                "on loss |", "|---|---|---|---|---|"]
+        for r in drows:
+            if r.get("data_loss_raised"):
+                out.append(f"| {r['oclass']} | {r['healthy_gib_s']:.2f} "
+                           "| - | - | DataLossError (loud) |")
+            else:
+                out.append(f"| {r['oclass']} | {r['healthy_gib_s']:.2f} "
+                           f"| {r['degraded_gib_s']:.2f} "
+                           f"| {r['ratio']:.0%} | serves |")
+        out.append("")
+    rrows = [r for r in rows if r.get("mode") == "rebuild"]
+    if rrows:
+        r = rrows[0]
+        out += [f"### Rebuild vs foreground ({r['mib']} MiB victim, "
+                f"{r['rounds']} budget rounds)", "",
+                "| rebuild floor | throttled | slowdown | fg baseline | "
+                "fg contended | kept | bg hidden |",
+                "|---|---|---|---|---|---|---|",
+                f"| {r['rebuild_floor_s'] * 1e3:.1f} ms "
+                f"| {r['rebuild_throttled_s'] * 1e3:.1f} ms "
+                f"| {r['slowdown']:.1f}x "
+                f"| {r['fg_base_gib_s']:.2f} GiB/s "
+                f"| {r['fg_contended_gib_s']:.2f} GiB/s "
+                f"| {r['fg_retention']:.0%} "
+                f"| {r['bg_hidden_fraction']:.0%} |", ""]
+    srows = [r for r in rows if r.get("mode") == "slo"]
+    if srows:
+        r = srows[0]
+        out += [f"### Serving failover ({r['sessions']} sessions x "
+                f"{r['nodes']} nodes, node {r['dead_node']} dies "
+                "mid-sweep)", "",
+                "| p95 before | p95 after | SLO | failovers | "
+                "dead node routed |", "|---|---|---|---|---|",
+                f"| {r['p95_pre_ms']:.2f} ms | {r['p95_post_ms']:.2f} ms "
+                f"| {r['slo_ms']:.0f} ms | {r['failovers']} "
+                f"| {'yes' if r['dead_routed'] else 'no'} |", ""]
+    crows = [r for r in rows if r.get("mode") == "conform"]
+    if crows:
+        r = crows[0]
+        out += ["### Failure-schedule conformance", "",
+                "| fleet | seeds | failure cycles | checked reads | "
+                "byte-exact |", "|---|---|---|---|---|",
+                f"| {r['fleet']} | {r['seeds']} | {r['fail_cycles']} "
+                f"| {r['checked_reads']} "
+                f"| {'yes' if r['byte_exact'] else 'NO'} |", ""]
+    out += _claims_lines(rows, ("F",))
+    return "\n".join(out)
+
+
 def qd_table(rows: list[dict]) -> str:
     """The async-data-path study: queue-depth sweep, multipart restore
     vs single stream, async readahead under think time, plus the Q
@@ -694,12 +758,23 @@ def main() -> None:
                                         "qd-auto", "qd-kvmeta"))
         if body:
             text = _splice(text, QD_MARK, body)
+    n_ft = 0
+    ft_json = ROOT / "artifacts" / "ft_bench.json"
+    if ft_json.exists():
+        rows = json.loads(ft_json.read_text())
+        body = ft_table(rows)
+        n_ft = sum(1 for r in rows
+                   if r.get("mode") in ("degraded", "rebuild", "slo",
+                                        "conform"))
+        if body:
+            text = _splice(text, FT_MARK, body)
     exp.write_text(text)
     print(f"spliced tables: roofline base={len(base)} opt={len(opt)} "
           f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}; "
           f"ior sweep rows={n_sweep}; ckpt cached rows={n_ckpt}; "
           f"elastic rows={n_elastic}; mdtest rows={n_md}; "
-          f"coherence rows={n_coh}; serve rows={n_serve}; qd rows={n_qd}")
+          f"coherence rows={n_coh}; serve rows={n_serve}; qd rows={n_qd}; "
+          f"ft rows={n_ft}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,427 @@
+"""Failure & rebuild tier benchmark: degraded reads, rebuild-vs-foreground
+contention, serving SLO across a failover, and the failure-schedule
+conformance sweep.
+
+The failure domain runs through the same costed pipeline as the healthy
+path — degraded reads charge the survivors they actually touch, rebuild
+moves its bytes as simulator flows (standalone phases or background debt
+inside foreground phases), and recovery fences client caches through the
+real coherence plane.  This driver measures what that costs:
+
+* ``--mode degraded`` — per-oclass read bandwidth with one engine down
+                        vs healthy: RP_2G1 reads fail over to the
+                        surviving replica, EC_4P1 reads XOR-reconstruct
+                        from the surviving lanes + parity, and an
+                        unprotected SX read raises ``DataLossError``
+                        instead of fabricating bytes (claim F1).
+* ``--mode rebuild``  — rebuild-vs-foreground contention: an unthrottled
+                        standalone rebuild sets the floor, then a
+                        throttled rebuild streams its bytes as
+                        background debt inside foreground read phases
+                        and both sides are measured (claim F2).
+* ``--mode slo``      — a serving fleet mid-sweep failover: decode node
+                        (and its co-resident server engines) dies
+                        between waves, the ``FailureDetector`` feeds
+                        ``mark_down``, sessions fail over and restore
+                        degraded — p95 stays inside the SLO and zero
+                        routes land on the dead node (claim F3).
+* ``--mode conform``  — the failure-schedule conformance sweep: the
+                        coherence oracle with engine kill / costed
+                        rebuild / fenced restore injected mid-
+                        interleaving; every read byte-exact across
+                        >= 50 seeds (claim F4).
+* ``--mode all``      — everything.
+
+Claims validated:
+
+* **F1** — RP_2G1 degraded-read bandwidth >= 70% of the healthy read
+  (one replica lost, the other serves at full stripe width minus the
+  dead lanes), and SX loss is loud: ``DataLossError``, not silence.
+* **F2** — a throttled rebuild preserves >= 80% of foreground read
+  bandwidth while finishing within 3x the unthrottled rebuild time:
+  contention is real but bounded, in both directions.
+* **F3** — after a mid-sweep node failure the serving p95 stays inside
+  the SLO, at least one failover is observed, and no post-failure route
+  or speculation targets the dead node.
+* **F4** — torn-offload and staleness guarantees survive an injected
+  failure schedule: every checked read of the conformance oracle is
+  byte-exact across the full seed matrix, and the schedule really
+  kills engines (no vacuous pass).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core import Pool, Topology, bandwidth            # noqa: E402
+from repro.core.interfaces import DFS                       # noqa: E402
+from repro.core.redundancy import DataLossError             # noqa: E402
+from repro.ft import FailureDetector                        # noqa: E402
+from repro.serve import KVCacheStore, ServeScheduler        # noqa: E402
+
+ARTIFACTS = ROOT / "artifacts"
+MIB = 1 << 20
+
+
+def make_pool(clients: int = 8) -> Pool:
+    topo = Topology(n_server_nodes=8, engines_per_node=2,
+                    n_client_nodes=clients, procs_per_client_node=1)
+    # materialized engines: degraded reads and rebuild really move the
+    # bytes, so byte-identity checks below are meaningful
+    return Pool(topo, materialize=True)
+
+
+def synth(nbytes: int, seed: int = 0) -> bytes:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 255, nbytes, np.uint8).tobytes()
+
+
+# --------------------------------------------------------------- degraded --
+def degraded(oclass: str, mib: int) -> dict:
+    """Healthy vs one-engine-down read bandwidth for one object class."""
+    pool = make_pool()
+    cont = pool.create_container("ft", oclass=oclass, stripe_cell=MIB)
+    obj = cont.open_array("a", oclass=oclass)
+    data = synth(mib * MIB)
+    obj.write(0, data)
+    with pool.sim.phase() as hp:
+        got = obj.read(0, len(data))
+    np.testing.assert_array_equal(got, np.frombuffer(data, np.uint8))
+    lay = obj._layout()
+    oc = obj.oclass
+    if oc.ec_data:          # kill a DATA lane: forces XOR reconstruction
+        dead = obj._cell_engines(lay, 0)[0]
+    else:
+        dead = lay.replicas_for_chunk(0)[0]
+    pool.fail_engine(dead)
+    row = {"mode": "degraded", "oclass": oclass,
+           "mib": mib, "dead_engine": dead,
+           "healthy_gib_s": round(bandwidth(len(data), hp.elapsed), 3)}
+    try:
+        with pool.sim.phase() as dp:
+            got = obj.read(0, len(data))
+    except DataLossError as e:
+        row.update(degraded_gib_s=0.0, ratio=0.0,
+                   data_loss_raised=True, error=str(e)[:80])
+        return row
+    np.testing.assert_array_equal(got, np.frombuffer(data, np.uint8))
+    dbw = bandwidth(len(data), dp.elapsed)
+    row.update(degraded_gib_s=round(dbw, 3),
+               ratio=round(dbw / max(1e-9, row["healthy_gib_s"]), 3),
+               data_loss_raised=False)
+    return row
+
+
+# ---------------------------------------------------------------- rebuild --
+def _rebuild_world(mib: int):
+    pool = make_pool()
+    cont = pool.create_container("ft", oclass="RP_2G1", stripe_cell=MIB)
+    vic = cont.open_array("victim")          # what rebuild re-replicates
+    fg = cont.open_array("fg")               # what the foreground reads
+    vic.write(0, synth(mib * MIB, seed=1))
+    fg.write(0, synth(mib * MIB, seed=2))
+    return pool, cont, vic, fg
+
+
+def rebuild_contention(mib: int, rounds: int, fg_factor: int) -> dict:
+    """Unthrottled-vs-throttled rebuild against a live foreground.
+
+    The unthrottled run measures the rebuild floor (all bytes in one
+    standalone phase).  The throttled run splits the same bytes into
+    ``rounds`` budget slices, each issued as background debt inside a
+    foreground phase reading ``fg_factor`` budgets' worth of data — the
+    contention frontier claim F2 bounds from both sides."""
+    # -- foreground baseline: no failure, no rebuild
+    pool, cont, vic, fg = _rebuild_world(mib)
+    fg_bytes = mib * MIB
+    with pool.sim.phase() as bp:
+        fg.read(0, fg_bytes)
+    bw_base = bandwidth(fg_bytes, bp.elapsed)
+
+    # -- unthrottled rebuild floor (standalone phase, nothing else runs)
+    dead = vic._layout().replicas_for_chunk(0)[0]
+    pool2, *_ = _rebuild_world(mib)
+    pool2.fail_engine(dead)
+    t0 = pool2.sim.clock.now
+    stats = pool2.rebuild()
+    t_fast = pool2.sim.clock.now - t0
+    total = stats["moved_bytes"]
+
+    # -- throttled rebuild inside foreground phases
+    pool3, cont3, vic3, fg3 = _rebuild_world(mib)
+    pool3.fail_engine(dead)
+    rb = pool3.rebuilder()
+    budget = max(1, total // rounds)
+    read_per_round = min(fg_bytes, fg_factor * budget)
+    t0 = pool3.sim.clock.now
+    fg_read = fg_time = 0.0
+    waves = 0
+    while not rb.done:
+        with pool3.sim.phase() as ph:
+            fg3.read(0, read_per_round)
+            rb.step(budget)
+        fg_read += read_per_round
+        fg_time += ph.elapsed
+        waves += 1
+    t_throttled = pool3.sim.clock.now - t0
+    bw_contended = bandwidth(fg_read, fg_time)
+    # the rebuilt copy is byte-exact through the replacement
+    pool3.restore_engine(dead)
+    got = vic3.read(0, mib * MIB)
+    np.testing.assert_array_equal(got,
+                                  np.frombuffer(synth(mib * MIB, seed=1),
+                                                np.uint8))
+    return {"mode": "rebuild", "mib": mib, "rounds": waves,
+            "moved_mib": round(total / MIB, 1),
+            "rebuild_floor_s": round(t_fast, 4),
+            "rebuild_throttled_s": round(t_throttled, 4),
+            "slowdown": round(t_throttled / max(1e-9, t_fast), 2),
+            "fg_base_gib_s": round(bw_base, 3),
+            "fg_contended_gib_s": round(bw_contended, 3),
+            "fg_retention": round(bw_contended / max(1e-9, bw_base), 3),
+            "bg_hidden_fraction": round(pool3.sim.bg_hidden_fraction(), 3)}
+
+
+# -------------------------------------------------------------------- slo --
+def slo_sweep(sessions: int, nodes: int, rounds: int, n_leaves: int,
+              leaf_kib: int, slo_ms: float) -> dict:
+    """Serving waves with a mid-sweep node failure: decode node
+    ``nodes - 1`` (and the server engines co-resident on that physical
+    node) dies between waves; the detector marks it down and the fleet
+    fails over onto the survivors, restoring degraded."""
+    pool = make_pool(clients=max(8, nodes))
+    cont = pool.create_container("serve", oclass="RP_2G1")
+    dfs = DFS(cont)
+    store = KVCacheStore(dfs, interface="posix-cached",
+                         verify_on_restore=False)
+    sched = ServeScheduler(store, nodes=range(nodes),
+                           speculate_window=leaf_kib << 9)
+    rng = np.random.default_rng(0)
+    names = [f"s{i:03d}" for i in range(sessions)]
+    for i, s in enumerate(names):
+        cache = {f"l{j:02d}": rng.integers(0, 255, (leaf_kib << 10,),
+                                           np.uint8)
+                 for j in range(n_leaves)}
+        sched.offload(s, cache)
+        n = sched.begin(s, node=i % nodes)   # seed affinity across fleet
+        sched.end(s, n)
+
+    det = FailureDetector(pool)
+    dead_node = nodes - 1
+    lat_pre, lat_post = [], []
+    routed_post: set[int] = set()
+    last_node: dict[str, int] = {}
+    failovers = 0
+    for rnd in range(rounds):
+        if rnd == rounds // 2:
+            # the physical node dies: its server engines AND the decode
+            # client on it — data survives via RP_2G1, routing via the
+            # detector-driven mark_down
+            pool.fail_node(dead_node)
+            for ev in det.poll(rnd):
+                if ev.kind == "node" and ev.ident < nodes:
+                    sched.mark_down(ev.ident)
+        for s in names:
+            n = sched.begin(s)
+            with pool.sim.phase() as ph:
+                sched.speculated_manifest(s, n)
+                store.restore(s, client_node=n)
+            sched.end(s, n)
+            (lat_post if rnd >= rounds // 2 else lat_pre).append(ph.elapsed)
+            if rnd >= rounds // 2:
+                routed_post.add(n)
+                # a session whose warm node died landing elsewhere is
+                # the failover the claim counts
+                if last_node.get(s) == dead_node and n != dead_node:
+                    failovers += 1
+            last_node[s] = n
+        pool.sim.clock.advance(0.05)         # think time between waves
+    p95_pre, p95_post = (float(np.percentile(ls, 95)) * 1e3
+                         for ls in (lat_pre, lat_post))
+    st = sched.stats()
+    return {"mode": "slo", "sessions": sessions, "nodes": nodes,
+            "rounds": rounds, "dead_node": dead_node,
+            "p95_pre_ms": round(p95_pre, 3),
+            "p95_post_ms": round(p95_post, 3), "slo_ms": slo_ms,
+            "slo_ok": bool(p95_post <= slo_ms),
+            "dead_routed": bool(dead_node in routed_post),
+            "failovers": failovers,
+            "sched_failovers": st["failovers"],
+            "speculations": st["speculations"]}
+
+
+# ---------------------------------------------------------------- conform --
+def conformance(seeds: int, fleet: str) -> dict:
+    """Drive the failure-schedule conformance harness (the same oracle
+    tier-1 runs) across the seed matrix and report coverage."""
+    sys.path.insert(0, str(ROOT / "tests"))
+    from test_coherence_conformance import _FTWorld, FLEETS  # noqa: E402
+    cycles = checked = 0
+    failures: list[str] = []
+    for seed in range(seeds):
+        w = _FTWorld(FLEETS[fleet], seed)
+        try:
+            w.run()
+        except AssertionError as e:
+            failures.append(f"seed {seed}: {e}")
+        cycles += w.fail_cycles
+        checked += w.checked_reads
+    return {"mode": "conform", "fleet": fleet, "seeds": seeds,
+            "fail_cycles": cycles, "checked_reads": checked,
+            "byte_exact": not failures, "failures": failures[:5]}
+
+
+# ----------------------------------------------------------------- claims --
+def check_claims(rows: list[dict]) -> list[dict]:
+    out = []
+    drows = {r["oclass"]: r for r in rows if r["mode"] == "degraded"}
+    if drows:
+        rp = drows.get("RP_2G1")
+        sx = drows.get("SX")
+        ok = (rp is not None and rp["ratio"] >= 0.7
+              and (sx is None or sx["data_loss_raised"]))
+        ec = drows.get("EC_4P1")
+        detail = (f"RP_2G1 {rp['healthy_gib_s']:.2f} -> "
+                  f"{rp['degraded_gib_s']:.2f} GiB/s "
+                  f"({rp['ratio']:.0%})" if rp else "RP_2G1 row missing")
+        if ec:
+            detail += (f"; EC_4P1 reconstructs at {ec['ratio']:.0%}")
+        if sx:
+            detail += (f"; SX raises DataLossError: "
+                       f"{sx['data_loss_raised']}")
+        out.append({"claim": "F1 degraded RP read >= 70% of healthy; "
+                             "unprotected loss is loud",
+                    "ok": bool(ok), "detail": detail})
+    rrows = [r for r in rows if r["mode"] == "rebuild"]
+    if rrows:
+        r = rrows[0]
+        ok = r["fg_retention"] >= 0.8 and r["slowdown"] <= 3.0
+        out.append({"claim": "F2 throttled rebuild keeps >= 80% "
+                             "foreground bw within 3x rebuild time",
+                    "ok": bool(ok),
+                    "detail": f"fg {r['fg_base_gib_s']:.2f} -> "
+                              f"{r['fg_contended_gib_s']:.2f} GiB/s "
+                              f"({r['fg_retention']:.0%}), rebuild "
+                              f"{r['rebuild_floor_s'] * 1e3:.1f} -> "
+                              f"{r['rebuild_throttled_s'] * 1e3:.1f} ms "
+                              f"({r['slowdown']:.1f}x)"})
+    srows = [r for r in rows if r["mode"] == "slo"]
+    if srows:
+        r = srows[0]
+        ok = (r["slo_ok"] and not r["dead_routed"] and r["failovers"] > 0)
+        out.append({"claim": "F3 serving p95 in SLO across mid-sweep "
+                             "failover; zero routes to the dead node",
+                    "ok": bool(ok),
+                    "detail": f"p95 {r['p95_pre_ms']:.2f} -> "
+                              f"{r['p95_post_ms']:.2f} ms (SLO "
+                              f"{r['slo_ms']:.0f} ms), failovers "
+                              f"{r['failovers']}, dead routed: "
+                              f"{r['dead_routed']}"})
+    crows = [r for r in rows if r["mode"] == "conform"]
+    if crows:
+        ok = all(r["byte_exact"] and r["fail_cycles"] > 0 for r in crows)
+        seeds = sum(r["seeds"] for r in crows)
+        cyc = sum(r["fail_cycles"] for r in crows)
+        reads = sum(r["checked_reads"] for r in crows)
+        out.append({"claim": "F4 torn-offload guarantees survive the "
+                             "injected failure schedule, byte-exact",
+                    "ok": bool(ok),
+                    "detail": f"{seeds} seeds, {cyc} failure cycles, "
+                              f"{reads} checked reads, all byte-exact: "
+                              f"{all(r['byte_exact'] for r in crows)}"})
+    return out
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="all",
+                    choices=["degraded", "rebuild", "slo", "conform",
+                             "all"])
+    ap.add_argument("--oclasses", nargs="+",
+                    default=["RP_2G1", "RP_3GX", "EC_4P1", "SX"])
+    ap.add_argument("--degraded-mib", type=int, default=64)
+    ap.add_argument("--rebuild-mib", type=int, default=64)
+    ap.add_argument("--rebuild-rounds", type=int, default=8,
+                    help="budget slices the throttled rebuild is split "
+                         "into (one foreground phase each)")
+    ap.add_argument("--fg-factor", type=int, default=2,
+                    help="foreground bytes per round, in rebuild-budget "
+                         "multiples (higher = gentler throttle)")
+    ap.add_argument("--slo-sessions", type=int, default=24)
+    ap.add_argument("--slo-nodes", type=int, default=8)
+    ap.add_argument("--slo-rounds", type=int, default=6)
+    ap.add_argument("--slo-leaves", type=int, default=8)
+    ap.add_argument("--slo-leaf-kib", type=int, default=64)
+    ap.add_argument("--slo-ms", type=float, default=5.0,
+                    help="p95 restore-latency SLO after the failover")
+    ap.add_argument("--seeds", type=int, default=50,
+                    help="failure-schedule conformance seeds")
+    ap.add_argument("--fleet", default="mixed")
+    ap.add_argument("--out", default=str(ARTIFACTS / "ft_bench.json"))
+    args = ap.parse_args(argv)
+
+    rows: list[dict] = []
+    if args.mode in ("degraded", "all"):
+        print(f"=== degraded reads (one engine down, "
+              f"{args.degraded_mib} MiB object) ===")
+        for oclass in args.oclasses:
+            r = degraded(oclass, args.degraded_mib)
+            rows.append(r)
+            if r["data_loss_raised"]:
+                print(f"{oclass:8s} healthy {r['healthy_gib_s']:7.2f} "
+                      f"GiB/s  degraded: DataLossError (loud loss)")
+            else:
+                print(f"{oclass:8s} healthy {r['healthy_gib_s']:7.2f} "
+                      f"GiB/s  degraded {r['degraded_gib_s']:7.2f} "
+                      f"GiB/s  ({r['ratio']:.0%})")
+    if args.mode in ("rebuild", "all"):
+        print(f"\n=== rebuild vs foreground ({args.rebuild_mib} MiB "
+              f"victim, {args.rebuild_rounds} budget rounds) ===")
+        r = rebuild_contention(args.rebuild_mib, args.rebuild_rounds,
+                               args.fg_factor)
+        rows.append(r)
+        print(f"floor {r['rebuild_floor_s'] * 1e3:8.1f} ms  throttled "
+              f"{r['rebuild_throttled_s'] * 1e3:8.1f} ms "
+              f"({r['slowdown']:.1f}x)  fg {r['fg_base_gib_s']:.2f} -> "
+              f"{r['fg_contended_gib_s']:.2f} GiB/s "
+              f"({r['fg_retention']:.0%} kept)")
+    if args.mode in ("slo", "all"):
+        print(f"\n=== serving failover ({args.slo_sessions} sessions x "
+              f"{args.slo_nodes} nodes, {args.slo_rounds} waves, node "
+              f"dies mid-sweep) ===")
+        r = slo_sweep(args.slo_sessions, args.slo_nodes, args.slo_rounds,
+                      args.slo_leaves, args.slo_leaf_kib, args.slo_ms)
+        rows.append(r)
+        print(f"p95 {r['p95_pre_ms']:7.2f} -> {r['p95_post_ms']:7.2f} ms "
+              f"(SLO {r['slo_ms']:.0f} ms)  failovers {r['failovers']}  "
+              f"dead routed: {r['dead_routed']}")
+    if args.mode in ("conform", "all"):
+        print(f"\n=== failure-schedule conformance ({args.seeds} seeds, "
+              f"fleet {args.fleet}) ===")
+        r = conformance(args.seeds, args.fleet)
+        rows.append(r)
+        print(f"{r['seeds']} seeds  {r['fail_cycles']} failure cycles  "
+              f"{r['checked_reads']} checked reads  byte-exact: "
+              f"{r['byte_exact']}")
+    claims = check_claims(rows)
+    if claims:
+        print("\n=== Failure-tier claims ===")
+        for c in claims:
+            print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
+                  f"({c['detail']})")
+        rows.extend({"mode": "claims", **c} for c in claims)
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(f"\nsaved {len(rows)} rows -> {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -275,6 +275,14 @@ class ClientCache:
                 self._flush_entry(e)
             e.valid = []
             e.dirty = []
+        elif old is None and tx is not None and e.dirty:
+            # non-tx write-back dirty bytes must NOT be adopted by the tx:
+            # once tagged, a later retag-away would flush them at the TX
+            # epoch (invisible until commit) and refill the page at the
+            # committed epoch — leaving a poisoned clean page no commit
+            # notification ever repairs.  Flush them at their natural auto
+            # epoch now, before the entry joins the tx.
+            self._flush_entry(e)
         e.tx = tx
 
     def _tx_bypass(self, e: _ObjEntry, tx, offset: int, nbytes: int) -> bool:
@@ -646,6 +654,40 @@ class ClientCache:
         self._entries.clear()
         self._dentries.clear()
         self._dentry_meta.clear()
+
+    def fence(self, keep_dirty: bool = False) -> set:
+        """Epoch fence after a failure event — the anti-``drop_all``:
+        NOTHING flushes.
+
+        * ``keep_dirty=False`` (dead client node): the node is gone, so its
+          leases, clean pages, dentries AND pending write-back data all die
+          with it.  Returns the still-open transactions that had state
+          staged here so the caller can abort them — a half-staged tx must
+          never become visible (its epoch gets punched by the abort).
+        * ``keep_dirty=True`` (storage-side epoch fence, e.g. an engine
+          restored empty): every lease, version memory and clean page is
+          dropped — remembered tokens may collide with the reset engine's
+          counters, so nothing cached may be served without a re-fetch —
+          but pending write-back extents survive: their owner is alive and
+          will flush them.  Valid ranges collapse to the dirty extents the
+          client owns (serving your own unflushed bytes is always legal).
+        """
+        open_txs = {e.tx for e in self._entries.values()
+                    if e.tx is not None
+                    and getattr(e.tx, "state", None) == "open"}
+        if not keep_dirty:
+            self._entries.clear()
+        else:
+            for name, e in list(self._entries.items()):
+                e.valid = [list(iv) for iv in e.dirty]
+                e.lease.clear()
+                e.pver.clear()
+                e.pstale.clear()
+                if not e.valid and not e.dirty:
+                    self._entries.pop(name, None)
+        self._dentries.clear()
+        self._dentry_meta.clear()
+        return open_txs
 
     # ---------------- introspection ----------------
     def cached_bytes(self) -> int:

@@ -84,8 +84,16 @@ class Container:
             drop = getattr(c, "drop_tx", None)
             if drop is not None:
                 drop(tx)
+        # punch the epoch on EVERY live engine, not just the ones the tx
+        # touched at staging time: a rebuild that ran while the tx was open
+        # replays record history — staged records included — onto a
+        # replacement engine the tx never saw, and an abort must reach
+        # those copies too (epochs are tx-unique, so the wider punch drops
+        # exactly this tx's records)
+        punch_on = set(tx.touched_engines) | (
+            set(self.pool.live_engine_ids()) if tx.touched_engines else set())
         dropped = 0
-        for eid in tx.touched_engines:
+        for eid in punch_on:
             eng = self.pool.engines[eid]
             if eng.alive:
                 dropped += eng.punch_epoch(tx.epoch)
@@ -184,7 +192,17 @@ class Container:
                                     stripe_cell=base.stripe_cell)
 
     def set_override(self, oid: int, dead: int, replacement: int) -> None:
-        self._overrides.setdefault(oid, {})[dead] = replacement
+        over = self._overrides.setdefault(oid, {})
+        # transitive chase: an earlier dead->X override whose X itself just
+        # died must follow the new replacement, or ``layout_for`` (which
+        # maps BASE targets through the table exactly once) would keep
+        # resolving to the dead X after a second failure+rebuild cycle
+        for d, r in list(over.items()):
+            if r == dead:
+                over[d] = replacement
+                self.pool.raft.set(("cont_override", self.label, oid, d),
+                                   replacement)
+        over[dead] = replacement
         self.pool.raft.set(("cont_override", self.label, oid, dead),
                            replacement)
 

@@ -34,6 +34,25 @@ def iod_batch(nops: int) -> int:
     return max(1, nops // IOD_BATCH)
 
 
+#: container_seq used to salt the dkey hash — distinct from any real
+#: container sequence so dkey placement never collides with oid allocation.
+_KV_HASH_SEQ = 17
+
+
+def kv_replica_targets(lay: _layout.StripeLayout,
+                       dkey) -> tuple[int, ...]:
+    """Engines holding one dkey's record under ``lay``.
+
+    The ONE definition of the dkey→replica hash: the dkey hashes onto a
+    stripe chunk and rides its replica set.  Placement
+    (``CellPlanner.kv_replicas``) and rebuild (``Pool._copy_kv_records``)
+    both resolve through here, so the two can't drift — a record re-homed
+    by rebuild lands exactly where a post-rebuild read will look for it.
+    """
+    h = _layout.oid_for(str(dkey), container_seq=_KV_HASH_SEQ)
+    return lay.replicas_for_chunk(h % lay.width)
+
+
 @dataclasses.dataclass(frozen=True)
 class CellSpan:
     """One contiguous piece of a request inside a single stripe cell."""
@@ -136,9 +155,10 @@ class CellPlanner:
         """Engines holding one dkey's record (daos_obj_update fan-out):
         the dkey hashes onto a stripe chunk and rides its replica set —
         the KV analogue of :meth:`replicas`, so batched KV submission can
-        bound its per-engine windows exactly like extent IODs."""
-        h = _layout.oid_for(str(dkey), container_seq=17)
-        return self.lay.replicas_for_chunk(h % self.lay.width)
+        bound its per-engine windows exactly like extent IODs.  Delegates
+        to the shared :func:`kv_replica_targets` — the same helper rebuild
+        uses, so record movement and record lookup can't diverge."""
+        return kv_replica_targets(self.lay, dkey)
 
     def kv_shard(self, dkey) -> int:
         """The shard a single-replica KV op (listing, primary read)

@@ -203,27 +203,59 @@ class ArrayObject(_ObjectBase):
         rec = self._engine(eid).fetch(self._key("arr", cell_no), max_epoch)
         return rec.data if rec.data is not None else b"\0" * rec.length
 
-    def _read_cell(self, lay, cell_no: int, max_epoch: float) -> bytes:
+    def _read_cell(self, lay, cell_no: int, max_epoch: float,
+                   acc: FlowAccumulator | None = None,
+                   take: int | None = None,
+                   recon: list | None = None) -> bytes:
+        """Fetch one cell, walking the degraded path when engines are down.
+
+        With ``acc`` the fetch fan-out that *actually happened* is charged
+        into it — the surviving replica a fallback landed on, or the k-1
+        survivor cells + parity an EC reconstruction pulled — instead of the
+        caller blindly charging the (possibly dead) primary.  ``take`` is
+        the span's byte share on the healthy path; degraded EC fetches are
+        whole-cell regardless.  ``recon`` (a mutable list) collects one
+        entry per EC reconstruction so the caller can charge the client-side
+        XOR pass."""
+        charge = self.stripe_cell if take is None else take
         if self.oclass.ec_data:
             data_eng, parity_eng, group, lane, k = self._cell_engines(lay,
                                                                       cell_no)
             try:
-                return self._fetch_raw(data_eng, cell_no, max_epoch)
+                raw = self._fetch_raw(data_eng, cell_no, max_epoch)
             except EngineFailedError:
-                return self._reconstruct_ec(lay, cell_no, max_epoch)
+                return self._reconstruct_ec(lay, cell_no, max_epoch,
+                                            acc=acc, recon=recon)
+            except NotFoundError:
+                if acc is not None:  # the consult RPC still happened
+                    acc.add(data_eng, charge)
+                raise
+            if acc is not None:
+                acc.add(data_eng, charge)
+            return raw
         last_err: Exception | None = None
         for eid in self._cell_engines(lay, cell_no):
             try:
-                return self._fetch_raw(eid, cell_no, max_epoch)
+                raw = self._fetch_raw(eid, cell_no, max_epoch)
             except EngineFailedError as e:
                 last_err = e  # degraded read: next replica
+                continue
+            except NotFoundError:
+                if acc is not None:
+                    acc.add(eid, charge)
+                raise
+            if acc is not None:
+                acc.add(eid, charge)
+            return raw
         if last_err is not None:
             raise redundancy.DataLossError(
                 f"object {self.name}: cell {cell_no} unrecoverable "
                 f"({self.oclass.name}, all replicas down)") from last_err
         raise NotFoundError((self.oid, cell_no))
 
-    def _reconstruct_ec(self, lay, cell_no: int, max_epoch: float) -> bytes:
+    def _reconstruct_ec(self, lay, cell_no: int, max_epoch: float,
+                        acc: FlowAccumulator | None = None,
+                        recon: list | None = None) -> bytes:
         data_eng, parity_eng, group, lane, k = self._cell_engines(lay, cell_no)
         survivors = []
         lost_len = self.stripe_cell
@@ -233,9 +265,17 @@ class ArrayObject(_ObjectBase):
             cn = group * k + ln
             eng = self._cell_engines(lay, cn)[0]
             try:
-                survivors.append(self._fetch_raw(eng, cn, max_epoch))
+                raw = self._fetch_raw(eng, cn, max_epoch)
             except (NotFoundError, KeyError):
-                pass  # absent cell == zeros, XOR identity
+                continue  # absent cell == zeros, XOR identity
+            except EngineFailedError as e:
+                raise redundancy.DataLossError(
+                    f"object {self.name}: cell {cell_no} unrecoverable "
+                    f"(survivor lane {ln} also down — EC_{k}P1 tolerates "
+                    "one failure)") from e
+            survivors.append(raw)
+            if acc is not None:
+                acc.add(eng, len(raw))
         try:
             parity_rec = self._engine(parity_eng).fetch(
                 self._key("par", group), max_epoch)
@@ -245,30 +285,53 @@ class ArrayObject(_ObjectBase):
                 "unavailable") from e
         parity = (parity_rec.data if parity_rec.data is not None
                   else b"\0" * parity_rec.length)
+        if acc is not None:
+            acc.add(parity_eng, len(parity))
+        if recon is not None:
+            recon.append(cell_no)
         return redundancy.reconstruct(survivors, parity, self.stripe_cell,
                                       lost_len)
 
+    def _charge_reconstruct(self, plan: CellPlanner, n_recon: int,
+                            ctx: IOCtx) -> None:
+        """Client-side XOR pass of an EC reconstruction: the k cell images
+        stream through client memory once per rebuilt cell."""
+        if not n_recon:
+            return
+        self.pool.sim.record_local(
+            client_node=ctx.client_node, process=ctx.process,
+            nbytes=n_recon * plan.data_width() * self.stripe_cell,
+            nops=n_recon)
+
     def read(self, offset: int, size: int, epoch: float | None = None,
              ctx: IOCtx = DEFAULT_CTX) -> np.ndarray:
-        """Read bytes [offset, offset+size) visible at the snapshot epoch."""
+        """Read bytes [offset, offset+size) visible at the snapshot epoch.
+
+        Degraded reads are costed inline: a dead primary's span is charged
+        to the surviving replica that actually served it, and an EC
+        reconstruction charges the k-1 survivor fetches + the parity fetch
+        + a client-local XOR pass.  Unprotected classes raise
+        ``DataLossError`` honestly."""
         if epoch is None:
             epoch = float(self.container.committed_epoch)
         lay = self._layout()
         plan = self._planner(lay)
         acc = FlowAccumulator(self.stripe_cell)
         out = np.zeros(size, np.uint8)
+        recon: list = []
         pos = 0
         for span in plan.spans(offset, size):
             try:
-                raw = self._read_cell(lay, span.cell_no, epoch)
+                raw = self._read_cell(lay, span.cell_no, epoch, acc=acc,
+                                      take=span.take, recon=recon)
                 chunk = np.frombuffer(raw, np.uint8)
                 avail = chunk[span.in_cell: span.end]
                 out[pos: pos + avail.size] = avail
             except (NotFoundError, KeyError):
-                pass  # sparse hole reads as zeros
-            acc.add(plan.primary(span.cell_no), span.take)
+                pass  # sparse hole reads as zeros (consult RPC charged)
             pos += span.take
         self._record_flows(acc.flows(), "read", ctx)
+        self._charge_reconstruct(plan, len(recon), ctx)
         return out
 
     # ---------------- sized (synthetic-payload) I/O ----------------
@@ -302,10 +365,48 @@ class ArrayObject(_ObjectBase):
         lay = self._layout()
         plan = self._planner(lay)
         acc = FlowAccumulator(self.stripe_cell)
+        recon = 0
         for span in plan.spans(offset, nbytes):
-            acc.add(plan.primary(span.cell_no), span.take)
+            recon += self._sized_read_span(plan, span, acc)
         self._record_flows(acc.flows(), "read", ctx)
+        self._charge_reconstruct(plan, recon, ctx)
         return nbytes
+
+    def _sized_read_span(self, plan: CellPlanner, span,
+                         acc: FlowAccumulator) -> int:
+        """Liveness-aware cost of one synthetic read span: the sized twin
+        of ``_read_cell``'s degraded charging.  Returns 1 when the span
+        needed an EC reconstruction (so the caller can charge the client
+        XOR pass), 0 otherwise."""
+        primary = plan.primary(span.cell_no)
+        if self._engine(primary).alive:
+            acc.add(primary, span.take)
+            return 0
+        if self.oclass.ec_data:
+            p = plan.ec_placement(span.cell_no)
+            if not self._engine(p.parity_engine).alive:
+                raise redundancy.DataLossError(
+                    f"object {self.name}: cell {span.cell_no} and its parity "
+                    "are both unavailable")
+            for ln in range(p.k):
+                if ln == p.lane:
+                    continue
+                eid = plan.primary(p.group * p.k + ln)
+                if not self._engine(eid).alive:
+                    raise redundancy.DataLossError(
+                        f"object {self.name}: cell {span.cell_no} "
+                        f"unrecoverable (survivor lane {ln} also down — "
+                        f"EC_{p.k}P1 tolerates one failure)")
+                acc.add(eid, self.stripe_cell)
+            acc.add(p.parity_engine, self.stripe_cell)
+            return 1
+        for eid in plan.replicas(span.cell_no):
+            if self._engine(eid).alive:  # degraded read: next replica
+                acc.add(eid, span.take)
+                return 0
+        raise redundancy.DataLossError(
+            f"object {self.name}: cell {span.cell_no} unrecoverable "
+            f"({self.oclass.name}, all replicas down)")
 
     def punch(self, ctx: IOCtx = DEFAULT_CTX) -> None:
         lay = self._layout()

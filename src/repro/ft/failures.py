@@ -6,6 +6,14 @@ pool and node liveness flags the driver sets.  The elastic policy mirrors
 what the checkpoint layer supports: any new data-parallel degree that keeps
 the per-replica batch integral can restart from the same checkpoint
 (Checkpointer.restore_slice reads whatever ranges the new topology needs).
+
+Event semantics: ``poll`` is level-triggered detection with edge-triggered
+delivery — each engine death, node death (every engine on a server node
+dead), and worker death is emitted exactly once, at the first poll that
+observes it.  Repeated polls at the same step return nothing new, and a
+restored engine/node re-arms its detector so a later re-failure emits a
+fresh event.  The serving control plane consumes this directly:
+``ServeScheduler.mark_down`` on every ``node`` event.
 """
 from __future__ import annotations
 
@@ -24,24 +32,62 @@ class FailureDetector:
         self.pool = pool
         self.worker_alive = [True] * n_workers
         self.events: list[FailureEvent] = []
+        # O(1) dedup of already-detected failures (the old implementation
+        # rescanned the whole event log per engine, O(events^2) per poll)
+        self._seen: set[tuple[str, int]] = set()
+        # worker events not yet delivered by a poll
+        self._pending_workers: list[FailureEvent] = []
 
     def fail_worker(self, worker: int, step: int) -> None:
         self.worker_alive[worker] = False
-        self.events.append(FailureEvent("worker", worker, step))
+        ev = FailureEvent("worker", worker, step)
+        self.events.append(ev)
+        self._pending_workers.append(ev)
+
+    def restore_worker(self, worker: int) -> None:
+        self.worker_alive[worker] = True
+
+    def _node_health(self) -> dict[int, bool]:
+        """server node -> any engine alive."""
+        health: dict[int, bool] = {}
+        for eng in self.pool.engines.values():
+            health[eng.node_id] = health.get(eng.node_id, False) or eng.alive
+        return health
 
     def poll(self, step: int) -> list[FailureEvent]:
-        """Detect newly-dead storage engines + dead workers."""
-        out = []
+        """Detect newly-dead storage engines, newly-dead server nodes
+        (every engine on the node down), and not-yet-delivered worker
+        deaths.  Each failure is emitted exactly once; a restored
+        engine/node re-arms so a later re-failure is a new event."""
+        out: list[FailureEvent] = []
         if self.pool is not None:
             for eid, eng in self.pool.engines.items():
-                if not eng.alive and not any(
-                        e.kind == "engine" and e.ident == eid
-                        for e in self.events):
+                mark = ("engine", eid)
+                if eng.alive:
+                    self._seen.discard(mark)    # re-arm after restore
+                elif mark not in self._seen:
+                    self._seen.add(mark)
                     ev = FailureEvent("engine", eid, step)
                     self.events.append(ev)
                     out.append(ev)
-        out.extend(e for e in self.events
-                   if e.kind == "worker" and e.at_step == step)
+            for nid, any_alive in sorted(self._node_health().items()):
+                mark = ("node", nid)
+                if any_alive:
+                    self._seen.discard(mark)
+                elif mark not in self._seen:
+                    self._seen.add(mark)
+                    ev = FailureEvent("node", nid, step)
+                    self.events.append(ev)
+                    out.append(ev)
+        # deliver each worker death once, at the first poll at/after its
+        # step (the old code re-emitted them on every poll of that step)
+        still_pending: list[FailureEvent] = []
+        for ev in self._pending_workers:
+            if ev.at_step <= step:
+                out.append(ev)
+            else:
+                still_pending.append(ev)
+        self._pending_workers = still_pending
         return out
 
     @property

@@ -160,6 +160,9 @@ class ServeScheduler:
         failures never fail the routing decision."""
         if self.speculate_window <= 0:
             return
+        ns = self._nodes.get(int(node))
+        if ns is None or not ns.alive:
+            return          # never warm a node marked down mid-route
         if self.affinity(session, node) >= 1.0:
             return
         leaf_bytes = int(meta["nbytes"]) // max(1, int(meta["n_leaves"]))

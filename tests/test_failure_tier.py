@@ -1,0 +1,657 @@
+"""The failure & rebuild tier: detector regressions, costed rebuild,
+fenced recovery, and the failure-plane bugfix sweep.
+
+Pinned here:
+
+* **FailureDetector** — edge-triggered delivery: repeated polls never
+  re-emit an engine/worker event, node death (every engine down) is
+  detected, and a restored engine re-arms the detector;
+* **costed rebuild** — the bytes rebuild moves are real simulator flows:
+  standalone rebuild advances the clock, rebuild inside a foreground
+  phase becomes background debt that extends later phases (the
+  contention mechanism claim F2 measures);
+* **fenced recovery** — ``restore_engine`` resets version counters and
+  fences caches; ``fail_node`` / ``fail_client`` drop the dead client's
+  dirty write-back (a crash never flushes) and abort its open
+  transactions, even when rebuild already replayed the staged records
+  onto a replacement the tx never touched;
+* **placement single-sourcing** — the dkey→replica hash has exactly one
+  definition (``iopath.kv_replica_targets``); rebuild and the planner
+  cannot drift;
+* **redundancy / raft edges** — XOR parity padding and byte-exact
+  reconstruction at cell boundaries; metadata writes refuse without a
+  quorum and recover after re-election.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Pool, Topology
+from repro.core.interfaces import DFS, make_interface
+from repro.core import layout as L
+from repro.core import redundancy
+from repro.core.iopath import CellPlanner, kv_replica_targets
+from repro.core.raft import NoQuorumError, RaftGroup
+from repro.core.redundancy import DataLossError
+from repro.ft import FailureDetector
+
+
+# ------------------------------------------------ FailureDetector sweep --
+def _pool(n_servers=4, n_clients=2):
+    return Pool(Topology(n_server_nodes=n_servers, engines_per_node=2,
+                         n_client_nodes=n_clients))
+
+
+def test_detector_does_not_reemit_on_repeated_polls():
+    pool = _pool()
+    det = FailureDetector(pool, n_workers=4)
+    pool.fail_engine(3)
+    det.fail_worker(1, step=2)
+    first = det.poll(5)
+    assert {(e.kind, e.ident) for e in first} == {("engine", 3),
+                                                 ("worker", 1)}
+    # the old detector re-delivered worker events on every poll of the
+    # same step and rescanned the log per engine
+    assert det.poll(5) == []
+    assert det.poll(6) == []
+
+
+def test_detector_pending_worker_delivered_at_its_step():
+    det = FailureDetector(n_workers=4)
+    det.fail_worker(2, step=10)
+    assert det.poll(9) == []            # not yet due
+    got = det.poll(10)
+    assert [(e.kind, e.ident) for e in got] == [("worker", 2)]
+    assert det.poll(11) == []           # delivered exactly once
+
+
+def test_detector_node_liveness_and_rearm():
+    pool = _pool()
+    det = FailureDetector(pool)
+    pool.fail_engine(0)
+    evs = det.poll(1)
+    assert ("node", 0) not in {(e.kind, e.ident) for e in evs}
+    pool.fail_engine(1)                 # both engines of server node 0
+    evs = det.poll(2)
+    assert ("node", 0) in {(e.kind, e.ident) for e in evs}
+    assert det.poll(3) == []            # node event emitted once
+    pool.rebuild()
+    pool.restore_engine(0)
+    pool.restore_engine(1)
+    assert det.poll(4) == []            # restore itself is not an event
+    pool.fail_engine(0)
+    pool.fail_engine(1)
+    evs = det.poll(5)                   # re-armed: a fresh failure re-fires
+    kinds = {(e.kind, e.ident) for e in evs}
+    assert ("node", 0) in kinds and ("engine", 0) in kinds
+
+
+def test_detector_many_events_each_once():
+    pool = _pool(n_servers=8)
+    det = FailureDetector(pool, n_workers=32)
+    for i in range(16):
+        det.fail_worker(i, step=i)
+    for eid in range(8):                   # nodes 0-3 fully down
+        pool.fail_engine(eid)
+    everything = det.poll(100)
+    assert len(everything) == 16 + 8 + 4   # workers + engines + nodes
+    assert det.poll(101) == []
+    assert det.n_alive_workers == 16
+
+
+# ------------------------------------------------ costed rebuild (F2) ----
+def _protected_world(oclass="RP_2G1", nbytes=3 << 20):
+    pool = _pool()
+    cont = pool.create_container("ft", oclass=oclass, stripe_cell=1 << 20)
+    obj = cont.open_array("a", oclass=oclass)
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 255, nbytes, np.uint8).tobytes()
+    obj.write(0, data)
+    return pool, cont, obj, data
+
+
+def test_rebuild_is_costed_standalone():
+    """Zero-cost-rebuild tripwire: a standalone rebuild opens its own
+    foreground phase — moved bytes show up as simulator time."""
+    pool, cont, obj, data = _protected_world()
+    dead = obj._layout().targets[0]
+    pool.fail_engine(dead)
+    t0 = pool.sim.clock.now
+    stats = pool.rebuild()
+    assert stats["moved_cells"] > 0
+    assert stats["moved_bytes"] >= len(data)
+    assert pool.sim.clock.now > t0, "rebuild moved bytes for free"
+    np.testing.assert_array_equal(
+        np.frombuffer(data, np.uint8), obj.read(0, len(data)))
+
+
+def test_rebuild_inside_phase_becomes_background_debt():
+    """The F2 mechanism: stepping a rebuild inside a foreground phase
+    issues its flows as background debt that contends with (and extends)
+    subsequent foreground work."""
+    pool, cont, obj, data = _protected_world()
+    dead = obj._layout().targets[0]
+    pool.fail_engine(dead)
+    rb = pool.rebuilder()
+    issued0 = pool.sim.bg_stats["issued_s"]
+    with pool.sim.phase():
+        obj.read(0, 1 << 20)
+        rb.step(1 << 20)
+    assert pool.sim.bg_stats["issued_s"] > issued0, (
+        "rebuild flows inside a phase must be issued as background debt")
+    while not rb.done:
+        rb.step()
+    assert rb.summary()["moved_cells"] > 0
+
+
+def test_rebuild_step_budget_is_incremental():
+    pool, cont, obj, data = _protected_world()
+    dead = obj._layout().targets[0]
+    pool.fail_engine(dead)
+    rb = pool.rebuilder()
+    first = rb.step(1)        # tiny budget: at least one unit, not all
+    assert 0 < first < len(data)
+    assert not rb.done
+    total = first
+    while not rb.done:
+        total += rb.step(1 << 20)
+    assert total == rb.moved_bytes >= len(data)
+
+
+def test_rebuild_throttle_slows_rebuild():
+    pool, *_ = _protected_world()
+    dead = pool.containers["ft"].open_array("a")._layout().targets[0]
+    pool.fail_engine(dead)
+    t0 = pool.sim.clock.now
+    pool.rebuild()
+    fast = pool.sim.clock.now - t0
+
+    pool2, *_ = _protected_world()
+    pool2.fail_engine(dead)
+    t0 = pool2.sim.clock.now
+    pool2.rebuild(bw_cap=64 << 20)      # 64 MiB/s across streams
+    slow = pool2.sim.clock.now - t0
+    assert slow > fast * 2
+
+
+def test_degraded_read_flows_charge_the_survivor():
+    """Degraded reads are costed: the span lands on the surviving
+    replica's flow, never the dead primary's."""
+    pool, cont, obj, data = _protected_world()
+    lay = obj._layout()
+    dead = lay.targets[0]
+    pool.fail_engine(dead)
+    with pool.sim.phase() as rec:
+        got = obj.read(0, 1 << 20)
+    np.testing.assert_array_equal(got, np.frombuffer(data[:1 << 20],
+                                                     np.uint8))
+    touched = {f.engine for f in rec.flows}
+    assert dead not in touched
+    assert touched & set(lay.replicas_for_chunk(0))
+
+
+def test_ec_degraded_read_charges_survivors_and_parity():
+    pool = Pool(Topology(n_server_nodes=8, engines_per_node=2))
+    cont = pool.create_container("ec", oclass="EC_4P1", stripe_cell=1 << 18)
+    obj = cont.open_array("e")
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 255, 1 << 20, np.uint8).tobytes()
+    obj.write(0, data)
+    lay = obj._layout()
+    dead = obj._cell_engines(lay, 0)[0]
+    pool.fail_engine(dead)
+    with pool.sim.phase() as rec:
+        got = obj.read(0, 1 << 18)
+    np.testing.assert_array_equal(got, np.frombuffer(data[: 1 << 18],
+                                                     np.uint8))
+    touched = {f.engine for f in rec.flows}
+    assert dead not in touched
+    assert len(touched) >= 3            # surviving lanes + parity
+
+
+def test_unprotected_loss_stays_loud_under_costing():
+    pool, cont, obj, _ = _protected_world(oclass="S2")
+    dead = obj._layout().targets[0]
+    pool.fail_engine(dead)
+    with pytest.raises(DataLossError):
+        with pool.sim.phase():
+            obj.read(0, 1 << 20)
+
+
+# ------------------------------------------------ EC rebuild -------------
+def _ec_world(nbytes=2 << 20, stripe_cell=1 << 18, seed=2):
+    pool = Pool(Topology(n_server_nodes=8, engines_per_node=2))
+    cont = pool.create_container("ec", oclass="EC_4P1",
+                                 stripe_cell=stripe_cell)
+    obj = cont.open_array("e")
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 255, nbytes, np.uint8).tobytes()
+    obj.write(0, data)
+    return pool, cont, obj, data
+
+
+def test_ec_data_lane_rebuild_reconstructs():
+    """Losing an EC data lane rebuilds it by XOR from the surviving
+    lanes + parity — byte-exact through the replacement."""
+    pool, cont, obj, data = _ec_world()
+    lay = obj._layout()
+    dead = obj._cell_engines(lay, 0)[0]
+    pool.fail_engine(dead)
+    stats = pool.rebuild()
+    assert stats["moved_cells"] > 0 and stats["lost_objects"] == 0
+    pool.restore_engine(dead)
+    np.testing.assert_array_equal(
+        obj.read(0, len(data)), np.frombuffer(data, np.uint8))
+
+
+def test_ec_parity_rebuild_recomputes():
+    """Losing a parity engine recomputes parity from the live lanes:
+    after rebuild a subsequent DATA failure must still reconstruct."""
+    pool, cont, obj, data = _ec_world()
+    lay = obj._layout()
+    d_eng, p_eng, *_ = obj._cell_engines(lay, 0)
+    pool.fail_engine(p_eng)
+    rb = pool.rebuilder()
+    rb.run()                            # drive via run(), not step()
+    assert rb.done and rb.moved_cells > 0
+    pool.restore_engine(p_eng)
+    # the rebuilt parity must be usable: kill the data lane and read
+    pool.fail_engine(d_eng)
+    np.testing.assert_array_equal(
+        obj.read(0, obj.stripe_cell),
+        np.frombuffer(data[: obj.stripe_cell], np.uint8))
+
+
+def test_ec_rebuild_with_holes():
+    """Sparse EC objects rebuild holes as holes (no fabricated bytes)."""
+    pool, cont, obj, _ = _ec_world(nbytes=1 << 18)
+    sc = obj.stripe_cell
+    tail = b"\x42" * sc
+    obj.write(8 * sc, tail)             # cells 1..7 are holes
+    lay = obj._layout()
+    dead = obj._cell_engines(lay, 8)[0]
+    pool.fail_engine(dead)
+    pool.rebuild()
+    pool.restore_engine(dead)
+    assert bytes(obj.read(8 * sc, sc)) == tail
+    assert bytes(obj.read(3 * sc, sc)) == b"\0" * sc
+
+
+def test_ec_double_failure_is_loud():
+    """EC_kP1 tolerates one failure: a second failure inside the same
+    rebuild window raises instead of fabricating bytes."""
+    pool, cont, obj, data = _ec_world()
+    lay = obj._layout()
+    d_eng, p_eng, *_ = obj._cell_engines(lay, 0)
+    pool.fail_engine(d_eng)
+    pool.fail_engine(p_eng)
+    with pytest.raises(DataLossError):
+        pool.rebuild()
+
+
+def test_rebuild_multipart_fans_big_cells():
+    """Cells past the multipart threshold rebuild as fanned part flows
+    (many flows, capped per stream), not one monolithic transfer."""
+    from repro.core.multipart import MP_THRESHOLD, should_multipart
+    big = 2 * MP_THRESHOLD
+    assert should_multipart(big)
+    pool = _pool()
+    cont = pool.create_container("mp", oclass="RP_2G1", stripe_cell=big)
+    obj = cont.open_array("m", oclass="RP_2G1", stripe_cell=big)
+    rng = np.random.default_rng(9)
+    data = rng.integers(0, 255, big, np.uint8).tobytes()
+    obj.write(0, data)
+    dead = obj._layout().replicas_for_chunk(0)[0]
+    pool.fail_engine(dead)
+    calls = []
+    orig = pool.sim.record
+
+    def spy(**kw):
+        calls.append(kw)
+        return orig(**kw)
+
+    pool.sim.record = spy
+    try:
+        pool.rebuilder().run()
+    finally:
+        del pool.sim.record
+    parts = [c for c in calls if c.get("process", 0) <= -(1 << 16)]
+    assert len(parts) > 4, "big cell did not fan into part flows"
+    assert len({c["process"] for c in parts}) > 1, \
+        "parts all rode one stream"
+    pool.restore_engine(dead)
+    np.testing.assert_array_equal(obj.read(0, big),
+                                  np.frombuffer(data, np.uint8))
+
+
+def test_rebuild_sx_counts_lost_objects():
+    pool, cont, obj, _ = _protected_world(oclass="S2")
+    dead = obj._layout().targets[0]
+    pool.fail_engine(dead)
+    stats = pool.rebuild()
+    assert stats["lost_objects"] >= 1
+    assert stats["moved_cells"] == 0
+
+
+# ------------------------------------------------ fenced recovery --------
+def _cached_world():
+    pool = _pool(n_servers=2, n_clients=2)
+    cont = pool.create_container("c", oclass="RP_2G1")
+    dfs = DFS(cont)
+    dfs.mkdir("/d")
+    iface0 = make_interface("posix-cached:coherence=broadcast", dfs)
+    iface1 = make_interface("posix-cached:coherence=broadcast", dfs)
+    h0 = iface0.create("/d/f", client_node=0, process=0)
+    h1 = iface1.dup(h0, client_node=1, process=1)
+    return pool, cont, h0, h1
+
+
+def test_fail_client_loses_dirty_and_aborts_tx():
+    pool, cont, h0, h1 = _cached_world()
+    h0.write_at(0, b"\x07" * 4096)
+    h0.fsync()
+    h0.write_at(0, b"\x09" * 4096)     # dirty write-back, never flushed
+    tx = cont.tx_begin()
+    aborted = pool.fail_client(0)
+    assert tx.state == "open" or tx in aborted  # tx had no cached writes
+    # the crashed client's dirty bytes are gone: readers see the
+    # last-flushed state, not the torn write-back
+    assert bytes(h1.read_at(0, 4096)) == b"\x07" * 4096
+
+
+def test_fail_client_aborts_cached_tx_writes():
+    pool, cont, h0, h1 = _cached_world()
+    h0.write_at(0, b"\x05" * 4096)
+    h0.fsync()
+    tx = cont.tx_begin()
+    # stage tx bytes through the dead client's cache, then crash it
+    txh = h0.iface.dup(h0, client_node=0, process=0, tx=tx)
+    txh.write_at(0, b"\x0b" * 4096)
+    aborted = pool.fail_client(0)
+    assert tx.state == "aborted" and tx in aborted
+    assert bytes(h1.read_at(0, 4096)) == b"\x05" * 4096
+
+
+def test_fail_node_fences_coresident_client():
+    pool, cont, h0, h1 = _cached_world()
+    h0.write_at(0, b"\x03" * 4096)
+    h0.fsync()
+    h0.write_at(0, b"\x04" * 4096)     # dirty on client node 0
+    failed = pool.fail_node(0)         # server node 0 AND client node 0
+    assert len(failed) == 2
+    pool.rebuild()
+    # dirty write-back died with the node; flushed state survives via
+    # the surviving replica
+    assert bytes(h1.read_at(0, 4096)) == b"\x03" * 4096
+
+
+def test_fail_node_without_caches_still_works():
+    pool = _pool()
+    assert sorted(pool.fail_node(0)) == [0, 1]
+    assert pool.live_engine_ids() == [2, 3, 4, 5, 6, 7]
+
+
+def test_abort_reaches_records_rebuild_replayed():
+    """A tx opened before a failure, whose staged records rebuild
+    replayed onto a replacement engine, must still abort cleanly: the
+    epoch punch reaches every live engine, not just the ones the tx
+    touched at staging time."""
+    pool, cont, obj, data = _protected_world()
+    tx = cont.tx_begin()
+    staged = b"\xee" * (1 << 20)
+    tx.write_array(obj, 0, staged)
+    dead = obj._layout().targets[0]
+    pool.fail_engine(dead)
+    pool.rebuild()                      # replays the staged epoch too
+    pool.restore_engine(dead)
+    tx.abort()
+    got = obj.read(0, 1 << 20)
+    np.testing.assert_array_equal(got, np.frombuffer(data[: 1 << 20],
+                                                     np.uint8))
+
+
+def test_commit_after_rebuild_is_readable():
+    """The flip side: rebuild replays staged (invisible) records so a
+    commit AFTER rebuild is complete on the replacement."""
+    pool, cont, obj, data = _protected_world()
+    tx = cont.tx_begin()
+    staged = b"\xcd" * (1 << 20)
+    tx.write_array(obj, 0, staged)
+    dead = obj._layout().targets[0]
+    pool.fail_engine(dead)
+    pool.rebuild()
+    pool.restore_engine(dead)
+    tx.commit()
+    # both live replicas (incl. the replacement) must serve the bytes
+    assert bytes(obj.read(0, 1 << 20)) == staged
+
+
+def test_restore_engine_clears_version_tokens():
+    """Satellite pin: a restored-empty engine must not resurrect its old
+    version counters — a preserved counter can re-create a token sum a
+    client remembered, silently revalidating pages whose data moved."""
+    pool, cont, obj, _ = _protected_world()
+    dead = obj._layout().targets[0]
+    eng = pool.engines[dead]
+    assert eng._obj_tokens, "write should have bumped tokens"
+    pool.fail_engine(dead)
+    pool.rebuild()
+    pool.restore_engine(dead)
+    assert not eng._obj_tokens and not eng._sub_tokens
+    assert not eng._store and eng.used == 0
+
+
+def test_restore_engine_fences_attached_caches():
+    pool, cont, h0, h1 = _cached_world()
+    h0.write_at(0, b"\x06" * 4096)
+    h0.fsync()
+    h1.read_at(0, 4096)                 # fill node 1's cache
+    caches = cont._caches
+    assert caches
+    dirty_h0 = h0.write_at(4096, b"\x08" * 1024)   # pending write-back
+    pool.restore_engine(0)
+    for c in caches:
+        e = c._entries.get(h0.obj.name)
+        if e is None:
+            continue
+        # clean pages dropped, dirty write-back retained
+        assert e.valid == [list(iv) for iv in e.dirty]
+    h0.fsync()                          # the surviving dirty bytes flush
+    assert bytes(h1.read_at(4096, 1024)) == b"\x08" * 1024
+
+
+def test_chained_override_survives_second_failure():
+    """An earlier dead→X override whose X itself dies must chase the new
+    replacement transitively, or reads resolve to the dead X forever."""
+    pool, cont, obj, data = _protected_world()
+    first = obj._layout().targets[0]
+    pool.fail_engine(first)
+    pool.rebuild()
+    pool.restore_engine(first)
+    second = next(t for t in obj._layout().targets
+                  if t != first and t in pool.live_engine_ids())
+    pool.fail_engine(second)
+    pool.rebuild()
+    pool.restore_engine(second)
+    lay = obj._layout()
+    assert all(t in pool.live_engine_ids() for t in lay.targets)
+    np.testing.assert_array_equal(
+        obj.read(0, len(data)), np.frombuffer(data, np.uint8))
+
+
+# ------------------------------------------------ placement drift --------
+def test_kv_hash_single_sourced():
+    """Drift tripwire: the planner and rebuild both resolve the
+    dkey→replica hash through iopath.kv_replica_targets — and pool.py no
+    longer carries its own copy of the hash."""
+    import inspect
+    from repro.core import pool as pool_mod
+    src = inspect.getsource(pool_mod)
+    assert "container_seq=17" not in src, (
+        "pool.py re-implements the dkey hash; use kv_replica_targets")
+    pool = _pool()
+    cont = pool.create_container("k", oclass="RP_2GX")
+    kv = cont.open_kv("kv")
+    lay = kv._layout()
+    planner = CellPlanner(lay, kv.oclass, kv.stripe_cell)
+    for dkey in ("a", "dir-entry", "manifest-0007", 42):
+        assert planner.kv_replicas(dkey) == kv_replica_targets(lay, dkey)
+
+
+def test_kv_rebuild_lands_where_reads_look():
+    pool = _pool()
+    cont = pool.create_container("k", oclass="RP_2GX")
+    kv = cont.open_kv("kv")
+    for i in range(32):
+        kv.put(f"d{i}", "a", b"%04d" % i)
+    dead = kv._layout().targets[0]
+    pool.fail_engine(dead)
+    stats = pool.rebuild()
+    pool.restore_engine(dead)
+    assert stats["moved_cells"] > 0
+    for i in range(32):
+        assert bytes(kv.get(f"d{i}", "a")) == b"%04d" % i
+
+
+# ------------------------------------------------ redundancy edges -------
+def test_xor_parity_pads_short_final_cell():
+    cells = [b"\x01" * 100, b"\x02" * 64]
+    par = redundancy.xor_parity(cells, 128)
+    assert len(par) == 128
+    assert par[:64] == b"\x03" * 64          # both cells overlap
+    assert par[64:100] == b"\x01" * 36       # only the long cell
+    assert par[100:] == b"\x00" * 28         # padding XOR padding
+
+
+def test_xor_parity_oversize_cell_raises():
+    with pytest.raises(ValueError):
+        redundancy.xor_parity([b"\x01" * 129], 128)
+
+
+@pytest.mark.parametrize("lost_len", [1, 63, 64, 128])
+def test_reconstruct_byte_exact_at_boundaries(lost_len):
+    rng = np.random.default_rng(7)
+    k = 4
+    cells = [rng.integers(0, 255, 128, np.uint8).tobytes()
+             for _ in range(k - 1)]
+    lost = rng.integers(0, 255, lost_len, np.uint8).tobytes()
+    par = redundancy.xor_parity(cells + [lost], 128)
+    back = redundancy.reconstruct(cells, par, 128, lost_len)
+    assert back == lost
+
+
+def test_reconstruct_with_short_parity():
+    cells = [b"\x0f" * 128]
+    lost = b"\xf0" * 128
+    par = redundancy.xor_parity(cells + [lost], 128)
+    # a truncated parity buffer is zero-extended, like a short record
+    back = redundancy.reconstruct(cells, par[:128], 128, 128)
+    assert back == lost
+
+
+# ------------------------------------------------ raft no-quorum ---------
+def test_raft_set_refuses_without_quorum():
+    g = RaftGroup(3)
+    g.set("a", 1)
+    g.fail_node(1)
+    g.set("b", 2)                       # 2/3 still a quorum
+    g.fail_node(2)
+    with pytest.raises(NoQuorumError):
+        g.set("c", 3)
+    # the rejected entry must not linger in the leader's log
+    assert g.get("c") is None
+    g.restore_node(1)
+    g.set("c", 3)                       # quorum back: accepted
+    assert g.get("c") == 3 and g.get("b") == 2
+
+
+def test_raft_no_leader_without_quorum():
+    g = RaftGroup(3)
+    g.set("a", 1)
+    for n in (0, 1):
+        g.fail_node(n)
+    with pytest.raises(NoQuorumError):
+        g.leader()
+    g.restore_node(0)
+    assert g.get("a") == 1              # re-elected among the majority
+
+
+def test_raft_all_dead_raises():
+    g = RaftGroup(3)
+    for n in range(3):
+        g.fail_node(n)
+    with pytest.raises(NoQuorumError):
+        g.elect()
+
+
+def test_raft_leader_loss_preserves_committed_state():
+    g = RaftGroup(5)
+    for i in range(10):
+        g.set(f"k{i}", i)
+    g.fail_node(g.leader_id)
+    for i in range(10):
+        assert g.get(f"k{i}") == i
+    assert g.elections >= 1
+
+
+# ------------------------------------------------ serving failover -------
+def test_speculation_never_warms_a_dead_node():
+    """The speculative restore prefetch must honor liveness: a routing
+    decision that lands on a node marked down mid-route (detector raced
+    the router) must not issue prefetch flows to it."""
+    from repro.serve import KVCacheStore, ServeScheduler
+    pool = _pool()
+    cont = pool.create_container("sv", oclass="RP_2G1")
+    dfs = DFS(cont)
+    dfs.mkdir("/kv")
+    store = KVCacheStore(dfs, interface="posix-cached",
+                         verify_on_restore=False)
+    sched = ServeScheduler(store, nodes=range(4), speculate_window=1 << 10)
+    rng = np.random.default_rng(5)
+    cache = {"l0": rng.integers(0, 255, (4 << 10,), np.uint8)}
+    sched.offload("s", cache)
+    n = sched.begin("s")
+    sched.end("s", n)
+    sched.speculated_manifest("s", n)   # drain pre-failure speculation
+    spec0 = sched.stats()["speculations"]
+    sched.mark_down(n)
+    # the session's affinity still points at n, but n is down: route
+    # fails over AND the prefetch for the original pick is suppressed
+    n2 = sched.route("s")
+    assert n2 != n
+    assert sched.speculated_manifest("s", n) is None
+    # speculation may fire for the failover node, never the dead one
+    if sched.stats()["speculations"] > spec0:
+        assert sched.speculated_manifest("s", n2) is not None
+
+
+# ------------------------------------------------ elastic restore --------
+def test_elastic_restore_after_node_failure():
+    """Tentpole: a checkpoint whose writers' node died restores through
+    ``place_reader`` onto the survivors after rebuild — a different host
+    count, byte-exact."""
+    from repro.ckpt import Checkpointer
+    pool = Pool(Topology(n_server_nodes=4, engines_per_node=2,
+                         n_client_nodes=4))
+    cont = pool.create_container("ck", oclass="RP_2G1")
+    dfs = DFS(cont)
+    ck = Checkpointer(dfs, layout="sharded", n_writers=4, base="/ck")
+    rng = np.random.default_rng(3)
+    tree = {"w": rng.normal(size=(256, 64)).astype(np.float32)}
+    ck.save(1, tree)
+
+    pool.fail_node(0)                   # kills engines 0,1 + client 0
+    pool.rebuild()
+    man = ck.load_manifest(1)
+    entry = man["leaves"]["/w"]
+    nbytes = int(entry["nbytes"])
+    # a survivor-only reader fleet re-shards onto 2 hosts
+    lo, hi = 0, nbytes // 2
+    placed = list(ck.place_reader(entry, lo, hi,
+                                  n_writers=man.get("n_writers")))
+    assert placed, "place_reader yielded nothing"
+    back = ck.restore_slice(1, "/w", lo, hi, man=man)
+    flat = tree["w"].reshape(-1).view(np.uint8)
+    np.testing.assert_array_equal(back, flat[lo:hi])
+    # and a full restore on the degraded pool is still byte-exact
+    full = ck.restore(1, tree)
+    np.testing.assert_array_equal(full["w"], tree["w"])
