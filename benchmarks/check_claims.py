@@ -10,6 +10,20 @@ after each bench-smoke step (replacing the per-step inline heredocs):
 It fails (exit 1) when an artifact has no claim rows at all, when a
 required claim prefix was never emitted (a driver silently dropping a
 claim must not pass), or when any emitted claim is not ``ok``.
+
+The claim *manifest* (``artifacts/claims.json``) is the committed source
+of truth for which artifact owes which claims:
+
+    python benchmarks/check_claims.py --manifest artifacts/claims.json
+
+checks completeness both ways — every manifest-listed artifact exists
+and emits every required prefix, every emitted claim is covered by some
+manifest prefix (a new claim must be registered, not snuck in), and
+every ``artifacts/*.json`` on disk is either manifest-listed or
+explicitly exempt (and an exempt artifact must really be claimless).
+Naming one artifact alongside ``--manifest`` scopes the check to it
+(its required prefixes still come from the manifest — the per-step CI
+gates share the same source of truth as the full gate).
 """
 from __future__ import annotations
 
@@ -19,8 +33,13 @@ import pathlib
 import sys
 
 
-def check_file(path: str, require: list[str]) -> list[str]:
-    """-> list of failure messages for one artifact (empty = pass)."""
+def check_file(path: str, require: list[str],
+               strict: bool = False) -> list[str]:
+    """-> list of failure messages for one artifact (empty = pass).
+
+    ``strict`` additionally requires every emitted claim to match one of
+    the ``require`` prefixes (manifest completeness: unregistered claims
+    are an error, not a pass-through)."""
     p = pathlib.Path(path)
     if not p.exists():
         return [f"{path}: artifact missing (bench did not run?)"]
@@ -39,41 +58,132 @@ def check_file(path: str, require: list[str]) -> list[str]:
     for c in claims:
         badge = "PASS" if c.get("ok") else "FAIL"
         print(f"  [{badge}] {c.get('claim', '?')}")
+        if strict and not any(c.get("claim", "").startswith(prefix)
+                              for prefix in require):
+            errors.append(f"{path}: claim {c.get('claim', '?')!r} is not "
+                          "registered in the manifest")
     bad = [c.get("claim", "?") for c in claims if not c.get("ok")]
     if bad:
         errors.append(f"{path}: failed claims: {bad}")
     return errors
 
 
+def _claimless(path: str) -> list[str]:
+    """An exempt artifact must really carry no claim rows."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return []
+    try:
+        rows = json.loads(p.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path}: unreadable JSON ({e})"]
+    claims = [r for r in rows if isinstance(r, dict)
+              and r.get("mode") == "claims"]
+    if claims:
+        return [f"{path}: exempt artifact emits claim rows "
+                f"({[c.get('claim', '?') for c in claims]}) — register "
+                "it in the manifest's require table instead"]
+    return []
+
+
+def check_manifest(manifest_path: str,
+                   only: list[str]) -> list[str]:
+    """The manifest gate.  With ``only`` non-empty, scope to those
+    artifacts (their prefixes still come from the manifest); otherwise
+    validate every listed artifact plus both completeness directions."""
+    mp = pathlib.Path(manifest_path)
+    try:
+        manifest = json.loads(mp.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{manifest_path}: unreadable manifest ({e})"]
+    require: dict = manifest.get("require", {})
+    exempt = set(manifest.get("exempt", []))
+    root = mp.resolve().parents[1]      # artifacts/claims.json -> repo root
+
+    def rel(p: pathlib.Path) -> str:
+        try:
+            return p.resolve().relative_to(root).as_posix()
+        except ValueError:
+            return p.as_posix()
+
+    errors: list[str] = []
+    if only:
+        for path in only:
+            key = rel(pathlib.Path(path))
+            if key in exempt:
+                errors.extend(_claimless(path))
+            elif key in require:
+                print(f"{path}:")
+                errors.extend(check_file(path, require[key], strict=True))
+            else:
+                errors.append(f"{path}: not in the manifest — register "
+                              f"its claims in {manifest_path} (or list "
+                              "it as exempt)")
+        return errors
+    for key in sorted(require):
+        print(f"{key}:")
+        errors.extend(check_file(str(root / key), require[key],
+                                 strict=True))
+    for key in sorted(exempt):
+        errors.extend(_claimless(str(root / key)))
+    # every artifact on disk is accounted for: listed or exempt
+    for p in sorted(mp.resolve().parent.glob("*.json")):
+        key = rel(p)
+        if p.resolve() == mp.resolve():
+            continue
+        if key not in require and key not in exempt:
+            errors.append(f"{key}: artifact on disk but not in the "
+                          f"manifest — register it in {manifest_path} "
+                          "(or list it as exempt)")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("artifacts", nargs="+",
+    ap.add_argument("artifacts", nargs="*",
                     help="bench artifact JSON file(s) with claim rows")
     ap.add_argument("--require", nargs="*", default=[], metavar="PREFIX",
                     help="claim-name prefixes that must be present "
                          "(matched against the union of all artifacts)")
+    ap.add_argument("--manifest", metavar="JSON",
+                    help="claim manifest (artifact -> required claim "
+                         "prefixes); replaces --require as the source "
+                         "of truth and adds the completeness checks")
     args = ap.parse_args(argv)
 
     errors: list[str] = []
-    per_file_require = args.require if len(args.artifacts) == 1 else []
-    for path in args.artifacts:
-        print(f"{path}:")
-        errors.extend(check_file(path, per_file_require))
-    if len(args.artifacts) > 1 and args.require:
-        all_claims: list[str] = []
+    if args.manifest:
+        if args.require:
+            print("--require and --manifest are mutually exclusive: the "
+                  "manifest is the one source of truth", file=sys.stderr)
+            return 2
+        errors = check_manifest(args.manifest, args.artifacts)
+    else:
+        if not args.artifacts:
+            print("no artifacts given (and no --manifest)",
+                  file=sys.stderr)
+            return 2
+        per_file_require = args.require if len(args.artifacts) == 1 else []
         for path in args.artifacts:
-            p = pathlib.Path(path)
-            if p.exists():
-                try:
-                    all_claims.extend(
-                        r.get("claim", "") for r in json.loads(p.read_text())
-                        if isinstance(r, dict) and r.get("mode") == "claims")
-                except json.JSONDecodeError:
-                    pass
-        for prefix in args.require:
-            if not any(c.startswith(prefix) for c in all_claims):
-                errors.append(f"required claim {prefix!r} not emitted by "
-                              "any artifact")
+            print(f"{path}:")
+            errors.extend(check_file(path, per_file_require))
+        if len(args.artifacts) > 1 and args.require:
+            all_claims: list[str] = []
+            for path in args.artifacts:
+                p = pathlib.Path(path)
+                if p.exists():
+                    try:
+                        all_claims.extend(
+                            r.get("claim", "")
+                            for r in json.loads(p.read_text())
+                            if isinstance(r, dict)
+                            and r.get("mode") == "claims")
+                    except json.JSONDecodeError:
+                        pass
+            for prefix in args.require:
+                if not any(c.startswith(prefix) for c in all_claims):
+                    errors.append(f"required claim {prefix!r} not emitted "
+                                  "by any artifact")
     if errors:
         print("\nclaim gate FAILED:", file=sys.stderr)
         for e in errors:

@@ -9,9 +9,10 @@ into EXPERIMENTS.md: the §Roofline tables (dry-run artifacts, at the
 restore study (elastic-mode rows of the same file, <!-- ELASTIC
 TABLES -->), the metadata-caching study (artifacts/mdtest.json,
 <!-- MDTEST CACHE TABLES -->), the multi-client coherence study
-(artifacts/coherence_bench.json, <!-- COHERENCE TABLES -->) and the
+(artifacts/coherence_bench.json, <!-- COHERENCE TABLES -->), the
 serving-tier study (artifacts/serve_bench.json, <!-- SERVE
-TABLES -->)."""
+TABLES -->) and the hot/cold tiering study (artifacts/tier_bench.json,
+<!-- TIER TABLES -->)."""
 from __future__ import annotations
 
 import json
@@ -32,6 +33,7 @@ COH_MARK = "<!-- COHERENCE TABLES -->"
 SERVE_MARK = "<!-- SERVE TABLES -->"
 QD_MARK = "<!-- QD TABLES -->"
 FT_MARK = "<!-- FT TABLES -->"
+TIER_MARK = "<!-- TIER TABLES -->"
 
 SKELETON = f"""# EXPERIMENTS
 
@@ -70,6 +72,10 @@ SKELETON = f"""# EXPERIMENTS
 ## §Failure
 
 {FT_MARK}
+
+## §Tiering
+
+{TIER_MARK}
 
 ## §Roofline
 
@@ -502,6 +508,78 @@ def ft_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def tier_table(rows: list[dict]) -> str:
+    """The hot/cold tiering study: the all-hot vs quota-bounded tiered
+    serve trace, the demote-vs-delete elastic reach-back study, the
+    demote->promote round-trip conformance grid, plus the T claims."""
+    out = []
+    srows = [r for r in rows if r.get("mode") == "serve"]
+    if srows:
+        r0 = srows[0]
+        out += [f"### Skewed serve trace, all-hot vs tiered "
+                f"({r0['sessions']} sessions x {r0['n_leaves']} x "
+                f"{r0['leaf_kib']} KiB leaves, {r0['rounds']} rounds x "
+                f"{r0['wave']} returns, p_hot={r0['p_hot']})", "",
+                "| variant | serve GiB/s | restore ms (mean) | "
+                "admission ms (total) | max hot MiB | footprint | "
+                "demotions | promotions |",
+                "|---|---|---|---|---|---|---|---|"]
+        for r in srows:
+            out.append(f"| {r['variant']} | {r['serve_gib_s']:.2f} | "
+                       f"{r['restore_ms_mean']:.2f} | "
+                       f"{r['admit_ms_total']:.1f} | "
+                       f"{r['max_hot_mib']:.0f} | "
+                       f"{r['footprint_frac']:.0%} | {r['demotions']} | "
+                       f"{r['promotions']} |")
+        out.append("")
+    erows = [r for r in rows if r.get("mode") == "elastic"]
+    if erows:
+        r0 = erows[0]
+        reaches = sorted({p["reachback"] for r in erows
+                          for p in r["points"]})
+        out += [f"### Elastic reach-back: keep_n demotion vs delete "
+                f"({r0['steps']} steps, keep_n={r0['keep_n']}, "
+                f"{r0['ckpt_mib']:.0f} MiB/step, recompute "
+                f"{r0['step_time_s']} s/step)", "",
+                "| policy | metric | "
+                + " | ".join(f"r={x}" for x in reaches) + " |",
+                "|---|---|" + "---|" * len(reaches)]
+        for r in erows:
+            by_reach = {p["reachback"]: p for p in r["points"]}
+
+            def cell(x, fmt):
+                p = by_reach.get(x)
+                return fmt(p) if p else "-"
+
+            out.append(f"| {r['policy']} | cost (ms) | " + " | ".join(
+                cell(x, lambda p: f"{p['cost_s'] * 1e3:.1f}")
+                for x in reaches) + " |")
+            out.append(f"| {r['policy']} | tier | " + " | ".join(
+                cell(x, lambda p: p["tier"]) for x in reaches) + " |")
+        out.append("")
+    rrows = [r for r in rows if r.get("mode") == "roundtrip"]
+    if rrows:
+        out += [f"### Demote -> promote round trips "
+                f"({rrows[0]['mib']:.2f} MiB/step; torn demotions "
+                "injected mid-copy)", "",
+                "| family | layout | files | demote ms | "
+                "promote+restore ms | identical | torn survives | "
+                "retry converges |",
+                "|---|---|---|---|---|---|---|---|"]
+        for r in sorted(rrows, key=lambda r: (r["family"], r["layout"])):
+            out.append(
+                f"| {r['family']} | {r['layout']} | {r['files']} | "
+                f"{r['demote_ms']:.1f} | {r['promote_restore_ms']:.1f} | "
+                f"{'yes' if r['identical'] else 'NO'} | "
+                f"{'yes' if r['torn_restorable'] else 'NO'} | "
+                f"{'yes' if r['retry_converges'] else 'NO'} |")
+        out.append("")
+    if not out:
+        return ""
+    out.extend(_claims_lines(rows, prefixes=("T",)))
+    return "\n".join(out)
+
+
 def qd_table(rows: list[dict]) -> str:
     """The async-data-path study: queue-depth sweep, multipart restore
     vs single stream, async readahead under think time, plus the Q
@@ -768,13 +846,22 @@ def main() -> None:
                                         "conform"))
         if body:
             text = _splice(text, FT_MARK, body)
+    n_tier = 0
+    tier_json = ROOT / "artifacts" / "tier_bench.json"
+    if tier_json.exists():
+        rows = json.loads(tier_json.read_text())
+        body = tier_table(rows)
+        n_tier = sum(1 for r in rows
+                     if r.get("mode") in ("serve", "elastic", "roundtrip"))
+        if body:
+            text = _splice(text, TIER_MARK, body)
     exp.write_text(text)
     print(f"spliced tables: roofline base={len(base)} opt={len(opt)} "
           f"mp={len(base_mp)}+{len(opt_mp)}; ior cached rows={n_cached}; "
           f"ior sweep rows={n_sweep}; ckpt cached rows={n_ckpt}; "
           f"elastic rows={n_elastic}; mdtest rows={n_md}; "
           f"coherence rows={n_coh}; serve rows={n_serve}; qd rows={n_qd}; "
-          f"ft rows={n_ft}")
+          f"ft rows={n_ft}; tier rows={n_tier}")
 
 
 if __name__ == "__main__":

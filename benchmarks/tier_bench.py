@@ -1,0 +1,468 @@
+"""Tiered-store benchmark: hot DAOS tier + cold object store behind one
+``tiered://`` mount, exercised end-to-end through the serving and
+checkpoint planes.
+
+Three studies, one per claim:
+
+* ``--mode serve``     — a serving fleet restores a skewed return trace
+                         through a quota-bounded ``ServeScheduler`` whose
+                         LRU victims *demote* to the cold tier instead of
+                         being destroyed.  Compared against the all-hot
+                         baseline (same trace, no quota) (claim T1).
+* ``--mode elastic``   — a training run saves every step under
+                         ``keep_n``; the demote policy spills expired
+                         steps cold while the delete policy reclaims
+                         them.  An elastic restart then reaches back past
+                         the hot window (claim T2).
+* ``--mode roundtrip`` — demote -> promote round trips on every
+                         checkpoint layout (sharded/shared x namespaced
+                         dfs / namespace-less daos-array), plus the torn-
+                         demotion fault: the injected crash before the
+                         manifest flip must leave the hot copy the intact
+                         source of truth (claim T3).
+* ``--mode all``       — everything.
+
+Claims validated:
+
+* **T1** — the tiered store serves >= 70% of the all-hot baseline's
+  restore bandwidth over the skewed trace while its hot footprint never
+  exceeds 25% of the baseline's (cold promotions are admission work,
+  costed in their own phase and reported).
+* **T2** — keep_n *demotion* beats *delete* for elastic restarts
+  reaching back >= 2 steps: a demoted checkpoint promotes + restores
+  byte-identically in far less time than the delete policy needs to
+  recompute the lost step from scratch.
+* **T3** — demote -> promote is byte-identical on every layout,
+  including namespace-less mounts, and a demotion torn before the
+  manifest flip never strands the only copy: the step stays hot-tier
+  restorable and a retry converges.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import Pool, Topology, bandwidth        # noqa: E402
+from repro.core.interfaces import DFS, make_interface   # noqa: E402
+from repro.core.interfaces.cold import ColdStore        # noqa: E402
+from repro.ckpt import Checkpointer, CheckpointManager  # noqa: E402
+from repro.serve import KVCacheStore, ServeScheduler    # noqa: E402
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+MIB = 1 << 20
+
+#: The serving mount under test: hot DFS tier, cold object tier, LRU
+#: demotion policy — the full scheme grammar in one string.
+TIERED_MOUNT = "tiered://hot=dfs,cold=cold,policy=lru"
+
+
+def make_world(clients: int, oclass: str = "SX"):
+    topo = Topology(n_server_nodes=8, engines_per_node=2,
+                    n_client_nodes=clients, procs_per_client_node=1)
+    # materialized engines: demoted bytes really round-trip through the
+    # cold store, so every byte-identity check below is meaningful
+    pool = Pool(topo, materialize=True)
+    cont = pool.create_container("tier", oclass=oclass)
+    dfs = DFS(cont, dir_oclass="S1")
+    return pool, dfs
+
+
+def synth_cache(n_leaves: int, leaf_kib: int, step: int = 0) -> dict:
+    rng = np.random.default_rng(step)
+    return {f"layer{i:03d}": rng.integers(0, 255, (leaf_kib << 10,),
+                                          dtype=np.uint8)
+            for i in range(n_leaves)}
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.asarray(v).nbytes for v in tree.values())
+
+
+def _check_tree(want: dict, got: dict) -> None:
+    for k, v in want.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v)
+
+
+# ---------------------------------------------------------------- serve --
+def skewed_trace(rng, rounds: int, wave: int, hot_ids: list[str],
+                 cold_ids: list[str], p_hot: float) -> list[list[str]]:
+    """The return trace: each round is one batched wave of ``wave``
+    returning sessions, ``p_hot`` of them drawn from the working set."""
+    out = []
+    for _ in range(rounds):
+        picks = []
+        for _ in range(wave):
+            if rng.random() < p_hot or not cold_ids:
+                picks.append(hot_ids[int(rng.integers(len(hot_ids)))])
+            else:
+                picks.append(cold_ids[int(rng.integers(len(cold_ids)))])
+        out.append(picks)
+    return out
+
+
+def serve_run(variant: str, sessions: int, hot_set: int, n_leaves: int,
+              leaf_kib: int, nodes: int, rounds: int, wave: int,
+              p_hot: float, hot_frac: float, decode_s: float,
+              seed: int = 0) -> dict:
+    """One side of the T1 comparison.  ``variant="hot"`` publishes every
+    session into an unbounded all-hot store; ``variant="tiered"`` runs
+    the same trace through a ``tiered://`` mount with the scheduler quota
+    capped at ``hot_frac`` of the published footprint, so LRU pressure
+    demotes the tail cold at publish time and returning cold sessions
+    promote back during admission.  Each request runs two phases —
+    admission (``begin``: routing plus any promotion, which may demote a
+    colder victim in turn) and the serve itself (the restore) —
+    mirroring how SV5 costs evictions separately: the serve bandwidth is
+    the restores', the tiering work is reported on its own clock."""
+    pool, dfs = make_world(1 + nodes)
+    iface = make_interface(
+        TIERED_MOUNT if variant == "tiered" else "dfs", dfs)
+    store = KVCacheStore(dfs, interface=iface, n_writers=1)
+    sess_bytes = n_leaves * (leaf_kib << 10)
+    total = sessions * sess_bytes
+    quota = int(hot_frac * total) if variant == "tiered" else None
+    sched = ServeScheduler(store, nodes=list(range(1, 1 + nodes)),
+                           quota_bytes=quota)
+    ids = [f"s{i:03d}" for i in range(sessions)]
+    with pool.sim.phase():              # publish the population (setup)
+        for i, s in enumerate(ids):
+            sched.offload(s, synth_cache(n_leaves, leaf_kib, step=i),
+                          step=0)
+    # the working set is the warmest tail of the publish order — on the
+    # tiered side these are exactly the sessions still under the quota
+    hot_ids, cold_ids = ids[-hot_set:], ids[:-hot_set]
+    rng = np.random.default_rng(seed)   # same seed -> same trace per side
+    trace = skewed_trace(rng, rounds, wave, hot_ids, cold_ids, p_hot)
+    t_admit = t_serve = 0.0
+    served = 0
+    max_hot = sched.store_bytes
+    for wave_ids in trace:
+        for s in wave_ids:
+            with pool.sim.phase() as ap:    # admission: route + promote
+                node = sched.begin(s)
+            with pool.sim.phase() as sp:    # the serve itself
+                back = store.restore(s, client_node=node)
+                sched.end(s, node, nbytes=sess_bytes)
+            t_admit += ap.elapsed
+            t_serve += sp.elapsed
+            served += sess_bytes
+            max_hot = max(max_hot, sched.store_bytes)
+        # spot-check the round's last restore against regenerated state
+        # (every restore also checksum-verifies through the store)
+        _check_tree(synth_cache(n_leaves, leaf_kib,
+                                step=int(wave_ids[-1][1:])), back)
+        pool.sim.clock.advance(decode_s)
+    st = sched.stats()
+    requests = sum(len(w) for w in trace)
+    row = {"mode": "serve", "variant": variant, "sessions": sessions,
+           "hot_set": hot_set, "n_leaves": n_leaves, "leaf_kib": leaf_kib,
+           "nodes": nodes, "rounds": rounds, "wave": wave,
+           "p_hot": p_hot, "total_mib": round(total / MIB, 1),
+           "serve_gib_s": round(bandwidth(served, t_serve), 3),
+           "restore_ms_mean": round(t_serve / max(1, requests) * 1e3, 3),
+           "admit_ms_total": round(t_admit * 1e3, 3),
+           "max_hot_mib": round(max_hot / MIB, 2),
+           "footprint_frac": round(max_hot / total, 4),
+           "demotions": st.get("demotions", 0),
+           "promotions": st.get("promotions", 0),
+           "cold_sessions": st.get("cold_sessions", 0)}
+    if variant == "tiered":
+        row["quota_mib"] = round(quota / MIB, 2)
+        cold = ColdStore.for_pool(pool)
+        row["cold_used_mib"] = round(cold.used_bytes / MIB, 2)
+    return row
+
+
+# -------------------------------------------------------------- elastic --
+def elastic_run(policy: str, steps: int, keep_n: int, n_leaves: int,
+                leaf_kib: int, reachbacks: list[int],
+                step_time_s: float) -> dict:
+    """One side of the T2 comparison: a training run saving every step
+    under ``keep_n``, then elastic restarts reaching back ``r`` steps
+    from the newest.  ``policy="demote"`` runs on a tiered mount (GC
+    spills expired steps cold); ``policy="delete"`` on the plain mount
+    (GC reclaims them).  A reach-back the store can still serve is timed
+    through the sim; one it cannot is charged the recompute bill —
+    ``(target_step + 1) * step_time_s`` of training from scratch."""
+    pool, dfs = make_world(4)
+    iface = make_interface(
+        TIERED_MOUNT if policy == "demote" else "dfs", dfs)
+    # the shared layout: one payload file per step, so a demotion is one
+    # cold object (the sharded x layout matrix is the roundtrip study's)
+    ck = Checkpointer(dfs, interface=iface, layout="shared", n_writers=4)
+    mgr = CheckpointManager(ck, save_every=1, keep_n=keep_n)
+    nbytes = n_leaves * (leaf_kib << 10)
+    for step in range(steps):
+        mgr.maybe_save(step, synth_cache(n_leaves, leaf_kib, step=step),
+                       async_=False)
+    mgr.drain()
+    latest = steps - 1
+    points = []
+    for r in reachbacks:
+        target = latest - r
+        if target < 0:
+            continue
+        want = synth_cache(n_leaves, leaf_kib, step=target)
+        try:
+            tier = ck.step_tier(target)     # before restore promotes it
+            with pool.sim.phase() as ph:
+                back = ck.restore(target, want)
+            _check_tree(want, back)
+            points.append({"reachback": r, "target": target,
+                           "available": True, "identical": True,
+                           "cost_s": round(ph.elapsed, 6),
+                           "tier": tier})
+        except Exception:
+            # the checkpoint is gone everywhere: recompute from scratch
+            points.append({"reachback": r, "target": target,
+                           "available": False, "identical": False,
+                           "cost_s": round((target + 1) * step_time_s, 6),
+                           "tier": "lost"})
+    return {"mode": "elastic", "policy": policy, "steps": steps,
+            "keep_n": keep_n, "n_leaves": n_leaves, "leaf_kib": leaf_kib,
+            "ckpt_mib": round(nbytes / MIB, 2),
+            "step_time_s": step_time_s,
+            "demoted_steps": list(mgr.demoted_steps),
+            "points": points}
+
+
+# ------------------------------------------------------------ roundtrip --
+def roundtrip_run(family: str, layout: str, n_leaves: int,
+                  leaf_kib: int) -> dict:
+    """T3 on one (hot family, checkpoint layout) cell: save -> demote ->
+    transparently promote on restore, byte-checked against regenerated
+    state; then the torn-demotion fault (injected crash after the first
+    file copy, before the manifest flip) followed by a converging
+    retry."""
+    pool, dfs = make_world(4)
+    iface = make_interface(f"tiered://hot={family},cold=cold", dfs)
+    ck = Checkpointer(dfs, interface=iface, layout=layout, n_writers=4)
+    tree = synth_cache(n_leaves, leaf_kib, step=0)
+    nbytes = tree_bytes(tree)
+    with pool.sim.phase():
+        ck.save(0, tree)
+    man = ck.load_manifest(0)
+    files = sorted(ck._step_files(man))
+    with pool.sim.phase() as dph:
+        ck.demote_step(0)
+    demoted = (ck.step_tier(0) == "cold"
+               and all(iface.in_cold(f) for f in files))
+    with pool.sim.phase() as pph:       # restore transparently promotes
+        back = ck.restore(0, tree)
+    _check_tree(tree, back)
+    identical = True
+    cold_clean = (ck.step_tier(0) == "hot"
+                  and not any(iface.in_cold(f) for f in files))
+    # torn demotion: the injected fault fires mid-copy (after the first
+    # file on multi-file layouts, before the only one on single-file
+    # layouts) — always before the manifest flip, so the step must stay
+    # hot and restorable
+    tree1 = synth_cache(n_leaves, leaf_kib, step=1)
+    ck.save(1, tree1)
+    torn_raised = False
+    try:
+        ck.demote_step(1, _fail_after=min(1, len(files) - 1))
+    except Exception:
+        torn_raised = True
+    torn_hot = ck.step_tier(1) == "hot"
+    _check_tree(tree1, ck.restore(1, tree1))
+    # and the retry converges: a clean demote over the partial cold copy
+    ck.demote_step(1)
+    retry_ok = ck.step_tier(1) == "cold"
+    _check_tree(tree1, ck.restore(1, tree1))
+    return {"mode": "roundtrip", "family": family, "layout": layout,
+            "namespaced": bool(iface.has_namespace),
+            "files": len(files), "mib": round(nbytes / MIB, 2),
+            "demote_ms": round(dph.elapsed * 1e3, 3),
+            "promote_restore_ms": round(pph.elapsed * 1e3, 3),
+            "demoted": bool(demoted), "identical": bool(identical),
+            "cold_clean": bool(cold_clean),
+            "torn_raised": bool(torn_raised),
+            "torn_restorable": bool(torn_raised and torn_hot),
+            "retry_converges": bool(retry_ok)}
+
+
+# --------------------------------------------------------------- claims --
+def check_claims(rows: list[dict]) -> list[dict]:
+    out = []
+    srows = {r["variant"]: r for r in rows if r["mode"] == "serve"}
+    if {"hot", "tiered"} <= set(srows):
+        hot, tr = srows["hot"], srows["tiered"]
+        ratio = tr["serve_gib_s"] / max(1e-9, hot["serve_gib_s"])
+        foot = tr["max_hot_mib"] / max(1e-9, hot["max_hot_mib"])
+        ok = (ratio >= 0.70 and foot <= 0.25 + 1e-6
+              and tr["demotions"] >= 1 and tr["promotions"] >= 1)
+        out.append({
+            "claim": "T1 tiered store serves >= 70% of the all-hot "
+                     "baseline's restore bandwidth over the skewed trace "
+                     "at <= 25% of its hot-capacity footprint",
+            "ok": bool(ok),
+            "detail": f"serve {tr['serve_gib_s']:.2f} vs hot "
+                      f"{hot['serve_gib_s']:.2f} GiB/s ({ratio:.0%}); "
+                      f"hot footprint {tr['max_hot_mib']:.0f} vs "
+                      f"{hot['max_hot_mib']:.0f} MiB ({foot:.0%}); "
+                      f"{tr['demotions']} demotions + "
+                      f"{tr['promotions']} promotions "
+                      f"({tr['admit_ms_total']:.1f} ms admission, "
+                      f"vs {hot['admit_ms_total']:.1f} ms baseline)"})
+    erows = {r["policy"]: r for r in rows if r["mode"] == "elastic"}
+    if {"demote", "delete"} <= set(erows):
+        dem, dele = erows["demote"], erows["delete"]
+        dpts = {p["reachback"]: p for p in dem["points"]}
+        xpts = {p["reachback"]: p for p in dele["points"]}
+        deep = [r for r in sorted(dpts) if r >= 2 and r in xpts]
+        ok = bool(deep) and all(
+            dpts[r]["available"] and dpts[r]["identical"]
+            and dpts[r]["cost_s"] < xpts[r]["cost_s"] for r in deep)
+        # inside the hot window both policies must serve from hot
+        shallow = [r for r in sorted(dpts)
+                   if r < dem["keep_n"] and r in xpts]
+        ok = ok and all(dpts[r]["available"] and xpts[r]["available"]
+                        and dpts[r]["tier"] == "hot" for r in shallow)
+        det = "; ".join(
+            f"r={r}: demote {dpts[r]['cost_s'] * 1e3:.1f} ms "
+            f"({dpts[r]['tier']}) vs delete "
+            + (f"{xpts[r]['cost_s'] * 1e3:.1f} ms restore"
+               if xpts[r]["available"] else
+               f"{xpts[r]['cost_s']:.2f} s recompute "
+               f"({xpts[r]['target'] + 1} steps x "
+               f"{dele['step_time_s']:.2f} s)")
+            for r in sorted(dpts) if r in xpts)
+        out.append({
+            "claim": "T2 keep_n demotion beats delete for elastic "
+                     "restarts reaching back >= 2 steps: demoted "
+                     "checkpoints promote + restore byte-identically "
+                     "in less time than the delete policy recomputes",
+            "ok": bool(ok), "detail": det})
+    rrows = [r for r in rows if r["mode"] == "roundtrip"]
+    if rrows:
+        ok = (all(r["demoted"] and r["identical"] and r["cold_clean"]
+                  and r["torn_restorable"] and r["retry_converges"]
+                  for r in rrows)
+              # both namespaced and namespace-less mounts must be covered
+              and {True, False} <= {r["namespaced"] for r in rrows})
+        out.append({
+            "claim": "T3 demote -> promote is byte-identical on every "
+                     "layout (namespaced and namespace-less), and a torn "
+                     "demotion never strands the only copy",
+            "ok": bool(ok),
+            "detail": "; ".join(
+                f"{r['family']}/{r['layout']}"
+                f"{'' if r['namespaced'] else ' (no namespace)'}: "
+                f"{r['files']} files, demote "
+                f"{r['demote_ms']:.1f} ms, promote+restore "
+                f"{r['promote_restore_ms']:.1f} ms, torn demotion "
+                f"left tier=hot + restorable, retry converged"
+                for r in rrows)})
+    return out
+
+
+# ----------------------------------------------------------------- main --
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="all",
+                    choices=["serve", "elastic", "roundtrip", "all"])
+    # serve (T1)
+    ap.add_argument("--sessions", type=int, default=16)
+    ap.add_argument("--hot-set", type=int, default=3,
+                    help="working-set sessions (kept under the quota "
+                         "with one slot of promotion headroom)")
+    ap.add_argument("--n-leaves", type=int, default=16)
+    ap.add_argument("--leaf-kib", type=int, default=128)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--wave", type=int, default=12)
+    ap.add_argument("--p-hot", type=float, default=0.9,
+                    help="fraction of the trace drawn from the working "
+                         "set")
+    ap.add_argument("--hot-frac", type=float, default=0.25,
+                    help="tiered-side scheduler quota as a fraction of "
+                         "the published footprint")
+    ap.add_argument("--decode-ms", type=float, default=2.0,
+                    help="decode cadence between return waves (ms)")
+    # elastic (T2)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--keep-n", type=int, default=2)
+    ap.add_argument("--ckpt-leaves", type=int, default=8)
+    ap.add_argument("--ckpt-leaf-kib", type=int, default=256)
+    ap.add_argument("--reachbacks", nargs="+", type=int,
+                    default=[0, 1, 2, 4, 6])
+    ap.add_argument("--step-time-s", type=float, default=0.25,
+                    help="one training step's compute time — the unit "
+                         "of the delete policy's recompute bill")
+    # roundtrip (T3)
+    ap.add_argument("--rt-families", nargs="+",
+                    default=["dfs", "daos-array"])
+    ap.add_argument("--rt-layouts", nargs="+",
+                    default=["sharded", "shared"])
+    ap.add_argument("--rt-leaves", type=int, default=6)
+    ap.add_argument("--rt-leaf-kib", type=int, default=192)
+    ap.add_argument("--out", default=str(ARTIFACTS / "tier_bench.json"))
+    args = ap.parse_args(argv)
+
+    rows: list[dict] = []
+    if args.mode in ("serve", "all"):
+        print(f"=== tiered serving ({args.sessions} sessions x "
+              f"{args.n_leaves} x {args.leaf_kib} KiB leaves, quota "
+              f"{args.hot_frac:.0%}, trace {args.rounds} x {args.wave} @ "
+              f"p_hot={args.p_hot}) ===")
+        for variant in ("hot", "tiered"):
+            r = serve_run(variant, args.sessions, args.hot_set,
+                          args.n_leaves, args.leaf_kib, args.nodes,
+                          args.rounds, args.wave, args.p_hot,
+                          args.hot_frac, args.decode_ms / 1e3)
+            rows.append(r)
+            print(f"{variant:7s} serve {r['serve_gib_s']:7.2f} GiB/s  "
+                  f"hot {r['max_hot_mib']:6.1f} MiB "
+                  f"({r['footprint_frac']:.0%})  "
+                  f"admit {r['admit_ms_total']:7.1f} ms  "
+                  f"demote/promote {r['demotions']}/{r['promotions']}")
+    if args.mode in ("elastic", "all"):
+        print(f"\n=== elastic reach-back ({args.steps} steps, keep_n="
+              f"{args.keep_n}, {args.ckpt_leaves} x {args.ckpt_leaf_kib} "
+              f"KiB ckpt, step {args.step_time_s}s) ===")
+        for policy in ("demote", "delete"):
+            r = elastic_run(policy, args.steps, args.keep_n,
+                            args.ckpt_leaves, args.ckpt_leaf_kib,
+                            args.reachbacks, args.step_time_s)
+            rows.append(r)
+            for p in r["points"]:
+                cost = (f"{p['cost_s'] * 1e3:8.1f} ms" if p["available"]
+                        else f"{p['cost_s']:7.2f} s recompute")
+                print(f"{policy:7s} r={p['reachback']} "
+                      f"(step {p['target']}, {p['tier']:4s})  {cost}")
+    if args.mode in ("roundtrip", "all"):
+        print(f"\n=== demote/promote round trips ({args.rt_leaves} x "
+              f"{args.rt_leaf_kib} KiB) ===")
+        for family in args.rt_families:
+            for layout in args.rt_layouts:
+                r = roundtrip_run(family, layout, args.rt_leaves,
+                                  args.rt_leaf_kib)
+                rows.append(r)
+                ns = "" if r["namespaced"] else ", no ns"
+                print(f"{family:11s} {layout:8s} "
+                      f"({r['files']:2d} files{ns})  "
+                      f"demote {r['demote_ms']:8.1f} ms  "
+                      f"promote+restore {r['promote_restore_ms']:8.1f} "
+                      f"ms  torn->hot {r['torn_restorable']}")
+    claims = check_claims(rows)
+    if claims:
+        print("\n=== Tiering claims ===")
+        for c in claims:
+            print(f"  [{'PASS' if c['ok'] else 'FAIL'}] {c['claim']}   "
+                  f"({c['detail']})")
+        rows.extend({"mode": "claims", **c} for c in claims)
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(f"\nsaved {len(rows)} rows -> {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

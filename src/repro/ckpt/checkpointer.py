@@ -127,6 +127,15 @@ class Checkpointer:
         return self.dfs.cont.open_kv(f"ckpt-steps:{self.base}",
                                      oclass="RP_3GX")
 
+    @property
+    def _indexed(self) -> bool:
+        """Whether steps carry a step-index KV record: namespace-less
+        mounts have no directory entries at all, and a tiered mount's
+        hot entry disappears on demotion — both discover through the
+        (tier-agnostic) index instead."""
+        return (not self.iface.has_namespace
+                or getattr(self.iface, "tier_aware", False))
+
     # ------------- save -------------
     def save(self, step: int, tree, extra_meta: dict | None = None) -> dict:
         """Blocking transactional save. Returns the manifest dict."""
@@ -147,7 +156,7 @@ class Checkpointer:
             manifest = S.manifest_dumps(entries, {
                 "step": step, "layout": self.layout,
                 "oclass": self.oclass, "n_writers": self.n_writers,
-                **(extra_meta or {})})
+                "tier": "hot", **(extra_meta or {})})
             # metadata rides the pipelined KV plane: manifest + step-index
             # records queue on one batch window under the tx; the commit
             # barrier below drains it exactly as it drains the data queues.
@@ -156,9 +165,11 @@ class Checkpointer:
             # async ctx whatever interface carried the leaves.
             kvb = tx.kv_batch(self._manifest_kv(sdir), ctx=IOCtx(sync=False))
             kvb.put("manifest", "json", manifest)
-            if not self.iface.has_namespace:
-                # no directory entry will record this step: index it in the
-                # same tx so crash recovery can discover it
+            if self._indexed:
+                # no durable directory entry records this step (none exists
+                # on a namespace-less mount; a tiered mount's disappears on
+                # demotion): index it in the same tx so crash recovery and
+                # reach-back discovery can find it
                 kvb.put(f"{step:08d}", "v", b"1", obj=self._steps_kv())
             # commit barrier (container): any write-back data staged under
             # this tx is flushed to the engines BEFORE the epoch — and with
@@ -243,8 +254,10 @@ class Checkpointer:
 
     def restore(self, step: int, template) -> dict:
         """Restore a full pytree (every host reads everything it needs;
-        re-sharding to a different host count is just different ranges)."""
-        man = self.load_manifest(step)
+        re-sharding to a different host count is just different ranges).
+        A ``keep_n``-demoted step promotes back through the async data
+        path first, transparently."""
+        man = self._hot_manifest(step)
         items = {}
         for path, entry in man["leaves"].items():
             raw = self._read_leaf(entry, n_writers=man.get("n_writers"))
@@ -266,8 +279,7 @@ class Checkpointer:
         still hits the writers' warm caches where ranges overlap.  A host
         slicing many leaves loads the manifest once and passes it as
         ``man`` instead of re-reading the KV per slice."""
-        if man is None:
-            man = self.load_manifest(step)
+        man = self._hot_manifest(step, man)
         entry = man["leaves"][path]
         return self._read_leaf(entry, lo, hi, n_writers=man.get("n_writers"))
 
@@ -324,6 +336,122 @@ class Checkpointer:
             out[a - lo: b - lo] = h.read_at(a - sh["lo"], b - a)
         return out
 
+    # ------------- tiering (demote / promote) -------------
+    def _require_tiered(self, verb: str) -> None:
+        if not getattr(self.iface, "tier_aware", False):
+            raise CheckpointError(
+                f"cannot {verb}: mount {type(self.iface).__name__} has no "
+                "cold tier (use a tiered:// mount)")
+
+    def step_tier(self, step: int) -> str:
+        """Which tier holds a step's payload: ``hot`` or ``cold``
+        (manifest-recorded; pre-tiering manifests are hot)."""
+        return str(self.load_manifest(step).get("tier", "hot"))
+
+    def _hot_manifest(self, step: int, man: dict | None = None) -> dict:
+        """The restore paths' entry hook: promote a demoted step before
+        touching its payload, returning a manifest whose files are live
+        on the hot tier."""
+        if man is None:
+            man = self.load_manifest(step)
+        if man.get("tier", "hot") == "cold":
+            return self.promote_step(step)
+        return man
+
+    def _step_files(self, man: dict) -> dict[str, int]:
+        """``{file: nbytes}`` of a step's payload, deduplicated: the
+        shared layout names one file from every leaf entry (its length is
+        the furthest region end), the sharded layout one file per
+        (leaf, shard)."""
+        files: dict[str, int] = {}
+        for entry in man["leaves"].values():
+            if "file" in entry:
+                end = int(entry["offset"]) + int(entry["nbytes"])
+                files[entry["file"]] = max(files.get(entry["file"], 0), end)
+            else:
+                for sh in entry["shards"]:
+                    files[sh["file"]] = int(sh["hi"]) - int(sh["lo"])
+        return files
+
+    def demote_step(self, step: int, _fail_after: int | None = None) -> dict:
+        """Move one step's payload to the cold tier (what ``keep_n`` GC
+        does on a tiered mount instead of deleting).
+
+        The T3 ordering: bytes are *copied* cold first (the cold store is
+        non-transactional), the manifest's ``tier`` field flips inside an
+        epoch tx, and the hot files are unlinked only after the commit
+        barrier — a crash anywhere before the commit leaves the manifest
+        pointing at the intact hot copy.  The step-index record (the
+        namespace-less discovery path) is tier-agnostic and stays put.
+
+        ``_fail_after=N`` is the fault hook the conformance test uses:
+        raise after ``N`` file copies, before the manifest flip."""
+        self._require_tiered("demote step")
+        man = self.load_manifest(step)
+        if man.get("tier", "hot") == "cold":
+            return man
+        sdir = self._step_dir(step)
+        files = self._step_files(man)
+        copied = 0
+        for fname in sorted(files):
+            if _fail_after is not None and copied >= _fail_after:
+                raise CheckpointError(
+                    f"injected demotion fault after {copied} file copies")
+            self.iface.demote_file(fname, files[fname])
+            copied += 1
+        extra = {k: v for k, v in man.items() if k != "leaves"}
+        extra["tier"] = "cold"
+        manifest = S.manifest_dumps(man["leaves"], extra)
+        tx = self.dfs.cont.tx_begin()
+        try:
+            kvb = tx.kv_batch(self._manifest_kv(sdir), ctx=IOCtx(sync=False))
+            kvb.put("manifest", "json", manifest)
+            tx.commit()
+        except BaseException:
+            tx.abort()
+            raise
+        # hot copies die only after the flip is visible
+        for fname in sorted(files):
+            self.iface.hot_unlink(fname)
+        self.iface.hot_unlink(sdir)
+        extra["leaves"] = man["leaves"]
+        return extra
+
+    def promote_step(self, step: int) -> dict:
+        """Pull one demoted step back onto the hot tier: hot writes stage
+        under the same epoch tx as the manifest flip (the commit barrier
+        drains the async part queues first), cold copies are unlinked
+        post-commit — an aborted promotion leaves the cold copy the
+        intact source of truth."""
+        self._require_tiered("promote step")
+        man = self.load_manifest(step)
+        if man.get("tier", "hot") != "cold":
+            return man
+        sdir = self._step_dir(step)
+        try:
+            self.iface.mkdir(sdir)
+        except Exception:
+            pass
+        files = self._step_files(man)
+        extra = {k: v for k, v in man.items() if k != "leaves"}
+        extra["tier"] = "hot"
+        manifest = S.manifest_dumps(man["leaves"], extra)
+        tx = self.dfs.cont.tx_begin()
+        try:
+            for fname in sorted(files):
+                self.iface.promote_file(fname, files[fname],
+                                        oclass=self.oclass, tx=tx)
+            kvb = tx.kv_batch(self._manifest_kv(sdir), ctx=IOCtx(sync=False))
+            kvb.put("manifest", "json", manifest)
+            tx.commit()
+        except BaseException:
+            tx.abort()
+            raise
+        for fname in sorted(files):
+            self.iface.cold_unlink(fname)
+        extra["leaves"] = man["leaves"]
+        return extra
+
     # ------------- lifecycle (gc) -------------
     def list_steps(self) -> list[int]:
         """Steps visible in the checkpoint namespace (or, for namespace-less
@@ -339,7 +467,7 @@ class Checkpointer:
                     steps.add(int(n[5:]))
                 except ValueError:
                     pass
-        if not self.iface.has_namespace:
+        if self._indexed:
             try:
                 steps.update(int(d) for d in self._steps_kv().list_dkeys())
             except Exception:
@@ -367,13 +495,17 @@ class Checkpointer:
                 self.iface.unlink(f)
             except (FileNotFoundError, KeyError):
                 pass
-        for name in self.iface.readdir(sdir):   # stray (non-manifest) files
+        try:        # a demoted step's hot directory entry is already gone
+            strays = self.iface.readdir(sdir)
+        except Exception:
+            strays = []
+        for name in strays:                     # stray (non-manifest) files
             try:
                 self.iface.unlink(f"{sdir}/{name}")
             except (FileNotFoundError, KeyError):
                 pass
         self._manifest_kv(sdir).remove("manifest")
-        if not self.iface.has_namespace:
+        if self._indexed:
             self._steps_kv().remove(f"{step:08d}")
         try:
             self.iface.unlink(sdir)             # the step directory entry

@@ -16,11 +16,24 @@ from .checkpointer import Checkpointer, CheckpointError
 
 class CheckpointManager:
     def __init__(self, ckpt: Checkpointer, save_every: int = 100,
-                 keep_n: int = 3) -> None:
+                 keep_n: int = 3,
+                 demote_old: bool | None = None) -> None:
         self.ckpt = ckpt
         self.save_every = save_every
         self.keep_n = keep_n
+        # keep_n demotion: on a tiered mount, GC *demotes* expired steps
+        # to the cold tier (still restorable — an elastic restart reaching
+        # past the hot window promotes them back) instead of deleting.
+        # None = autodetect from the mount; asking for it without a cold
+        # tier is an error, not a silent fallback to delete.
+        tiered = getattr(ckpt.iface, "tier_aware", False)
+        if demote_old and not tiered:
+            raise CheckpointError(
+                "demote_old requires a tiered:// checkpoint mount: "
+                f"{type(ckpt.iface).__name__} has no cold tier")
+        self.demote_old = tiered if demote_old is None else bool(demote_old)
         self.saved_steps: list[int] = []
+        self.demoted_steps: list[int] = []
         self._pending: list = []
 
     # ------------- save path -------------
@@ -41,9 +54,17 @@ class CheckpointManager:
         while len(self.saved_steps) > self.keep_n:
             old = self.saved_steps.pop(0)
             try:
-                # full reclamation: shard files, manifest KV object and the
-                # step directory entry — so keep_n actually bounds store use
-                self.ckpt.delete_step(old)
+                if self.demote_old:
+                    # keep_n bounds the HOT tier: expired steps spill to
+                    # cold capacity, still restorable for elastic restarts
+                    # reaching past the hot window
+                    self.ckpt.drain()   # the step's save must be durable
+                    self.ckpt.demote_step(old)
+                    self.demoted_steps.append(old)
+                else:
+                    # full reclamation: shard files, manifest KV object and
+                    # the step directory entry — keep_n bounds store use
+                    self.ckpt.delete_step(old)
             except Exception:
                 pass  # gc is best-effort
 
@@ -60,8 +81,8 @@ class CheckpointManager:
             # an async save racing the failure may itself have died — that
             # epoch never committed, so it simply doesn't exist.
             self._pending.clear()
-        candidates = sorted(set(self.saved_steps), reverse=True) or \
-            self._discover_steps()
+        candidates = sorted(set(self.saved_steps) | set(self.demoted_steps),
+                            reverse=True) or self._discover_steps()
         last_err: Exception | None = None
         for step in candidates:
             try:

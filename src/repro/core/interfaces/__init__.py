@@ -1,6 +1,21 @@
 """The paper's DAOS access mechanisms, as swappable interfaces.
 
-``make_interface`` accepts dfuse-style *mount options* appended to the
+``make_interface`` routes a full *mount string* through the scheme
+registry (``interfaces/registry.py``, the smart_open transport idiom):
+
+    [scheme://]rest
+
+``daos://name[:key=val,...]``  the interface matrix below; a bare mount
+                               string with no scheme (``"dfs"``,
+                               ``"posix-cached:timeout=1.0"``) resolves
+                               here, so every legacy name keeps working
+``cold://[key=val,...]``       the S3-like cold object store
+                               (``interfaces/cold.py``)
+``tiered://hot=...,cold=...,policy=lru``
+                               hot DAOS in front of a cold backend
+                               (``interfaces/tiered.py``)
+
+Within the ``daos`` scheme, dfuse-style *mount options* append to the
 interface name after a colon, ``name:key=val,key=val`` — the knobs the
 real ``dfuse --enable-caching`` / ``attr-timeout`` flags expose:
 
@@ -38,13 +53,19 @@ real ``dfuse --enable-caching`` / ``attr-timeout`` flags expose:
 
 e.g. ``posix-cached:timeout=1.0`` is the dfuse-caching-enabled POSIX
 mount with one-second attr/dentry revalidation;
-``posix-cached:coherence=off`` is byte-for-byte plain ``posix``.
+``posix-cached:coherence=off`` is byte-for-byte plain ``posix``.  The
+tiering keys (``hot=``/``cold=``/``policy=``) belong to ``tiered://``
+mounts only and are rejected anywhere else.
 """
 from .base import (COST_PROFILES, AccessInterface, CostProfile, FileHandle)
+from .cold import ColdObjectInterface, ColdStore
 from .dfs import DFS, DFSError, DFSInterface, ArrayInterface
 from .hdf5 import HDF5CollectiveInterface, HDF5Interface
 from .mpiio import MPIIOInterface
 from .posix import POSIXInterface
+from .registry import (TIER_OPTION_KEYS, SchemeSpec, register_scheme,
+                       registered_schemes, resolve, scheme_spec, split_mount)
+from .tiered import TIER_POLICIES, TieredInterface, parse_tiered_spec
 
 MIB = 1 << 20
 KIB = 1 << 10
@@ -110,6 +131,15 @@ def parse_mount_options(optstr: str) -> dict:
                 raise ValueError(f"mount option ra_async={val!r}: "
                                  "expected 0/1/true/false")
             cache_opts["readahead_async"] = val in ("1", "true")
+        elif key in TIER_OPTION_KEYS:
+            # same strictness as coherence-on-uncached: silently accepting
+            # hot=/cold=/policy= here would let a single-tier mount
+            # masquerade as a tiered one
+            raise ValueError(
+                f"mount option {key!r} configures the tiering layer and is "
+                "only valid on a tiered:// mount (e.g. "
+                "tiered://hot=dfs,cold=cold,policy=lru); this mount has no "
+                "second tier")
         else:
             raise ValueError(f"unknown mount option {key!r}")
     kw: dict = dict(extra)
@@ -120,10 +150,11 @@ def parse_mount_options(optstr: str) -> dict:
     return kw
 
 
-def make_interface(name: str, dfs: DFS) -> AccessInterface:
-    """Factory keyed by the names the IOR harness / configs use, with
-    optional ``:key=val,...`` mount options (see module docstring)."""
-    base, _, optstr = name.partition(":")
+def _make_daos(rest: str, dfs: DFS) -> AccessInterface:
+    """The ``daos://`` scheme: the paper's interface matrix, keyed by the
+    names the IOR harness / configs use, with optional ``:key=val,...``
+    mount options (see module docstring)."""
+    base, _, optstr = rest.partition(":")
     kw = parse_mount_options(optstr) if optstr else {}
     table = {
         "dfs": lambda **kw: DFSInterface(dfs, **kw),
@@ -140,6 +171,9 @@ def make_interface(name: str, dfs: DFS) -> AccessInterface:
         "mpiio": lambda **kw: MPIIOInterface(dfs, **kw),
         "hdf5": lambda **kw: HDF5Interface(dfs, **kw),
         "hdf5-coll": lambda **kw: HDF5CollectiveInterface(dfs, **kw),
+        # the cold backend is addressable by name too (benchmarks sweep
+        # it like any other interface); cold:// is the canonical spelling
+        "cold": lambda **kw: ColdObjectInterface(dfs, **kw),
     }
     try:
         factory = table[base]
@@ -148,11 +182,49 @@ def make_interface(name: str, dfs: DFS) -> AccessInterface:
     return factory(**kw)
 
 
+def _make_cold(rest: str, dfs: DFS) -> AccessInterface:
+    """The ``cold://`` scheme: S3-like object store, optional mount
+    options after the ``://`` (cache/coherence knobs are rejected by the
+    backend — the gateway is the cache boundary)."""
+    kw = parse_mount_options(rest) if rest else {}
+    return ColdObjectInterface(dfs, **kw)
+
+
+def _make_tiered(rest: str, dfs: DFS) -> AccessInterface:
+    """The ``tiered://`` scheme: resolve the hot and cold tier mount
+    strings recursively through the registry, then wrap them."""
+    spec = parse_tiered_spec(rest)
+    hot = resolve(spec["hot"], dfs)
+    cold = resolve(spec["cold"], dfs)
+    return TieredInterface(hot, cold, policy=spec["policy"])
+
+
+register_scheme("daos", _make_daos,
+                "the paper's interface matrix (bare mount strings land "
+                "here)")
+register_scheme("cold", _make_cold,
+                "S3-like cold object store behind a shared gateway")
+register_scheme("tiered", _make_tiered,
+                "hot DAOS tier in front of a cold object store")
+
+
+def make_interface(name: str, dfs: DFS) -> AccessInterface:
+    """Factory over full mount strings: ``[scheme://]rest`` routed
+    through the scheme registry.  Bare names (``"dfs"``,
+    ``"posix-cached:timeout=1.0"``) resolve to the ``daos`` scheme, so
+    every pre-registry mount string keeps working."""
+    return resolve(name, dfs)
+
+
 INTERFACE_NAMES = ["dfs", "dfs-cached", "daos-array", "posix", "posix-ioil",
                    "posix-cached", "posix-readahead", "mpiio", "hdf5",
                    "hdf5-coll"]
 
 __all__ = ["AccessInterface", "ArrayInterface", "COST_PROFILES",
-           "CostProfile", "DFS", "DFSError", "DFSInterface", "FileHandle",
-           "HDF5Interface", "INTERFACE_NAMES", "MPIIOInterface",
-           "POSIXInterface", "make_interface", "parse_mount_options"]
+           "ColdObjectInterface", "ColdStore", "CostProfile", "DFS",
+           "DFSError", "DFSInterface", "FileHandle", "HDF5Interface",
+           "INTERFACE_NAMES", "MPIIOInterface", "POSIXInterface",
+           "SchemeSpec", "TIER_OPTION_KEYS", "TIER_POLICIES",
+           "TieredInterface", "make_interface", "parse_mount_options",
+           "parse_tiered_spec", "register_scheme", "registered_schemes",
+           "resolve", "scheme_spec", "split_mount"]

@@ -83,6 +83,13 @@ COST_PROFILES: dict[str, CostProfile] = {
     # HDF5 shared-file through its MPI-IO VFD (collective buffering)
     "hdf5-sfp": CostProfile(lat_per_op=70e-6, via_fuse=True, sync=True,
                             frag_bytes=16 << 20, op_multiplier=1.3),
+    # cold object store behind the gateway (the ``cold://`` scheme):
+    # request/response — sync per-request chain, qd pinned to 1, and the
+    # real costs (TTFB, per-connection stream, gateway aggregate) are the
+    # HWProfile's cold_* constants charged via ``record_cold``, not flow
+    # solver media/RPC terms.  Concurrency comes from multipart fan-out
+    # across processes, exactly like S3 multipart.
+    "cold": CostProfile(lat_per_op=0.0, sync=True),
 }
 
 

@@ -93,9 +93,26 @@ class Rebuilder:
                 obj = ArrayObject(cont, f"oid:{oid:x}", oid, oc,
                                   cont.stripe_cell)
                 taken = set(lay.targets)
+                # replica columns: position i of the target list serves
+                # chunk column i % width, so the engines co-holding the
+                # dead target's cells are exactly its columns' members —
+                # the set a replacement must avoid on wide layouts
+                w = max(1, lay.width)
+                cols: dict[int, set[int]] = {}
+                for i, t in enumerate(lay.targets):
+                    cols.setdefault(i % w, set()).add(t)
                 for dt in sorted(set(dead_targets)):
-                    repl = self.pool._replacement_for(oid, dt, taken)
+                    dcols = [i % w for i, t in enumerate(lay.targets)
+                             if t == dt]
+                    co = set()
+                    for c in dcols:
+                        co |= cols[c]
+                    co.discard(dt)
+                    repl = self.pool._replacement_for(oid, dt, taken,
+                                                      co_holders=co)
                     taken.add(repl)
+                    for c in dcols:     # later same-column picks see it
+                        cols[c].add(repl)
                     groups.append({
                         "cont": cont, "oid": oid, "obj": obj, "lay": lay,
                         "dead": dt, "repl": repl, "next": 0,
@@ -485,16 +502,27 @@ class Pool:
         self._bump_map()
 
     # ------------- rebuild -------------
-    def _replacement_for(self, oid: int, dead: int, taken: set[int]) -> int:
-        live = [e for e in self.live_engine_ids() if e not in taken]
-        if not live:
-            # wide layouts (e.g. RP_2GX) already span every engine: reuse a
-            # live one — redundancy is restored even if placement overlaps.
-            live = self.live_engine_ids()
-        if not live:
+    def _replacement_for(self, oid: int, dead: int, taken: set[int],
+                         co_holders=frozenset()) -> int:
+        live_all = self.live_engine_ids()
+        if not live_all:
             raise EngineFailedError("no live engine available for rebuild")
-        idx = _layout.jump_hash(_layout.oid_for(oid ^ dead), len(live))
-        return live[idx]
+        # candidate tiers, strictest first: (1) engines the layout doesn't
+        # touch at all; (2) for wide layouts (e.g. RP_2GX, which already
+        # span every engine) reuse a live one — but NEVER one holding a
+        # surviving replica of the dead target's cells (``co_holders``):
+        # co-locating both copies of a cell would turn the next single
+        # failure into data loss; (3) any live engine, the last resort
+        # when survivors alone can't avoid overlap.
+        forbidden = set(co_holders) | {dead}
+        for cand in ([e for e in live_all if e not in taken],
+                     [e for e in live_all if e not in forbidden],
+                     live_all):
+            if cand:
+                idx = _layout.jump_hash(_layout.oid_for(oid ^ dead),
+                                        len(cand))
+                return cand[idx]
+        raise EngineFailedError("no live engine available for rebuild")
 
     def rebuilder(self, bw_cap: float = 0.0,
                   part_bytes: int = MP_PART_BYTES) -> Rebuilder:

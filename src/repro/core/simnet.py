@@ -89,6 +89,18 @@ class HWProfile:
     incast_alpha_write: float = 0.003
     srv_incast_alpha_read: float = 0.006
     srv_incast_alpha_write: float = 0.001
+    # Cold object store (the ``cold://`` scheme): an S3-like capacity
+    # tier behind a shared gateway.  The cost shape is deliberately the
+    # inverse of the engines: every request pays a large time-to-first-
+    # byte (auth + HTTP + gateway queueing) on the caller's serial
+    # chain, each process streams at a modest per-connection rate, and
+    # all concurrent cold traffic shares the gateway aggregate — so
+    # parallelism comes from fanning parts across processes (multipart),
+    # not from queue depth, and capacity is unbounded (blobs live
+    # outside the engines entirely).
+    cold_req_time: float = 10e-3        # s per request (TTFB/auth/queue)
+    cold_stream_bw: float = 0.30e9      # B/s per process connection
+    cold_gw_bw: float = 5e9             # B/s shared gateway aggregate
     # Useful-concurrency ceiling for submission windows: an engine keeps
     # at most qd_overdrive_limit x engine_rpc_threads in-flight slots
     # doing useful work, shared by however many (process, engine) windows
@@ -202,6 +214,9 @@ class PhaseRecorder:
         # broadcast messages (origin_process None = async/unattributed:
         # only the recipient side is charged)
         self.coh_flows: list[tuple[int | None, int, int]] = []
+        # cold object-store requests: (client_node, process, direction,
+        # nbytes, nops) — gateway round trips, no engines and no media
+        self.cold_flows: list[tuple[int, int, str, int, int]] = []
         self.md_ops: int = 0         # metadata service round-trips (serial-ish)
         self.elapsed: float | None = None
 
@@ -246,12 +261,24 @@ class PhaseRecorder:
         self.coh_flows.append((origin_process, int(recipient_node),
                                int(nops)))
 
+    def record_cold(self, *, client_node: int, process: int, direction: str,
+                    nbytes: int, nops: int = 1) -> None:
+        """A cold object-store transfer: ``nops`` gateway requests moving
+        ``nbytes`` through the caller's connection.  No engines, no media —
+        the payload crosses the client NIC, streams at the per-process cold
+        connection rate and shares the gateway aggregate."""
+        if direction not in ("read", "write"):
+            raise ValueError(direction)
+        self.cold_flows.append((int(client_node), int(process), direction,
+                                int(nbytes), int(nops)))
+
     # -- solver ------------------------------------------------------------
     def solve(self, setup: bool = True) -> float:
         hw = self.sim.hw
         topo = self.sim.topo
         if (not self.flows and not self.md_ops and not self.local_flows
-                and not self.reval_flows and not self.coh_flows):
+                and not self.reval_flows and not self.coh_flows
+                and not self.cold_flows):
             return 0.0
 
         eng_media = defaultdict(float)      # engine -> media seconds
@@ -407,6 +434,19 @@ class PhaseRecorder:
                 coh_node[rn] += ops * hw.coh_msg_time
                 cli_nic[rn] += ops * hw.coh_msg_bytes
 
+        # cold object-store traffic: every request pays the gateway's
+        # time-to-first-byte on the caller's serial chain, the payload
+        # streams over that process's cold connection, crosses the client
+        # NIC, and all concurrent cold bytes share the gateway aggregate.
+        # Per-process chains are what multipart fan-out parallelizes —
+        # up to the gateway cap.
+        cold_total = 0
+        for cn, p, direction, nb, ops in self.cold_flows:
+            proc_chain[p] += ops * hw.cold_req_time + nb / hw.cold_stream_bw
+            cli_nic[cn] += nb
+            cli_dirb[cn][direction] += nb
+            cold_total += nb
+
         def dominant(dirb: dict) -> str:
             return ("write" if dirb.get("write", 0.0) > dirb.get("read", 0.0)
                     else "read")
@@ -432,6 +472,8 @@ class PhaseRecorder:
             t = max(t, b / hw.cache_bw)
         for n, s in coh_node.items():
             t = max(t, s)
+        if cold_total:
+            t = max(t, cold_total / hw.cold_gw_bw)
         # metadata service: treated as a single serialised RPC pipeline
         t = max(t, self.md_ops * self.sim.md_op_time)
         return t + (hw.setup_time if setup else 0.0)
@@ -571,6 +613,11 @@ class IOSim:
         phase."""
         if self._active is not None:
             self._active.record_coherence(**kw)
+
+    def record_cold(self, **kw) -> None:
+        """Record a cold object-store transfer into the active phase."""
+        if self._active is not None:
+            self._active.record_cold(**kw)
 
 
 def bandwidth(nbytes: int, seconds: float) -> float:

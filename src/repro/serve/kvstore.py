@@ -156,11 +156,12 @@ class KVCacheStore:
         return sum(int(e["nbytes"]) for e in man["leaves"].values())
 
     @staticmethod
-    def _meta_record(step: int, entries: dict) -> bytes:
+    def _meta_record(step: int, entries: dict, tier: str = "hot") -> bytes:
         return json.dumps(
             {"step": int(step),
              "nbytes": sum(int(e["nbytes"]) for e in entries.values()),
-             "n_leaves": len(entries)}, sort_keys=True).encode()
+             "n_leaves": len(entries), "tier": str(tier)},
+            sort_keys=True).encode()
 
     def session_meta(self, session: str) -> dict:
         """``{step, nbytes, n_leaves}`` from the session-index record — one
@@ -172,17 +173,20 @@ class KVCacheStore:
             raw = bytes(self._sessions_kv().get(str(session), "meta"))
             meta = json.loads(raw)
             return {"step": int(meta["step"]), "nbytes": int(meta["nbytes"]),
-                    "n_leaves": int(meta["n_leaves"])}
+                    "n_leaves": int(meta["n_leaves"]),
+                    "tier": str(meta.get("tier", "hot"))}
         except (NotFoundError, KeyError, ValueError, TypeError):
             pass
         man = self.manifest(session)        # raises KVStoreError if gone
         entries = man["leaves"]
+        tier = str(man.get("tier", "hot"))
         meta = {"step": int(man["step"]),
                 "nbytes": sum(int(e["nbytes"]) for e in entries.values()),
-                "n_leaves": len(entries)}
+                "n_leaves": len(entries), "tier": tier}
         try:                                # repair the index in passing
             self._sessions_kv().put(str(session), "meta",
-                                    self._meta_record(meta["step"], entries))
+                                    self._meta_record(meta["step"], entries,
+                                                      tier=tier))
         except Exception:
             pass
         return meta
@@ -226,7 +230,7 @@ class KVCacheStore:
             manifest = S.manifest_dumps(entries, {
                 "session": str(session), "step": int(step),
                 "n_writers": self.n_writers, "skeleton": _skeleton(cache),
-                **(extra_meta or {})})
+                "tier": "hot", **(extra_meta or {})})
             # metadata rides the pipelined KV plane: manifest + index
             # records queue on one batch window (the interface's qd) and
             # the commit barrier below drains it with the data queues
@@ -284,9 +288,10 @@ class KVCacheStore:
         A node serving a resident session memoizes its manifest and passes
         it as ``man`` — the session index's ``step`` (one small KV via
         ``session_meta``) says when the memo went stale — so the steady
-        decode path pays leaf reads, not a manifest walk per step."""
-        if man is None:
-            man = self.manifest(session)
+        decode path pays leaf reads, not a manifest walk per step.
+        A demoted session promotes back to the hot tier first (through
+        the async data path), transparently."""
+        man = self._hot_manifest(session, man)
         items: dict = {}
         for path, entry in man["leaves"].items():
             if (client_node is None and self.multipart
@@ -321,8 +326,7 @@ class KVCacheStore:
         verification and rely on the coherence layer's staleness bound —
         the same contract fleet readers already run under.  A caller
         slicing many leaves loads the manifest once and passes ``man``."""
-        if man is None:
-            man = self.manifest(session)
+        man = self._hot_manifest(session, man)
         entry = man["leaves"][path]
         lo = max(0, int(lo))
         hi = min(int(entry["nbytes"]), int(hi))
@@ -346,8 +350,7 @@ class KVCacheStore:
         pipelines across leaves and engines instead of fetching leaf by
         leaf — this is what makes a 64 KiB decode window cheap against a
         full-session restore."""
-        if man is None:
-            man = self.manifest(session)
+        man = self._hot_manifest(session, man)
         out: dict = {}
         pending: list = []
         for path in sorted(man["leaves"]):
@@ -367,6 +370,119 @@ class KVCacheStore:
         for path, ev in pending:
             out[path] = np.asarray(ev.wait())
         return out
+
+    # ------------- tiering (demote / promote) -------------
+    def _require_tiered(self, verb: str) -> None:
+        if not getattr(self.iface, "tier_aware", False):
+            raise KVStoreError(
+                f"cannot {verb}: mount {type(self.iface).__name__} has no "
+                "cold tier (use a tiered:// mount)")
+
+    def tier(self, session: str) -> str:
+        """Which tier holds a session's leaves: ``hot`` or ``cold``
+        (manifest-recorded; pre-tiering manifests are hot)."""
+        return str(self.manifest(session).get("tier", "hot"))
+
+    def _hot_manifest(self, session: str, man: dict | None) -> dict:
+        """The restore paths' entry hook: promote a demoted session before
+        touching its leaves, and return a manifest whose ``file`` entries
+        are live on the hot tier."""
+        if man is None:
+            man = self.manifest(session)
+        if man.get("tier", "hot") == "cold":
+            return self.promote(session)
+        return man
+
+    def demote(self, session: str, _fail_after: int | None = None) -> dict:
+        """Move one session's leaves to the cold tier.
+
+        Ordering is the T3 contract: leaf bytes are *copied* cold first
+        (the cold store is non-transactional), then the manifest's
+        ``tier`` field and the session-index record flip inside one epoch
+        tx, and the hot copies are unlinked only after the commit
+        barrier.  A crash anywhere before the commit leaves the manifest
+        pointing hot with every hot leaf intact — a torn demotion wastes
+        some cold capacity, it never strands the only copy.
+
+        ``_fail_after=N`` is the fault hook the conformance test uses:
+        raise after ``N`` leaf copies, before the manifest flip."""
+        self._require_tiered("demote session")
+        man = self.manifest(session)
+        if man.get("tier", "hot") == "cold":
+            return man
+        entries = man["leaves"]
+        copied = 0
+        for path in sorted(entries):
+            if _fail_after is not None and copied >= _fail_after:
+                raise KVStoreError(
+                    f"injected demotion fault after {copied} leaf copies")
+            e = entries[path]
+            self.iface.demote_file(e["file"], int(e["nbytes"]))
+            copied += 1
+        extra = {k: v for k, v in man.items() if k != "leaves"}
+        extra["tier"] = "cold"
+        manifest = S.manifest_dumps(entries, extra)
+        tx = self.dfs.cont.tx_begin()
+        try:
+            node0, proc0 = self.iface.place_writer(0)
+            kvb = self.iface.kv_batch(self._manifest_kv(session), tx=tx,
+                                      client_node=node0, process=proc0)
+            kvb.put("manifest", "json", manifest)
+            kvb.put(str(session), "meta",
+                    self._meta_record(man["step"], entries, tier="cold"),
+                    obj=self._sessions_kv())
+            tx.commit()
+        except BaseException:
+            tx.abort()
+            raise
+        # hot copies die only after the flip is visible
+        for path in sorted(entries):
+            self.iface.hot_unlink(entries[path]["file"])
+        self.iface.hot_unlink(self._sess_dir(session))
+        extra["leaves"] = entries
+        return extra
+
+    def promote(self, session: str) -> dict:
+        """Pull one demoted session back to the hot tier.
+
+        The mirror of :meth:`demote`: hot leaf writes stage under the
+        same epoch tx as the manifest flip (the commit barrier drains
+        the async queues before the ``tier`` field turns hot), and the
+        cold copies are unlinked only post-commit — an aborted promotion
+        leaves the cold copy the (only, intact) source of truth."""
+        self._require_tiered("promote session")
+        man = self.manifest(session)
+        if man.get("tier", "hot") != "cold":
+            return man
+        entries = man["leaves"]
+        try:
+            self.iface.mkdir(self._sess_dir(session))
+        except Exception:
+            pass
+        extra = {k: v for k, v in man.items() if k != "leaves"}
+        extra["tier"] = "hot"
+        manifest = S.manifest_dumps(entries, extra)
+        tx = self.dfs.cont.tx_begin()
+        try:
+            for path in sorted(entries):
+                e = entries[path]
+                self.iface.promote_file(e["file"], int(e["nbytes"]),
+                                        oclass=self.oclass, tx=tx)
+            node0, proc0 = self.iface.place_writer(0)
+            kvb = self.iface.kv_batch(self._manifest_kv(session), tx=tx,
+                                      client_node=node0, process=proc0)
+            kvb.put("manifest", "json", manifest)
+            kvb.put(str(session), "meta",
+                    self._meta_record(man["step"], entries, tier="hot"),
+                    obj=self._sessions_kv())
+            tx.commit()
+        except BaseException:
+            tx.abort()
+            raise
+        for path in sorted(entries):
+            self.iface.cold_unlink(entries[path]["file"])
+        extra["leaves"] = entries
+        return extra
 
     # ------------- lifecycle (gc) -------------
     def evict(self, session: str) -> None:

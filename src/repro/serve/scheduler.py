@@ -71,10 +71,23 @@ class ServeScheduler:
                  max_active: int = 8,
                  node_cache_bytes: int = 1 << 30,
                  quota_bytes: int | None = None,
-                 speculate_window: int = 0) -> None:
+                 speculate_window: int = 0,
+                 demote_on_evict: bool | None = None) -> None:
         if not nodes:
             raise SchedulerError("a fleet needs at least one decode node")
         self.store = store
+        # demote-instead-of-delete eviction: on a tiered mount, quota
+        # pressure spills LRU victims to the cold tier (restorable, off
+        # the hot budget) instead of destroying them.  None = autodetect
+        # from the mount; asking for it without a cold tier is an error,
+        # not a silent fallback to delete.
+        tiered = getattr(store.iface, "tier_aware", False)
+        if demote_on_evict and not tiered:
+            raise SchedulerError(
+                "demote_on_evict requires a tiered:// store mount: "
+                f"{type(store.iface).__name__} has no cold tier")
+        self.demote_on_evict = tiered if demote_on_evict is None \
+            else bool(demote_on_evict)
         self.max_active = max(1, int(max_active))
         self.node_cache_bytes = int(node_cache_bytes)
         self.quota_bytes = None if quota_bytes is None else int(quota_bytes)
@@ -98,10 +111,16 @@ class ServeScheduler:
         # live store adopts its population
         self._lru: OrderedDict = OrderedDict()
         self._size: dict[str, int] = {}
+        # sessions demoted to the cold tier: off the hot quota, out of the
+        # LRU, promoted back through ``ensure_hot`` when a request returns
+        self._cold_size: dict[str, int] = {}
         self._decisions = 0
         self._failovers = 0
         self._evictions = 0
         self._evicted_bytes = 0
+        self._demotions = 0
+        self._demoted_bytes = 0
+        self._promotions = 0
         self._index_reads = 0
         for s in store.sessions():
             try:
@@ -109,6 +128,9 @@ class ServeScheduler:
                 self._index_reads += 1
             except KVStoreError:
                 continue            # torn record with no manifest: skip
+            if meta.get("tier", "hot") == "cold":
+                self._cold_size[s] = int(meta["nbytes"])
+                continue
             self._size[s] = int(meta["nbytes"])
             self._lru[s] = True
 
@@ -160,6 +182,11 @@ class ServeScheduler:
         failures never fail the routing decision."""
         if self.speculate_window <= 0:
             return
+        if meta.get("tier", "hot") == "cold":
+            # a background prefetch would trigger the transparent
+            # promotion inside a background phase — tier movement is
+            # foreground work, admitted through ensure_hot
+            return
         ns = self._nodes.get(int(node))
         if ns is None or not ns.alive:
             return          # never warm a node marked down mid-route
@@ -191,7 +218,10 @@ class ServeScheduler:
 
     def begin(self, session: str, node: int | None = None) -> int:
         """Admit one restore: route (unless the caller pins ``node``) and
-        claim a slot on the target."""
+        claim a slot on the target.  A demoted session is promoted back
+        to the hot tier first (quota room is reserved for it — possibly
+        demoting colder victims in turn)."""
+        self.ensure_hot(session)
         n = self.route(session) if node is None else int(node)
         ns = self._nodes[n]
         if not ns.alive:
@@ -234,10 +264,13 @@ class ServeScheduler:
 
     def reserve(self, session: str, nbytes: int) -> list[str]:
         """Admission control: make room for ``nbytes`` of session payload
-        under the quota by evicting store-LRU victims (never the incoming
-        session itself — a republish reuses its own slot).  Returns the
-        evicted session ids; raises if the session cannot fit even into an
-        empty store."""
+        under the quota by displacing store-LRU victims (never the
+        incoming session itself — a republish reuses its own slot).  On a
+        tiered mount with ``demote_on_evict`` victims *demote* to the
+        cold tier — quota pressure spills restorable state cold instead
+        of destroying it; otherwise they are evicted outright.  Returns
+        the displaced session ids; raises if the session cannot fit even
+        into an empty store."""
         if self.quota_bytes is None:
             return []
         if int(nbytes) > self.quota_bytes:
@@ -247,16 +280,19 @@ class ServeScheduler:
                 f"session {session!r} ({int(nbytes)} B) cannot fit the "
                 f"store quota ({self.quota_bytes} B)")
         grow = int(nbytes) - self._size.get(session, 0)
-        evicted: list[str] = []
+        displaced: list[str] = []
         while self.store_bytes + grow > self.quota_bytes:
             victim = next((s for s in self._lru if s != session), None)
             if victim is None:
                 raise SchedulerError(
                     f"session {session!r} ({int(nbytes)} B) cannot fit the "
                     f"store quota ({self.quota_bytes} B)")
-            self.evict(victim)
-            evicted.append(victim)
-        return evicted
+            if self.demote_on_evict:
+                self.demote(victim)
+            else:
+                self.evict(victim)
+            displaced.append(victim)
+        return displaced
 
     def evict(self, session: str) -> None:
         """Drop one session from the store — through the real pipeline
@@ -264,9 +300,41 @@ class ServeScheduler:
         up in whatever phase runs it — and from every routing book."""
         self.store.evict(session)
         self._evicted_bytes += self._size.pop(session, 0)
+        self._cold_size.pop(session, None)
         self._lru.pop(session, None)
         self._drop_resident(session)
         self._evictions += 1
+
+    def demote(self, session: str) -> None:
+        """Spill one session to the cold tier — through the store's
+        demotion path (cold copy, manifest flip in-tx, hot unlink after
+        commit), then off the hot books: it stops counting against the
+        quota and holds no residency anywhere, but stays restorable."""
+        nbytes = self._size.get(session, 0) or self._cold_size.get(session, 0)
+        self.store.demote(session)
+        self._size.pop(session, None)
+        self._cold_size[session] = nbytes
+        self._lru.pop(session, None)
+        self._drop_resident(session)
+        self._demotions += 1
+        self._demoted_bytes += nbytes
+
+    def ensure_hot(self, session: str) -> list[str]:
+        """Promote a demoted session back under the quota: reserve room
+        (possibly demoting colder victims in turn), pull the leaves hot
+        through the store, and book it as the warmest LRU entry.  A
+        session already hot is a no-op.  Returns the displaced ids."""
+        nbytes = self._cold_size.get(session)
+        if nbytes is None:
+            return []
+        displaced = self.reserve(session, nbytes)
+        self.store.promote(session)
+        self._cold_size.pop(session, None)
+        self._size[session] = nbytes
+        self._lru[session] = True
+        self._lru.move_to_end(session)
+        self._promotions += 1
+        return displaced
 
     def offload(self, session: str, cache, step: int = 0,
                 extra_meta: dict | None = None) -> list[str]:
@@ -278,6 +346,7 @@ class ServeScheduler:
         evicted = self.reserve(session, nbytes)
         self.store.offload(session, cache, step=step, extra_meta=extra_meta)
         self._size[session] = nbytes
+        self._cold_size.pop(session, None)      # a republish lands hot
         self._lru[session] = True
         self._lru.move_to_end(session)
         self._drop_resident(session)
@@ -317,6 +386,11 @@ class ServeScheduler:
                 "spec_bytes": self._spec_bytes,
                 "evictions": self._evictions,
                 "evicted_bytes": self._evicted_bytes,
+                "demotions": self._demotions,
+                "demoted_bytes": self._demoted_bytes,
+                "promotions": self._promotions,
+                "cold_sessions": len(self._cold_size),
+                "cold_bytes": sum(self._cold_size.values()),
                 "index_reads": self._index_reads,
                 "sessions": len(self._lru),
                 "store_bytes": self.store_bytes,

@@ -81,7 +81,8 @@ def _seed_save(dfs, iface, oclass, layout, n_writers, base, step, tree):
     # manifest's size
     manifest = S.manifest_dumps(entries, {"step": step, "layout": layout,
                                           "oclass": oclass,
-                                          "n_writers": n_writers})
+                                          "n_writers": n_writers,
+                                          "tier": "hot"})
     mobj = cont.open_kv(f"manifest:{sdir}", oclass="RP_3GX")
     # manifests are native libdaos KV objects, reached directly rather than
     # through the data mount, so the metadata plane charges them at the

@@ -655,3 +655,60 @@ def test_elastic_restore_after_node_failure():
     # and a full restore on the degraded pool is still byte-exact
     full = ck.restore(1, tree)
     np.testing.assert_array_equal(full["w"], tree["w"])
+
+
+# ------------------------------------------------ wide-layout rebuild ----
+def test_wide_rebuild_never_collides_with_surviving_replica_holder():
+    """RP_*GX regression: the layout already spans every engine, so the
+    rebuilder's strict not-in-layout candidate tier is empty and the
+    replacement must come from engines the layout touches.  The old
+    fallback hashed over ALL live engines — including the one holding the
+    surviving replica of the dead target's own cells, which co-locates
+    both copies of those cells: the next single failure becomes data
+    loss.  The fix excludes the dead target's column co-holders."""
+    pool = _pool()                       # 8 engines: RP_2GX spans them all
+    cont = pool.create_container("wide", oclass="RP_2GX",
+                                 stripe_cell=1 << 16)
+    objs = []
+    for k in range(24):                  # many oids: exercise many hashes
+        obj = cont.open_array(f"w{k}", oclass="RP_2GX")
+        obj.write(0, np.full(3 << 16, k, np.uint8).tobytes())
+        objs.append(obj)
+    dead = objs[0]._layout().targets[0]
+    pool.fail_engine(dead)
+    pool.rebuild()
+    for obj in objs:
+        lay = obj._layout()
+        n_cells = -(-obj.size // obj.stripe_cell)
+        for cn in range(n_cells):
+            reps = lay.replicas_for_chunk(cn)
+            assert dead not in reps
+            assert len(set(reps)) == len(reps), (
+                f"oid {obj.oid:#x} chunk {cn}: replacement landed on a "
+                f"surviving replica holder ({reps})")
+    # and the data is still byte-exact through the rebuilt placement
+    for k, obj in enumerate(objs):
+        np.testing.assert_array_equal(obj.read(0, 3 << 16),
+                                      np.full(3 << 16, k, np.uint8))
+
+
+def test_replacement_for_prefers_untouched_then_non_co_holders():
+    """Unit view of the same contract: with free engines available the
+    replacement avoids the layout entirely; when the layout spans all
+    engines it avoids the dead target's co-holders; only when survivors
+    can't avoid overlap does it fall back to any live engine."""
+    pool = _pool()                       # engines 0..7
+    alive = set(pool.live_engine_ids())
+    # (1) strict tier: anything outside `taken` wins
+    repl = pool._replacement_for(0x1234, 0, {0, 1, 2, 3})
+    assert repl in alive - {0, 1, 2, 3}
+    # (2) wide tier: layout takes everything; co-holders are barred
+    pool.fail_engine(0)
+    taken = set(pool.all_engine_ids())
+    for oid in range(64):
+        repl = pool._replacement_for(oid, 0, taken, co_holders={4})
+        assert repl not in (0, 4)
+    # (3) last resort: every survivor co-holds -> still returns a live one
+    repl = pool._replacement_for(7, 0, taken,
+                                 co_holders=set(pool.live_engine_ids()))
+    assert repl in pool.live_engine_ids()

@@ -280,7 +280,7 @@ def test_session_meta_is_index_only_when_fresh(world, monkeypatch):
     man = store.manifest("s")
     want = {"step": 4,
             "nbytes": sum(int(e["nbytes"]) for e in man["leaves"].values()),
-            "n_leaves": len(man["leaves"])}
+            "n_leaves": len(man["leaves"]), "tier": "hot"}
     # a fresh index record answers alone — no manifest walk
     monkeypatch.setattr(
         store, "manifest",

@@ -1,0 +1,447 @@
+"""The tiered store: scheme-routed mounts (daos:// | cold:// | tiered://),
+the cold object backend, and demote/promote through the checkpoint and
+serving planes.
+
+Covers the negative paths of the mount grammar (unknown schemes, tier
+options on the wrong mounts, duplicate registration), the cold backend's
+byte identity and cost surface, the T3 demotion-atomicity contract
+(byte-identical round trips on namespaced and namespace-less mounts,
+torn demotions never stranding the only copy), and the store layers'
+tiering hooks (scheduler demote-on-evict, keep_n demotion)."""
+import numpy as np
+import pytest
+
+from repro.core import Pool, Topology
+from repro.core.interfaces import (DFS, ColdObjectInterface, ColdStore,
+                                   TIER_OPTION_KEYS, TieredInterface,
+                                   make_interface, parse_tiered_spec,
+                                   register_scheme, registered_schemes,
+                                   resolve, scheme_spec, split_mount)
+from repro.ckpt import Checkpointer, CheckpointError, CheckpointManager
+from repro.serve import (KVCacheStore, KVStoreError, SchedulerError,
+                         ServeScheduler)
+
+
+@pytest.fixture()
+def world():
+    pool = Pool(Topology(), materialize=True)
+    cont = pool.create_container("c", oclass="S2")
+    dfs = DFS(cont)
+    dfs.mkdir("/d")
+    return pool, dfs
+
+
+def _tree(n_leaves=4, leaf_kib=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"layer{i:03d}": rng.integers(0, 255, (leaf_kib << 10,),
+                                          dtype=np.uint8)
+            for i in range(n_leaves)}
+
+
+def _check_tree(want, got):
+    for k, v in want.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v)
+
+
+# ------------------------------------------------- registry / grammar --
+def test_unknown_scheme_raises(world):
+    _pool, dfs = world
+    with pytest.raises(ValueError, match="unknown mount scheme 's3'"):
+        make_interface("s3://bucket/prefix", dfs)
+
+
+def test_unknown_daos_name_still_raises(world):
+    _pool, dfs = world
+    with pytest.raises(KeyError):
+        make_interface("daos://no-such-interface", dfs)
+
+
+def test_bare_names_route_to_daos_scheme(world):
+    _pool, dfs = world
+    assert split_mount("dfs") == ("daos", "dfs")
+    bare = make_interface("posix-cached:timeout=1.0", dfs)
+    schemed = make_interface("daos://posix-cached:timeout=1.0", dfs)
+    assert type(bare) is type(schemed)
+    assert bare.cache_mode == schemed.cache_mode
+
+
+def test_builtin_schemes_registered():
+    assert {"daos", "cold", "tiered"} <= set(registered_schemes())
+    assert scheme_spec("tiered") is not None
+    assert scheme_spec("nope") is None
+
+
+def test_duplicate_scheme_registration_refused():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheme("daos", lambda rest, dfs: None)
+    with pytest.raises(ValueError, match="bare identifier"):
+        register_scheme("no/slashes", lambda rest, dfs: None)
+
+
+@pytest.mark.parametrize("mount", [
+    "dfs:hot=dfs",
+    "posix:cold=cold",
+    "posix-cached:timeout=1.0,policy=lru",
+])
+def test_tier_options_rejected_on_plain_mounts(world, mount):
+    """hot=/cold=/policy= configure the tiering layer; on a mount with no
+    second tier they must fail pointedly, not as a generic option."""
+    _pool, dfs = world
+    with pytest.raises(ValueError, match="tiered://"):
+        make_interface(mount, dfs)
+    assert TIER_OPTION_KEYS == {"hot", "cold", "policy"}
+
+
+def test_parse_tiered_spec_grammar():
+    spec = parse_tiered_spec("hot=dfs,cold=cold,policy=lru")
+    assert spec == {"hot": "dfs", "cold": "cold", "policy": "lru"}
+    # nested mount options ride as continuation segments, unquoted
+    spec = parse_tiered_spec(
+        "hot=posix-cached:timeout=1.0,readahead=4,cold=cold")
+    assert spec["hot"] == "posix-cached:timeout=1.0,readahead=4"
+    assert spec["cold"] == "cold"
+    # defaults
+    assert parse_tiered_spec("hot=dfs")["cold"] == "cold"
+    assert parse_tiered_spec("hot=dfs")["policy"] == "lru"
+
+
+@pytest.mark.parametrize("rest,msg", [
+    ("cold=cold", "requires hot="),
+    ("hot=dfs,hot=posix", "duplicate tier option"),
+    ("hot=dfs,policy=mru", "known policies"),
+    ("dfs", "expected hot=/cold=/policy="),
+])
+def test_parse_tiered_spec_negative(rest, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_tiered_spec(rest)
+
+
+def test_tiered_tier_validation(world):
+    _pool, dfs = world
+    # the cold tier must be an object-store backend, not a second namespace
+    with pytest.raises(ValueError, match="cold tier must be"):
+        make_interface("tiered://hot=dfs,cold=posix", dfs)
+    # tiered mounts do not nest
+    hot = make_interface("tiered://hot=dfs,cold=cold", dfs)
+    cold = make_interface("cold", dfs)
+    with pytest.raises(ValueError, match="do not nest"):
+        TieredInterface(hot, cold)
+
+
+def test_tiered_mount_resolves_and_delegates(world):
+    _pool, dfs = world
+    iface = resolve("tiered://hot=dfs,cold=cold,policy=lru", dfs)
+    assert isinstance(iface, TieredInterface)
+    assert iface.tier_aware and iface.has_namespace
+    assert isinstance(iface.cold, ColdObjectInterface)
+    # the mount is byte-for-byte its hot self until something demotes
+    payload = (np.arange(100_003) % 251).astype(np.uint8)
+    h = iface.create("/d/x", client_node=1)
+    h.write_at(0, payload)
+    np.testing.assert_array_equal(h.read_at(0, payload.size), payload)
+    assert iface.stat("/d/x")["size"] >= payload.size
+    assert "x" in iface.readdir("/d")
+
+
+def test_tiered_delegates_the_full_hot_surface(world):
+    """The wrapper owns no cache/qd state: every AccessInterface hook is
+    the hot tier's (here a cached mount whose options ride the tiered
+    spec as continuation segments)."""
+    _pool, dfs = world
+    iface = make_interface(
+        "tiered://hot=posix-cached:timeout=1.0,readahead=4,cold=cold", dfs)
+    assert iface.cache_mode == iface.hot.cache_mode != "none"
+    assert iface.profile is iface.hot.profile
+    assert iface.qd == iface.hot.qd
+    assert iface.exec_qd == iface.hot.exec_qd
+    iface.make_ctx(1, 0, 4096)
+    assert iface.cache_for(1) is iface.hot.cache_for(1)
+    assert iface.cache_stats() == iface.hot.cache_stats()
+    assert iface.coherence_stats() == iface.hot.coherence_stats()
+    iface.flush_caches()
+    iface.drop_caches()
+    st = iface.tier_stats()
+    assert st["policy"] == "lru" and "cold" in st
+
+
+def test_tiered_file_helpers_multipart_and_stat_fallback(world):
+    """The per-file movement helpers on a multipart-sized payload, plus
+    the read-side fallbacks for a path whose hot copy is gone."""
+    _pool, dfs = world
+    iface = make_interface("tiered://hot=dfs,cold=cold", dfs)
+    big = (np.arange(5 << 20) % 251).astype(np.uint8)
+    iface.create("/d/big", client_node=1).write_at(0, big)
+    n = iface.demote_file("/d/big")     # nbytes=None -> stat for the size
+    assert n == big.size and iface.in_cold("/d/big")
+    iface.hot_unlink("/d/big")          # copy first, unlink separately
+    st = iface.stat("/d/big")           # falls through to the cold tier
+    assert st == {"type": "object", "size": big.size, "tier": "cold"}
+    iface.promote_file("/d/big", big.size)
+    back = iface.open("/d/big", client_node=2).read_at(0, big.size)
+    np.testing.assert_array_equal(back, big)
+    iface.cold_unlink("/d/big")
+    assert not iface.in_cold("/d/big")
+    iface.hot_unlink("/nowhere")        # best-effort: missing tolerated
+    iface.cold_unlink("/nowhere")
+    with pytest.raises(FileNotFoundError):
+        iface.stat("/on/neither/tier")
+    with pytest.raises(FileNotFoundError):
+        iface.unlink("/on/neither/tier")
+    st = iface.tier_stats()
+    assert st["demotions"] >= 1 and st["promotions"] >= 1
+    assert st["demoted_bytes"] >= big.size
+    assert st["promoted_bytes"] >= big.size
+
+
+# ------------------------------------------------------- cold backend --
+def test_cold_roundtrip_byte_identity(world):
+    pool, dfs = world
+    iface = make_interface("cold://", dfs)
+    assert isinstance(iface, ColdObjectInterface)
+    assert not iface.has_namespace and iface.tier_role == "cold"
+    for nbytes in (4096, (6 << 20) + 17):   # small + multipart-sized
+        payload = (np.arange(nbytes) % 251).astype(np.uint8)
+        h = iface.create(f"/cold/{nbytes}", client_node=1)
+        h.write_at(0, payload)
+        np.testing.assert_array_equal(h.read_at(0, nbytes), payload)
+    store = ColdStore.for_pool(pool)
+    assert store.puts >= 2 and store.gets >= 2
+    assert store.used_bytes >= (6 << 20)
+
+
+def test_cold_namespace_surface(world):
+    _pool, dfs = world
+    iface = make_interface("cold", dfs)     # bare name routes here too
+    with pytest.raises(FileNotFoundError):
+        iface.stat("/cold/missing")
+    with pytest.raises(FileNotFoundError):
+        iface.unlink("/cold/missing")
+    iface.create("/p/a").write_at(0, b"xx")
+    iface.create("/p/b/c").write_at(0, b"yyy")
+    assert iface.stat("/p/a") == {"type": "object", "size": 2}
+    assert sorted(iface.readdir("/p")) == ["a", "b/c"]
+    iface.unlink("/p/a")
+    assert iface.readdir("/p") == ["b/c"]
+
+
+def test_cold_rejects_tx_and_caching(world):
+    pool, dfs = world
+    iface = make_interface("cold", dfs)
+    tx = dfs.cont.tx_begin()
+    try:
+        with pytest.raises(ValueError, match="not transactional"):
+            iface.create("/cold/t", tx=tx)
+        with pytest.raises(ValueError, match="not transactional"):
+            iface.open("/cold/t", tx=tx)
+    finally:
+        tx.abort()
+    with pytest.raises(ValueError, match="cache"):
+        ColdObjectInterface(dfs, cache_mode="writeback")
+
+
+def test_cold_costs_dominated_by_request_latency(world):
+    """The S3-like cost surface: a cold access pays the request TTFB, so
+    the same payload is far slower than the hot fabric."""
+    pool, dfs = world
+    payload = np.zeros(1 << 20, dtype=np.uint8)
+    cold = make_interface("cold", dfs)
+    hot = make_interface("dfs", dfs)
+    with pool.sim.phase() as cp:
+        cold.create("/c/one", client_node=1).write_at(0, payload)
+    with pool.sim.phase() as hp:
+        hot.create("/d/one", client_node=1).write_at(0, payload)
+    assert cp.elapsed >= 10e-3              # >= one cold request TTFB
+    assert cp.elapsed > 3 * hp.elapsed
+
+
+# ------------------------------------- serve store: demote / promote --
+def _tiered_store(dfs):
+    iface = make_interface("tiered://hot=dfs,cold=cold", dfs)
+    return KVCacheStore(dfs, interface=iface, n_writers=2), iface
+
+
+def test_kvstore_demote_promote_roundtrip(world):
+    pool, dfs = world
+    store, iface = _tiered_store(dfs)
+    cache = _tree(seed=3)
+    store.offload("s0", cache, step=4)
+    assert store.tier("s0") == "hot"
+    man = store.manifest("s0")
+    files = [e["file"] for e in man["leaves"].values()]
+    store.demote("s0")
+    assert store.tier("s0") == "cold"
+    assert store.session_meta("s0")["tier"] == "cold"
+    assert all(iface.in_cold(f) for f in files)
+    for f in files:                         # hot copies really gone
+        with pytest.raises((FileNotFoundError, KeyError)):
+            iface.hot.stat(f)
+    assert iface.demotions >= len(files)
+    # restore transparently promotes: bytes identical, tier flips back,
+    # cold copies reclaimed
+    back = store.restore("s0")
+    _check_tree(cache, back)
+    assert store.tier("s0") == "hot"
+    assert store.session_meta("s0")["tier"] == "hot"
+    assert not any(iface.in_cold(f) for f in files)
+    assert store.session_meta("s0")["step"] == 4
+
+
+def test_kvstore_torn_demotion_never_strands(world):
+    pool, dfs = world
+    store, iface = _tiered_store(dfs)
+    cache = _tree(seed=5)
+    store.offload("s0", cache, step=0)
+    with pytest.raises(KVStoreError, match="injected demotion fault"):
+        store.demote("s0", _fail_after=1)
+    # the manifest never flipped: the session is still hot + restorable
+    assert store.tier("s0") == "hot"
+    _check_tree(cache, store.restore("s0"))
+    # and the retry converges over the partial cold copy
+    store.demote("s0")
+    assert store.tier("s0") == "cold"
+    _check_tree(cache, store.restore("s0"))
+
+
+def test_kvstore_demote_requires_tiered_mount(world):
+    _pool, dfs = world
+    store = KVCacheStore(dfs, interface="dfs")
+    store.offload("s0", _tree(), step=0)
+    with pytest.raises(KVStoreError, match="tiered://"):
+        store.demote("s0")
+    with pytest.raises(KVStoreError, match="tiered://"):
+        store.promote("s0")
+
+
+# --------------------------------------------- scheduler: tiered LRU --
+def test_scheduler_demote_on_evict_requires_tiered(world):
+    _pool, dfs = world
+    store = KVCacheStore(dfs, interface="dfs")
+    with pytest.raises(SchedulerError, match="tiered://"):
+        ServeScheduler(store, nodes=[1], demote_on_evict=True)
+
+
+def test_scheduler_demotes_instead_of_deleting(world):
+    pool, dfs = world
+    store, iface = _tiered_store(dfs)
+    trees = {f"s{i}": _tree(seed=i) for i in range(3)}
+    nbytes = sum(v.nbytes for v in trees["s0"].values())
+    sched = ServeScheduler(store, nodes=[1, 2],
+                           quota_bytes=2 * nbytes)
+    assert sched.demote_on_evict          # autodetected from the mount
+    for s, tree in trees.items():
+        sched.offload(s, tree, step=0)
+    st = sched.stats()
+    assert st["demotions"] == 1 and st["evictions"] == 0
+    assert st["cold_sessions"] == 1 and st["sessions"] == 2
+    assert sched.store_bytes <= 2 * nbytes
+    assert store.tier("s0") == "cold"     # LRU victim spilled, not lost
+    # a returning cold session promotes under the quota, demoting the
+    # (now) coldest hot session in turn
+    node = sched.begin("s0")
+    _check_tree(trees["s0"], store.restore("s0", client_node=node))
+    sched.end("s0", node, nbytes=nbytes)
+    st = sched.stats()
+    assert st["promotions"] == 1 and st["demotions"] == 2
+    assert store.tier("s0") == "hot" and store.tier("s1") == "cold"
+    assert sched.store_bytes <= 2 * nbytes
+
+
+def test_scheduler_seeds_cold_sessions_from_index(world):
+    pool, dfs = world
+    store, _iface = _tiered_store(dfs)
+    store.offload("a", _tree(seed=1), step=0)
+    store.offload("b", _tree(seed=2), step=0)
+    store.demote("a")
+    sched = ServeScheduler(store, nodes=[1])    # attach to the live store
+    st = sched.stats()
+    assert st["cold_sessions"] == 1 and st["sessions"] == 1
+    assert "a" not in sched.lru_sessions()
+    node = sched.begin("a")                     # returning -> promoted
+    assert store.tier("a") == "hot"
+    sched.end("a", node)
+    assert sched.stats()["promotions"] == 1
+
+
+# -------------------------------------- checkpoints: demote / promote --
+@pytest.mark.parametrize("family", ["dfs", "daos-array"])
+@pytest.mark.parametrize("layout", ["sharded", "shared"])
+def test_ckpt_demote_promote_roundtrip(world, family, layout):
+    """T3 in test form: byte-identical round trips on namespaced (dfs)
+    and namespace-less (daos-array) hot tiers, both layouts."""
+    pool, dfs = world
+    iface = make_interface(f"tiered://hot={family},cold=cold", dfs)
+    ck = Checkpointer(dfs, interface=iface, layout=layout, n_writers=2)
+    tree = _tree(n_leaves=3, leaf_kib=96, seed=11)
+    ck.save(0, tree)
+    files = sorted(ck._step_files(ck.load_manifest(0)))
+    ck.demote_step(0)
+    assert ck.step_tier(0) == "cold"
+    assert all(iface.in_cold(f) for f in files)
+    assert 0 in ck.list_steps()         # a demoted step stays discoverable
+    back = ck.restore(0, tree)          # transparent promotion
+    _check_tree(tree, back)
+    assert ck.step_tier(0) == "hot"
+    assert not any(iface.in_cold(f) for f in files)
+    # demoting twice is idempotent; deleting a demoted step reclaims cold
+    ck.demote_step(0)
+    ck.demote_step(0)
+    ck.delete_step(0)
+    assert 0 not in ck.list_steps()
+
+
+def test_ckpt_torn_demotion_conformance(world):
+    pool, dfs = world
+    iface = make_interface("tiered://hot=dfs,cold=cold", dfs)
+    ck = Checkpointer(dfs, interface=iface, layout="sharded", n_writers=2)
+    tree = _tree(n_leaves=4, leaf_kib=64, seed=13)
+    ck.save(0, tree)
+    with pytest.raises(CheckpointError, match="injected demotion fault"):
+        ck.demote_step(0, _fail_after=1)
+    assert ck.step_tier(0) == "hot"     # flip never happened
+    _check_tree(tree, ck.restore(0, tree))
+    ck.demote_step(0)                   # the retry converges
+    assert ck.step_tier(0) == "cold"
+    _check_tree(tree, ck.restore(0, tree))
+
+
+def test_ckpt_demote_requires_tiered_mount(world):
+    _pool, dfs = world
+    ck = Checkpointer(dfs, interface="dfs")
+    ck.save(0, _tree(n_leaves=2))
+    with pytest.raises(CheckpointError, match="tiered://"):
+        ck.demote_step(0)
+    with pytest.raises(CheckpointError, match="tiered://"):
+        ck.promote_step(0)
+
+
+def test_manager_keep_n_demotes_and_reaches_back(world):
+    pool, dfs = world
+    iface = make_interface("tiered://hot=dfs,cold=cold", dfs)
+    ck = Checkpointer(dfs, interface=iface, layout="shared", n_writers=2)
+    mgr = CheckpointManager(ck, save_every=1, keep_n=2)
+    assert mgr.demote_old               # autodetected from the mount
+    trees = {}
+    for step in range(5):
+        trees[step] = _tree(n_leaves=2, leaf_kib=64, seed=step)
+        mgr.maybe_save(step, trees[step], async_=False)
+    mgr.drain()
+    assert mgr.demoted_steps == [0, 1, 2]
+    assert mgr.saved_steps == [3, 4]
+    for old in mgr.demoted_steps:
+        assert ck.step_tier(old) == "cold"
+    # the hot window restores hot; an elastic reach-back past it promotes
+    assert ck.step_tier(4) == "hot"
+    step, back = mgr.restore_latest(trees[4], pool=pool)
+    assert step == 4
+    _check_tree(trees[4], back)
+    _check_tree(trees[1], ck.restore(1, trees[1]))
+    assert ck.step_tier(1) == "hot"
+
+
+def test_manager_demote_old_requires_tiered_mount(world):
+    _pool, dfs = world
+    ck = Checkpointer(dfs, interface="dfs")
+    with pytest.raises(CheckpointError, match="tiered://"):
+        CheckpointManager(ck, demote_old=True)
+    # plain mount defaults to delete, not demote
+    assert not CheckpointManager(ck).demote_old
